@@ -1,0 +1,126 @@
+"""Shared benchmark harness: scenario construction, base-model pretraining,
+accuracy evaluation, timing.
+
+Scale note: the paper runs LLaMA2-7B on GPU clusters; offline we reproduce
+the *algorithmic* claims with a reduced transformer on synthetic versions of
+both scenarios (DESIGN.md §6). Every benchmark prints CSV rows
+``name,us_per_call,derived`` — `derived` carries the paper-table metric
+(accuracy, bytes, ...).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.lora import lora_scale
+from repro.data.partition import dirichlet_partition, train_test_split
+from repro.data.pipeline import SFTBatcher
+from repro.data.synthetic import (answer_accuracy, gen_log_dataset,
+                                  gen_medical_dataset, gen_pretrain_text)
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.api import get_model
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optimizers import adamw
+from repro.training.train_step import make_full_train_step
+
+MAX_LEN = 160
+FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+
+BENCH_CFG = ModelConfig(
+    name="bench-llm", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab_size=300, max_seq_len=MAX_LEN,
+    lora_rank=8, remat=False, param_dtype="float32", dtype="float32")
+
+_CACHE: Dict[str, object] = {}
+
+
+def tokenizer() -> ByteTokenizer:
+    return ByteTokenizer()
+
+
+def pretrained_base(cfg: ModelConfig = BENCH_CFG, steps: int = 300):
+    """'Basic knowledge': pretrain the tiny backbone on scenario-flavoured
+    text once, cache to disk. The paper's frozen LLM analog."""
+    key = f"base-{cfg.name}-{steps}"
+    if key in _CACHE:
+        return _CACHE[key]
+    path = os.path.join("experiments", "cache", key + ".npz")
+    model = get_model(cfg)
+    if os.path.exists(path + ".meta.json"):
+        params = load_checkpoint(path)
+        _CACHE[key] = params
+        return params
+    rng = np.random.default_rng(0)
+    tok = tokenizer()
+    # mixed corpus: generic text + unlabeled samples from both scenarios
+    texts = gen_pretrain_text(rng, 300)
+    pool = (gen_log_dataset(rng, 300, 0) + gen_log_dataset(rng, 300, 1)
+            + gen_log_dataset(rng, 300, 2)
+            + sum((gen_medical_dataset(rng, 120, t) for t in range(5)), []))
+    texts += [ex.prompt + ex.answer for ex in pool]
+    from repro.data.tokenizer import pad_batch
+    seqs = [tok.encode(t, add_eos=True) for t in texts]
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(lr=3e-3)
+    st = opt.init(params)
+    step = jax.jit(make_full_train_step(model, cfg, opt))
+    nb = max(1, steps)
+    bs = 16
+    for i in range(nb):
+        idx = rng.integers(0, len(seqs), size=bs)
+        toks, mask = pad_batch([seqs[j] for j in idx], MAX_LEN)
+        batch = {"tokens": jnp.asarray(toks), "loss_mask": jnp.asarray(mask)}
+        params, st, m = step(params, st, batch)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    save_checkpoint(path, params, {"loss": float(m["loss"])})
+    _CACHE[key] = params
+    return params
+
+
+def build_scenario(scenario: int, n_clients: int, alpha: float, seed: int = 0,
+                   n_per_source: int = 120):
+    """Returns (batchers, test_sets) per client under Dirichlet(α) non-IID."""
+    rng = np.random.default_rng(seed)
+    tok = tokenizer()
+    if scenario == 1:
+        data = sum((gen_log_dataset(rng, n_per_source, s) for s in range(3)), [])
+    else:
+        data = sum((gen_medical_dataset(rng, n_per_source, t) for t in range(5)), [])
+    parts = dirichlet_partition(data, n_clients, alpha, rng, min_per_client=10)
+    batchers, tests = [], []
+    for i, part in enumerate(parts):
+        tr, te = train_test_split(part, 0.2, rng)  # paper: 8:2 per client
+        batchers.append(SFTBatcher(tr, tok, MAX_LEN, batch_size=8,
+                                   seed=seed * 100 + i))
+        tests.append(te)
+    return batchers, tests
+
+
+def eval_clients(model, cfg, params, adapters_per_client, tests) -> float:
+    """Mean client accuracy (the paper's headline metric)."""
+    tok = tokenizer()
+    accs = []
+    for ad, te in zip(adapters_per_client, tests):
+        accs.append(answer_accuracy(model, cfg, params, ad, te, tok, MAX_LEN,
+                                    lora_scale(cfg)))
+    return float(np.mean(accs))
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """Returns (result, us_per_call)."""
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0] if jax.tree.leaves(out) else 0)
+    return out, (time.perf_counter() - t0) / repeats * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"

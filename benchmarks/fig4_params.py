@@ -1,0 +1,23 @@
+"""Paper Fig 4: trainable (LoRA) vs frozen (base) parameters — computed for
+the paper's backbone and every assigned architecture."""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.configs.registry import ALL_ARCHS, get_config
+
+
+def run() -> list:
+    rows = []
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        total = cfg.count_params()
+        lora = cfg.count_lora_params()
+        rows.append(C.row(
+            f"fig4/{arch}", 0.0,
+            f"total={total};lora={lora};pct={100.0 * lora / total:.4f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

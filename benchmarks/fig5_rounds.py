@@ -1,0 +1,38 @@
+"""Paper Fig 5: accuracy vs communication rounds T, for several client
+counts N (K fixed at 3)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+from repro.core.fdlora import FDLoRAConfig, FDLoRATrainer
+from repro.models.api import get_model
+
+
+def run() -> list:
+    cfg = C.BENCH_CFG
+    model = get_model(cfg)
+    params = C.pretrained_base(cfg)
+    rows = []
+    Ns = (3,) if C.FAST else (3, 5)
+    Ts = (1, 3) if C.FAST else (1, 2, 4, 8)
+    for N in Ns:
+        batchers, tests = C.build_scenario(1, n_clients=N, alpha=0.5, seed=5)
+        for T in Ts:
+            fed = FDLoRAConfig(n_clients=N, rounds=T, inner_steps=3,
+                               sync_every=max(T // 2, 1), stage1_steps=8,
+                               inner_lr=3e-3, fusion_steps=3, few_shot_k=8,
+                               seed=5)
+            tr = FDLoRATrainer(model, cfg, fed, params)
+            t0 = time.perf_counter()
+            clients = tr.fit(batchers)
+            us = (time.perf_counter() - t0) * 1e6
+            ads = [tr.fused_adapters(c) for c in clients]
+            acc = C.eval_clients(model, cfg, params, ads, tests)
+            rows.append(C.row(f"fig5/N{N}/T{T}", us, f"acc={acc:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

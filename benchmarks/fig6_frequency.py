@@ -1,0 +1,40 @@
+"""Paper Fig 6: communication frequency — inner steps K ∈ {1, 3, 5} at a
+fixed inner-step budget (T×K constant), scenario 1."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+from repro.core.fdlora import FDLoRAConfig, FDLoRATrainer
+from repro.models.api import get_model
+
+BUDGET = 18  # total inner steps per client in stage 2
+
+
+def run() -> list:
+    cfg = C.BENCH_CFG
+    model = get_model(cfg)
+    params = C.pretrained_base(cfg)
+    batchers, tests = C.build_scenario(1, n_clients=3, alpha=0.5, seed=11)
+    rows = []
+    for K in ((1, 5) if C.FAST else (1, 3, 5)):
+        T = max(BUDGET // K, 1)
+        fed = FDLoRAConfig(n_clients=3, rounds=T, inner_steps=K,
+                           sync_every=max(T // 2, 1), stage1_steps=8,
+                           inner_lr=3e-3, fusion_steps=3, few_shot_k=8,
+                           seed=11)
+        tr = FDLoRATrainer(model, cfg, fed, params)
+        t0 = time.perf_counter()
+        clients = tr.fit(batchers)
+        us = (time.perf_counter() - t0) * 1e6
+        ads = [tr.fused_adapters(c) for c in clients]
+        acc = C.eval_clients(model, cfg, params, ads, tests)
+        comm = clients[0].comm_bytes_up + clients[0].comm_bytes_down
+        rows.append(C.row(f"fig6/K{K}/T{T}", us,
+                          f"acc={acc:.3f};comm_bytes={comm:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,38 @@
+"""Paper Fig 7: asynchronous personalized-LoRA sync frequency
+H ∈ {1, 3, T, ∞} (H=∞ freezes the personalized LoRA after stage 1)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+from repro.core.fdlora import FDLoRAConfig, FDLoRATrainer
+from repro.models.api import get_model
+
+
+def run() -> list:
+    cfg = C.BENCH_CFG
+    model = get_model(cfg)
+    params = C.pretrained_base(cfg)
+    batchers, tests = C.build_scenario(1, n_clients=3, alpha=0.5, seed=13)
+    T = 3 if C.FAST else 6
+    rows = []
+    hs = {"1": 1, "3": 3, "T": T, "inf": 0}
+    if C.FAST:
+        hs = {"1": 1, "inf": 0}
+    for label, H in hs.items():
+        fed = FDLoRAConfig(n_clients=3, rounds=T, inner_steps=3,
+                           sync_every=H, stage1_steps=8, inner_lr=3e-3,
+                           fusion_steps=3, few_shot_k=8, seed=13)
+        tr = FDLoRATrainer(model, cfg, fed, params)
+        t0 = time.perf_counter()
+        clients = tr.fit(batchers)
+        us = (time.perf_counter() - t0) * 1e6
+        ads = [tr.fused_adapters(c) for c in clients]
+        acc = C.eval_clients(model, cfg, params, ads, tests)
+        rows.append(C.row(f"fig7/H{label}", us, f"acc={acc:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

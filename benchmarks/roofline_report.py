@@ -1,0 +1,62 @@
+"""Roofline report: renders the §Roofline table from the dry-run JSONs
+(experiments/dryrun/*.json). One CSV row per (arch × shape); also writes the
+markdown table consumed by EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common as C
+
+
+def load_results(out_dir="experiments/dryrun", mesh="16x16"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("skipped") or r.get("mesh") != mesh:
+            continue
+        if r.get("variant", "baseline") != "baseline":
+            continue
+        rows.append(r)
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | step | compute_s | memory_s | collective_s | "
+           "dominant | MODEL_FLOPS | useful | peak_GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        roof = r["roofline"]
+        peak = r["memory"].get("peak_bytes") or 0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} "
+            f"| {roof['compute_s']:.4f} | {roof['memory_s']:.4f} "
+            f"| {roof['collective_s']:.4f} | {roof['dominant']} "
+            f"| {roof['model_flops']:.3e} | {roof['useful_ratio']:.2f} "
+            f"| {peak / 2**30:.2f} |\n")
+    return "".join(out)
+
+
+def run() -> list:
+    rows = []
+    results = load_results()
+    for r in results:
+        roof = r["roofline"]
+        rows.append(C.row(
+            f"roofline/{r['arch']}/{r['shape']}", r["compile_s"] * 1e6,
+            f"dom={roof['dominant']};compute={roof['compute_s']:.4f}"
+            f";memory={roof['memory_s']:.4f}"
+            f";coll={roof['collective_s']:.4f}"
+            f";useful={roof['useful_ratio']:.2f}"))
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write(markdown_table(results))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

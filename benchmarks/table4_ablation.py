@@ -1,0 +1,46 @@
+"""Paper Table 4: 0-shot base vs standalone personalized vs standalone
+global vs fused FDLoRA."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+from repro.core.fdlora import FDLoRAConfig, FDLoRATrainer
+from repro.models.api import get_model
+
+
+def run() -> list:
+    cfg = C.BENCH_CFG
+    model = get_model(cfg)
+    params = C.pretrained_base(cfg)
+    rows = []
+    for scenario in (1,) if C.FAST else (1, 2):
+        batchers, tests = C.build_scenario(scenario, n_clients=3, alpha=0.5,
+                                           seed=17)
+        T = 3 if C.FAST else 6
+        fed = FDLoRAConfig(n_clients=3, rounds=T, inner_steps=3,
+                           sync_every=T, stage1_steps=10, inner_lr=3e-3,
+                           fusion_steps=4, few_shot_k=8, seed=17)
+        tr = FDLoRATrainer(model, cfg, fed, params)
+        t0 = time.perf_counter()
+        clients = tr.fit(batchers)
+        us = (time.perf_counter() - t0) * 1e6
+
+        acc0 = C.eval_clients(model, cfg, params, [None] * 3, tests)
+        accp = C.eval_clients(model, cfg, params,
+                              [c.personalized for c in clients], tests)
+        accg = C.eval_clients(model, cfg, params, [tr.theta_s] * 3, tests)
+        accf = C.eval_clients(model, cfg, params,
+                              [tr.fused_adapters(c) for c in clients], tests)
+        rows += [
+            C.row(f"table4/s{scenario}/zero_shot", us, f"acc={acc0:.3f}"),
+            C.row(f"table4/s{scenario}/personalized", us, f"acc={accp:.3f}"),
+            C.row(f"table4/s{scenario}/global", us, f"acc={accg:.3f}"),
+            C.row(f"table4/s{scenario}/fdlora_fused", us, f"acc={accf:.3f}"),
+        ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

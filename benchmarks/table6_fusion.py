@@ -1,0 +1,57 @@
+"""Paper Table 6 (RQ7): AdaFusion vs Random / Average / Sum fusion on the
+same trained dual-LoRA state."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import fusion as fusion_lib
+from repro.core.fdlora import FDLoRAConfig, FDLoRATrainer
+from repro.core.dual_lora import merge
+from repro.models.api import get_model
+
+
+def run() -> list:
+    cfg = C.BENCH_CFG
+    model = get_model(cfg)
+    params = C.pretrained_base(cfg)
+    rows = []
+    for alpha in ((0.5,) if C.FAST else (0.1, 0.5, 1.0)):
+        batchers, tests = C.build_scenario(1, n_clients=3, alpha=alpha, seed=19)
+        T = 3 if C.FAST else 6
+        fed = FDLoRAConfig(n_clients=3, rounds=T, inner_steps=3,
+                           sync_every=T, stage1_steps=10, inner_lr=3e-3,
+                           fusion_steps=4, few_shot_k=8, seed=19)
+        tr = FDLoRATrainer(model, cfg, fed, params)
+        clients = tr.stage1(batchers)
+        tr.stage2(clients, batchers)
+
+        for method in ("random", "average", "sum", "es"):
+            t0 = time.perf_counter()
+            ads = []
+            for i, c in enumerate(clients):
+                q = {k: jnp.asarray(v) for k, v in
+                     batchers[i].few_shot(fed.few_shot_k).items()}
+
+                def eval_loss(w):
+                    loss, _ = tr._fused_eval(params, c.personalized,
+                                             tr.theta_s, jnp.asarray(w), q)
+                    return float(loss)
+
+                w, _ = fusion_lib.adafusion(eval_loss, method=method,
+                                            steps=fed.fusion_steps,
+                                            lam=fed.fusion_l1, seed=19 + i)
+                ads.append(merge(c.personalized, tr.theta_s, jnp.asarray(w)))
+            us = (time.perf_counter() - t0) * 1e6
+            acc = C.eval_clients(model, cfg, params, ads, tests)
+            name = "adafusion" if method == "es" else method
+            rows.append(C.row(f"table6/a{alpha}/{name}", us, f"acc={acc:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

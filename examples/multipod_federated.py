@@ -1,0 +1,60 @@
+"""The multi-pod federated round on a real (local) mesh: runs one jitted
+FDLoRA round with clients stacked on a mesh axis and shows the collective
+schedule the compiler emitted — LoRA-sized cross-client traffic only.
+
+    PYTHONPATH=src python examples/multipod_federated.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.roofline import parse_collectives
+from repro.configs.base import ModelConfig
+from repro.core.lora import init_adapters
+from repro.core.outer_opt import make_outer_optimizer
+from repro.federated.distributed import make_fdlora_round_step
+from repro.models.api import get_model
+from repro.training.optimizers import adamw
+
+
+def main():
+    cfg = ModelConfig(name="mp-demo", family="dense", n_layers=2, d_model=128,
+                      n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=300,
+                      max_seq_len=64, lora_rank=8, remat=False,
+                      dtype="float32", param_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    inner = adamw(lr=1e-3)
+    outer = make_outer_optimizer("nesterov", lr=1e-3, momentum=0.5)
+    K, N, B, S = 3, 2, 4, 32
+    round_step = make_fdlora_round_step(model, cfg, inner, outer, K)
+
+    theta_s = init_adapters(jax.random.PRNGKey(1), cfg)
+    state = {"inner_opt": jax.tree.map(lambda x: jnp.stack([x] * N),
+                                       inner.init(theta_s)),
+             "outer_opt": outer.init(theta_s)}
+    batches = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(2), (N, K, B, S),
+                                     0, cfg.vocab_size),
+        "loss_mask": jnp.ones((N, K, B, S), jnp.int32),
+    }
+
+    jitted = jax.jit(round_step)
+    theta_new, state, loss = jitted(params, theta_s, state, batches)
+    print(f"one federated round: {N} clients x {K} inner steps, "
+          f"loss {float(loss):.3f}")
+
+    lowered = jitted.lower(params, theta_s, state, batches)
+    colls = parse_collectives(lowered.compile().as_text())
+    print(f"collectives in the compiled round: {len(colls)}")
+    adapter_bytes = sum(l.size * l.dtype.itemsize
+                        for l in jax.tree.leaves(theta_s))
+    print(f"adapter tree size: {adapter_bytes/2**20:.2f} MiB — on the "
+          f"production (2,16,16) mesh the ONLY cross-pod traffic is the "
+          f"outer pseudo-gradient mean of exactly this tree, once per "
+          f"{K}-step round (see EXPERIMENTS.md §Dry-run for the 512-chip "
+          f"lowering).")
+
+
+if __name__ == "__main__":
+    main()

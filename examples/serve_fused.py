@@ -1,0 +1,62 @@
+"""Serving demo: batched decoding with AdaFusion-merged dual LoRA, plus the
+fused Pallas serving kernel on the same weights (interpret mode on CPU).
+
+    PYTHONPATH=src python examples/serve_fused.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.dual_lora import merge
+from repro.core.lora import init_adapters, lora_scale
+from repro.data.tokenizer import ByteTokenizer
+from repro.kernels.ops import fused_dual_lora_dense
+from repro.models.api import get_model
+from repro.serving.engine import Engine, ServeConfig
+
+
+def main():
+    cfg = ModelConfig(name="serve-demo", family="dense", n_layers=2,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=300, max_seq_len=128, lora_rank=8,
+                      remat=False, dtype="float32", param_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = ByteTokenizer()
+
+    # two adapter sets standing in for a client's personalized + global LoRA
+    ad_p = init_adapters(jax.random.PRNGKey(1), cfg)
+    ad_s = init_adapters(jax.random.PRNGKey(2), cfg)
+    w = jnp.array([0.7, 0.5])
+    fused = merge(ad_p, ad_s, w)
+
+    eng = Engine(model, cfg, params, adapters=fused)
+    prompts = ["logs: job start | net link up anomaly? ",
+               "logs: kernel panic cpu0 | fan speed set anomaly? "]
+    batch = jnp.asarray([tok.encode(p)[:48] + [0] * (48 - len(tok.encode(p)[:48]))
+                         for p in prompts], jnp.int32)
+    out = eng.generate(batch, ServeConfig(batch_size=2, max_new_tokens=4,
+                                          cache_len=128))
+    for p, o in zip(prompts, np.asarray(out)):
+        print(f"prompt: {p!r}\n  -> {tok.decode(o)!r}")
+
+    # same math through the fused Pallas kernel (Eq. 7 merged on-chip)
+    print("\nPallas dual-LoRA kernel vs jnp merge (wq of layer 0):")
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, cfg.d_model),
+                          dtype=jnp.bfloat16)
+    wq = params["blocks"]["b0"]["mixer"]["wq"][0].astype(jnp.bfloat16)
+    lp = ad_p["blocks"]["b0"]["mixer"]["wq"]
+    ls = ad_s["blocks"]["b0"]["mixer"]["wq"]
+    y_kernel = fused_dual_lora_dense(
+        x, wq, {"a": lp["a"][0], "b": lp["b"][0]},
+        {"a": ls["a"][0], "b": ls["b"][0]}, w, lora_scale(cfg), block=128)
+    fused_wq = fused["blocks"]["b0"]["mixer"]["wq"]
+    y_ref = (x @ wq).astype(jnp.float32) + lora_scale(cfg) * (
+        x.astype(jnp.float32) @ fused_wq["a"][0] @ fused_wq["b"][0])
+    err = float(jnp.max(jnp.abs(y_kernel.astype(jnp.float32) - y_ref)))
+    print(f"  max |kernel - reference| = {err:.5f}")
+
+
+if __name__ == "__main__":
+    main()

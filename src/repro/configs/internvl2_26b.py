@@ -1,0 +1,18 @@
+"""InternVL2-26B [arXiv:2404.16821] — VLM: InternViT-6B vision encoder +
+InternLM2-20B language model. Per the task spec the ViT/projector is a STUB;
+this config is the LM backbone consuming 256 stubbed patch embeddings."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b", family="vlm",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=16384,
+    vocab_size=92553, head_dim=128,
+    norm_type="rmsnorm", mlp_type="swiglu",
+    rope_theta=1000000.0, max_seq_len=32768,
+    n_patch_tokens=256,
+    citation="arXiv:2404.16821",
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    name="internvl2-smoke", n_layers=2, d_model=256, n_heads=8, n_kv_heads=2,
+    head_dim=32, d_ff=512, vocab_size=512, n_patch_tokens=8, max_seq_len=64)

@@ -1,0 +1,25 @@
+"""Kimi-K2 1T-A32B [arXiv:2501.kimi2] — trillion-parameter fine-grained MoE:
+384 experts, top-8, per-expert FFN width 2048, GQA(kv=8), 61 layers.
+
+Adaptations (DESIGN.md §5): head_dim pinned to 128 (7168/64=112 is not
+MXU-tile aligned); the real model's first dense layer and shared expert are
+uniformised into the attn+moe pattern. This is the dry-run stress test for
+expert-parallel sharding and compile-time memory analysis."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, d_ff=2048,
+    vocab_size=163840, head_dim=128,
+    layer_pattern=("attn+moe",),
+    norm_type="rmsnorm", mlp_type="swiglu",
+    rope_theta=1000000.0, max_seq_len=131072,
+    n_experts=384, n_experts_per_tok=8, d_ff_moe=2048,
+    moe_capacity_factor=1.25,
+    citation="arXiv:2501.kimi2",
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    name="kimi-smoke", n_layers=2, d_model=256, n_heads=8, n_kv_heads=2,
+    head_dim=32, d_ff=128, d_ff_moe=128, vocab_size=512,
+    n_experts=4, n_experts_per_tok=2, max_seq_len=64)

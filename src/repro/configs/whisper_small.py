@@ -1,0 +1,21 @@
+"""Whisper-small [arXiv:2212.04356] — encoder-decoder; the mel+conv frontend
+is a STUB (input_specs provides 1500 frame embeddings; task-spec carve-out).
+LoRA targets q/v + MLP, the usual Whisper-PEFT choice."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="encdec",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+    vocab_size=51865,
+    norm_type="layernorm", mlp_type="gelu", use_rope=False,
+    tie_embeddings=True,
+    n_encoder_layers=12, encoder_seq_len=1500,
+    max_seq_len=32768,  # real decoder ctx is 448; widened for decode_32k dry-run
+    lora_targets=("wq", "wv", "w_up", "w_out"),
+    citation="arXiv:2212.04356",
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    name="whisper-smoke", n_layers=2, n_encoder_layers=2, d_model=128,
+    n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=512, encoder_seq_len=32,
+    max_seq_len=64)

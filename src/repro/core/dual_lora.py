@@ -1,0 +1,70 @@
+"""Dual-LoRA state and the Eq. 7 adaptive merge.
+
+Each FDLoRA client holds two adapter trees over the same frozen base:
+  * ``personalized`` (θ_p) — never leaves the client,
+  * ``global_`` (θ_s)      — the only federated state.
+
+AdaFusion (paper §3.5) combines them *per low-rank factor*:
+
+    m̂ = (w1·A1 + w2·A2) @ (w1·B1 + w2·B2)                          (Eq. 7)
+
+which requires equal rank (asserted) and yields a single standard adapter —
+so the fused model runs through the exact same forward path (and the same
+Pallas kernels) as a single-LoRA model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class DualLoRAState:
+    personalized: Params
+    global_: Params
+    fusion_weights: jnp.ndarray  # (2,) = [w1 (personalized), w2 (global)]
+
+    def replace(self, **kw) -> "DualLoRAState":
+        return dataclasses.replace(self, **kw)
+
+
+def check_same_rank(ad1: Params, ad2: Params) -> None:
+    r1 = {p.shape[-1] for p in _a_leaves(ad1)}
+    r2 = {p.shape[-1] for p in _a_leaves(ad2)}
+    if r1 != r2:
+        raise ValueError(f"AdaFusion requires equal LoRA rank, got {r1} vs {r2}")
+
+
+def _a_leaves(tree):
+    out = []
+
+    def walk(t):
+        if isinstance(t, dict) and set(t.keys()) == {"a", "b"}:
+            out.append(t["a"])
+        elif isinstance(t, dict):
+            for v in t.values():
+                walk(v)
+    walk(tree)
+    return out
+
+
+def merge(personalized: Params, global_: Params, w) -> Params:
+    """Eq. 7: element-wise weighted merge of the low-rank factors.
+
+    ``w`` is a length-2 array-like [w1, w2]; works under jit/grad (weights
+    may be traced).
+    """
+    w1, w2 = w[0], w[1]
+    return jax.tree.map(lambda p, g: w1 * p + w2 * g, personalized, global_)
+
+
+def fused_forward(model, params: Params, batch, state: DualLoRAState,
+                  lora_scale: float):
+    """Forward pass through base + AdaFusion-merged dual adapters."""
+    fused = merge(state.personalized, state.global_, state.fusion_weights)
+    return model.forward(params, batch, adapters=fused, lora_scale=lora_scale)

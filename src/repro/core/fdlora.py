@@ -1,0 +1,162 @@
+"""FDLoRA Algorithm 1 — the paper's training procedure, end to end.
+
+Stage 1  Local learning: every client SFTs its *personalized* LoRA on local
+         data (Eq. 5); the *global* LoRA is initialised to the client mean
+         (Eq. 6) so round 0 starts from pooled knowledge.
+Stage 2  Federated learning: T outer rounds; each round every client pulls
+         θ_s, runs K inner AdamW steps on it (line 12), optionally re-syncs
+         its personalized LoRA every H rounds (lines 13-15); the server
+         Nesterov-updates θ_s from the averaged pseudo-gradient (lines 17-18).
+Stage 3  AdaFusion: per client, gradient-free search for fusion weights
+         (Eq. 7/8) on a few-shot set Q.
+
+The simulation executes clients sequentially on one host but shares a single
+jitted inner-update (identical shapes across clients); the *distributed*
+expression of the same schedule — clients as mesh "pod" axis entries, outer
+aggregation as a pod-axis pmean — lives in ``repro/federated/distributed.py``
+and is what the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fusion as fusion_lib
+from repro.core.dual_lora import DualLoRAState, merge
+from repro.core.lora import (init_adapters, lora_scale, tree_mean)
+from repro.core.outer_opt import make_outer_optimizer, outer_step
+from repro.training.optimizers import adamw
+from repro.training.train_step import (make_fused_eval_fn, make_lora_train_step)
+
+Params = Any
+
+
+@dataclasses.dataclass
+class FDLoRAConfig:
+    n_clients: int = 5
+    rounds: int = 30                 # T
+    inner_steps: int = 3             # K
+    sync_every: int = 10             # H (0 => never, i.e. H = ∞)
+    batch_size: int = 8
+    stage1_steps: int = 30           # SFT batches for stage 1
+    inner_lr: float = 2e-4
+    inner_weight_decay: float = 0.01
+    outer_kind: str = "nesterov"     # nesterov | sgd | fedavg
+    outer_lr: float = 1e-3
+    outer_momentum: float = 0.5
+    fusion_method: str = "es"
+    fusion_steps: int = 5            # paper: max 5 optimization steps
+    fusion_l1: float = 0.05          # λ
+    few_shot_k: int = 16             # |Q|
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class ClientState:
+    personalized: Params
+    global_copy: Params              # θ_s^(i), this round's working copy
+    inner_opt_state: Any
+    fusion_weights: np.ndarray
+    comm_bytes_up: float = 0.0
+    comm_bytes_down: float = 0.0
+
+
+def tree_bytes(tree) -> float:
+    return float(sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree)))
+
+
+class FDLoRATrainer:
+    """Runs Algorithm 1 against a frozen base model + per-client batchers."""
+
+    def __init__(self, model, cfg, fed: FDLoRAConfig, base_params: Params):
+        self.model, self.cfg, self.fed = model, cfg, fed
+        self.base = base_params
+        self.scale = lora_scale(cfg)
+        self.inner_opt = adamw(lr=fed.inner_lr, weight_decay=fed.inner_weight_decay)
+        self.outer_opt = make_outer_optimizer(fed.outer_kind, fed.outer_lr,
+                                              fed.outer_momentum)
+        self._step = jax.jit(make_lora_train_step(model, cfg, self.inner_opt))
+        self._fused_eval = jax.jit(make_fused_eval_fn(model, cfg))
+        self.history: List[Dict] = []
+
+    # ---- Stage 1 ---------------------------------------------------------
+    def stage1(self, batchers) -> List[ClientState]:
+        fed = self.fed
+        clients: List[ClientState] = []
+        for i in range(fed.n_clients):
+            rng = jax.random.PRNGKey(fed.seed * 1000 + i)
+            ad = init_adapters(rng, self.cfg)
+            st = self.inner_opt.init(ad)
+            for _ in range(fed.stage1_steps):
+                batch = _dev(batchers[i].sample())
+                ad, st, m = self._step(self.base, ad, st, batch)
+            clients.append(ClientState(
+                personalized=ad, global_copy=ad, inner_opt_state=st,
+                fusion_weights=np.array([0.5, 0.5], np.float32)))
+        # Eq. 6: initialise the global LoRA to the client mean.
+        self.theta_s = tree_mean([c.personalized for c in clients])
+        self.outer_state = self.outer_opt.init(self.theta_s)
+        return clients
+
+    # ---- Stage 2 ---------------------------------------------------------
+    def stage2_round(self, t: int, clients: Sequence[ClientState], batchers):
+        fed = self.fed
+        down = tree_bytes(self.theta_s)
+        client_thetas = []
+        for i, c in enumerate(clients):
+            theta_i = self.theta_s                      # line 11: re-dispatch
+            c.comm_bytes_down += down
+            st = c.inner_opt_state
+            for _ in range(fed.inner_steps):            # line 12: K inner steps
+                batch = _dev(batchers[i].sample())
+                theta_i, st, m = self._step(self.base, theta_i, st, batch)
+            c.inner_opt_state = st
+            c.global_copy = theta_i
+            if fed.sync_every and t % fed.sync_every == 0:  # lines 13-15
+                c.personalized = theta_i
+            client_thetas.append(theta_i)
+            c.comm_bytes_up += tree_bytes(theta_i)
+        # lines 17-18: server outer update
+        self.theta_s, self.outer_state, delta = outer_step(
+            self.outer_opt, self.theta_s, self.outer_state, client_thetas)
+        self.history.append({"round": t, "loss": float(m["loss"])})
+        return delta
+
+    def stage2(self, clients, batchers):
+        for t in range(1, self.fed.rounds + 1):
+            self.stage2_round(t, clients, batchers)
+
+    # ---- Stage 3 ---------------------------------------------------------
+    def stage3(self, clients: Sequence[ClientState], batchers):
+        for i, c in enumerate(clients):
+            q = _dev(batchers[i].few_shot(self.fed.few_shot_k))
+
+            def eval_loss(w):
+                loss, _ = self._fused_eval(self.base, c.personalized,
+                                           self.theta_s, jnp.asarray(w), q)
+                return float(loss)
+
+            w, info = fusion_lib.adafusion(
+                eval_loss, method=self.fed.fusion_method,
+                steps=self.fed.fusion_steps, lam=self.fed.fusion_l1,
+                seed=self.fed.seed * 7 + i)
+            c.fusion_weights = w
+
+    # ---- full Algorithm 1 --------------------------------------------------
+    def fit(self, batchers) -> List[ClientState]:
+        clients = self.stage1(batchers)
+        self.stage2(clients, batchers)
+        self.stage3(clients, batchers)
+        return clients
+
+    # ---- inference-side helpers -------------------------------------------
+    def fused_adapters(self, c: ClientState) -> Params:
+        return merge(c.personalized, self.theta_s, jnp.asarray(c.fusion_weights))
+
+
+def _dev(batch: Dict[str, np.ndarray]):
+    return {k: jnp.asarray(v) for k, v in batch.items()}

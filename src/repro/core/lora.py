@@ -1,0 +1,213 @@
+"""LoRA adapters (Hu et al. 2021) as parallel parameter trees.
+
+An *adapter tree* mirrors the model's block structure and holds, at each
+targeted linear, a dict ``{"a": A, "b": B}`` with ``A: (n_periods, d_in, r)``
+and ``B: (n_periods, r, d_out)`` (period-stacked to ride the same ``lax.scan``
+as the base parameters). ``B`` is zero-initialised so training starts at the
+base model (standard LoRA init); ``A`` is Kaiming-normal.
+
+The effective update is ``ΔW = (alpha/r) · A @ B`` applied additively inside
+``layers.dense`` — base weights stay frozen (bf16), adapters train in fp32.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+# map: mixer/mlp kind -> {target name: (d_in_fn, d_out_fn)}  (fns of cfg)
+
+
+def _attn_targets(cfg):
+    d, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"wq": (d, H * hd), "wk": (d, Kv * hd), "wv": (d, Kv * hd),
+            "wo": (H * hd, d)}
+
+
+def _mlp_targets(cfg, ff=None):
+    d = cfg.d_model
+    ff = ff or cfg.d_ff
+    t = {"w_up": (d, ff), "w_out": (ff, d)}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        t["w_gate"] = (d, ff)
+    return t
+
+
+def _mamba_targets(cfg):
+    from repro.models.mamba2 import _dims
+    d_in, n_h, d_st, n_g, conv_dim, proj_dim = _dims(cfg)
+    return {"in_proj": (cfg.d_model, proj_dim), "out_proj": (d_in, cfg.d_model)}
+
+
+def _moe_targets(cfg):
+    # Only the router gets an adapter (per-expert adapters would defeat PEFT;
+    # see DESIGN.md §5). Configurable via lora_targets containing "experts".
+    return {"router": (cfg.d_model, cfg.n_experts)}
+
+
+def block_target_shapes(entry: str, cfg) -> Dict[str, Dict[str, Tuple[int, int]]]:
+    """Targets for one pattern entry, filtered by cfg.lora_targets."""
+    mixer, _, mlp = entry.partition("+")
+    out: Dict[str, Dict[str, Tuple[int, int]]] = {}
+    sel = set(cfg.lora_targets)
+    if mixer == "attn":
+        t = {k: v for k, v in _attn_targets(cfg).items() if k in sel}
+    else:
+        # SSM blocks: adapt the in/out projections (DESIGN.md §5).
+        t = _mamba_targets(cfg)
+    if t:
+        out["mixer"] = t
+    if mlp == "mlp":
+        t = {k: v for k, v in _mlp_targets(cfg).items() if k in sel}
+        if t:
+            out["mlp"] = t
+    elif mlp == "moe":
+        out["mlp"] = _moe_targets(cfg)
+    return out
+
+
+def lora_target_shapes(cfg) -> List[Tuple[int, int]]:
+    """All (d_in, d_out) pairs across the full depth (for param counting)."""
+    shapes: List[Tuple[int, int]] = []
+    if cfg.is_encdec:
+        at = {k: v for k, v in _attn_targets(cfg).items() if k in set(cfg.lora_targets)}
+        mt = {k: v for k, v in _mlp_targets(cfg).items() if k in set(cfg.lora_targets)}
+        shapes += list(at.values()) * (cfg.n_encoder_layers + 2 * cfg.n_layers)
+        shapes += list(mt.values()) * (cfg.n_encoder_layers + cfg.n_layers)
+        return shapes
+    for i in range(cfg.n_layers):
+        entry = cfg.layer_pattern[i % len(cfg.layer_pattern)]
+        for sub in block_target_shapes(entry, cfg).values():
+            shapes += list(sub.values())
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Init / specs
+# ---------------------------------------------------------------------------
+
+def _init_pair(key, d_in: int, d_out: int, rank: int, stack: int):
+    a = jax.random.normal(key, (stack, d_in, rank), dtype=jnp.float32) * (1.0 / rank)
+    b = jnp.zeros((stack, rank, d_out), dtype=jnp.float32)
+    return {"a": a, "b": b}
+
+
+def init_adapters(rng, cfg, rank: Optional[int] = None) -> Params:
+    """Build a zero-effect adapter tree for the given architecture."""
+    r = rank or cfg.lora_rank
+    if cfg.is_encdec:
+        return _init_encdec_adapters(rng, cfg, r)
+    tree: Params = {"blocks": {}}
+    keys = jax.random.split(rng, len(cfg.layer_pattern))
+    for key, (i, entry) in zip(keys, enumerate(cfg.layer_pattern)):
+        name = f"b{i}"
+        targets = block_target_shapes(entry, cfg)
+        sub: Params = {}
+        n_leaf = sum(len(v) for v in targets.values()) or 1
+        lkeys = iter(jax.random.split(key, n_leaf))
+        for part, tmap in targets.items():
+            sub[part] = {t: _init_pair(next(lkeys), din, dout, r, cfg.n_periods)
+                         for t, (din, dout) in tmap.items()}
+        if sub:
+            tree["blocks"][name] = sub
+    return tree
+
+
+def _init_encdec_adapters(rng, cfg, r) -> Params:
+    sel = set(cfg.lora_targets)
+    at = {k: v for k, v in _attn_targets(cfg).items() if k in sel}
+    mt = {k: v for k, v in _mlp_targets(cfg).items() if k in sel}
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+
+    def pairs(key, tmap, stack):
+        ks = iter(jax.random.split(key, max(len(tmap), 1)))
+        return {t: _init_pair(next(ks), din, dout, r, stack)
+                for t, (din, dout) in tmap.items()}
+
+    return {
+        "enc_blocks": {"self_attn": pairs(k1, at, cfg.n_encoder_layers),
+                       "mlp": pairs(k2, mt, cfg.n_encoder_layers)},
+        "dec_blocks": {"self_attn": pairs(k3, at, cfg.n_layers),
+                       "cross_attn": pairs(k4, at, cfg.n_layers),
+                       "mlp": pairs(k5, mt, cfg.n_layers)},
+    }
+
+
+def adapter_specs(cfg, base_specs: Optional[Params] = None) -> Params:
+    """PartitionSpecs for an adapter tree.
+
+    Rule: A inherits the base weight's *input-dim* sharding on dim 1, B
+    inherits the *output-dim* sharding on dim 2; the rank dim is never
+    sharded (r ≪ 128 tile granularity).  Our base layout keeps d_model
+    replicated and shards head/ff output dims on `model`, so: A is fully
+    replicated unless the base input dim is sharded (wo / w_out), and B's
+    output dim is sharded when the base output dim is (wq/wk/wv/w_up/w_gate).
+    """
+    sharded_out = {"wq", "wk", "wv", "w_up", "w_gate", "in_proj"}
+    sharded_in = {"wo", "w_out", "out_proj"}
+
+    def leaf_spec(name):
+        a = P(None, None, None)
+        b = P(None, None, None)
+        if name in sharded_out:
+            b = P(None, None, "model")
+        if name in sharded_in:
+            a = P(None, "model", None)
+        return {"a": a, "b": b}
+
+    def walk(tree):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict) and set(v.keys()) == {"a", "b"}:
+                out[k] = leaf_spec(k)
+            else:
+                out[k] = walk(v)
+        return out
+
+    example = jax.eval_shape(lambda: init_adapters(jax.random.PRNGKey(0), cfg))
+    return walk(example)
+
+
+def lora_scale(cfg, rank: Optional[int] = None) -> float:
+    return cfg.lora_alpha / float(rank or cfg.lora_rank)
+
+
+# ---------------------------------------------------------------------------
+# Tree arithmetic (used by the federated optimizers and fusion)
+# ---------------------------------------------------------------------------
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_mean(trees):
+    n = len(trees)
+    acc = trees[0]
+    for t in trees[1:]:
+        acc = tree_add(acc, t)
+    return tree_scale(acc, 1.0 / n)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves)
+
+
+def tree_norm(a):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(a)))

@@ -1,0 +1,46 @@
+"""Outer (server-side) optimization for the federated stage.
+
+Algorithm 1, lines 17–18: the server averages client pseudo-gradients
+``Δ^(t) = (1/N) Σ_i (θ_s^(t-1) − θ_s^(i)(t))`` and applies OuterOpt.
+
+The paper uses Nesterov momentum (best convergence per DiLoCo); OuterOpt=SGD
+with lr=1 recovers vanilla FedAvg, and T=1 recovers model souping — both
+degenerate cases are exposed here and exercised by tests.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+
+from repro.core.lora import tree_mean, tree_sub
+from repro.training.optimizers import Optimizer, apply_updates, sgd
+
+Params = Any
+
+
+def pseudo_gradient(theta_prev: Params, client_thetas: Sequence[Params]) -> Params:
+    """Δ = mean_i (θ_prev − θ_i). Points *from* the clients' average."""
+    avg = tree_mean(list(client_thetas))
+    return tree_sub(theta_prev, avg)
+
+
+def make_outer_optimizer(kind: str = "nesterov", lr: float = 1e-3,
+                         momentum: float = 0.5) -> Optimizer:
+    if kind == "nesterov":
+        return sgd(lr=lr, momentum=momentum, nesterov=True)
+    if kind == "sgd":
+        return sgd(lr=lr, momentum=0.0)
+    if kind == "fedavg":
+        # θ ← θ − 1·Δ = mean of client params: exactly FedAvg.
+        return sgd(lr=1.0, momentum=0.0)
+    raise ValueError(kind)
+
+
+def outer_step(opt: Optimizer, theta_prev: Params, opt_state,
+               client_thetas: Sequence[Params]):
+    """One server round. Returns (theta_new, opt_state, delta)."""
+    delta = pseudo_gradient(theta_prev, client_thetas)
+    updates, opt_state = opt.update(delta, opt_state, theta_prev)
+    theta_new = apply_updates(theta_prev, updates)
+    return theta_new, opt_state, delta

@@ -1,0 +1,386 @@
+"""The paper's six comparison baselines, reimplemented at the LoRA-adapter
+level (the base LLM is frozen everywhere, as in the paper's PEFT setting).
+
+Adaptations (documented per class): methods defined for full models are
+expressed over adapter trees; FedRoD's two heads and FedKD's student/teacher
+use exact LoRA *rank concatenation* ``(A1|A2)(B1;B2) = A1B1 + A2B2`` to
+compose adapters additively without touching the model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lora import (init_adapters, lora_scale, tree_add, tree_mean,
+                             tree_scale, tree_sub)
+from repro.training.optimizers import adamw, apply_updates, clip_by_global_norm
+from repro.training.train_step import cross_entropy, make_lora_train_step
+
+Params = Any
+
+
+def concat_rank(ad1: Params, ad2: Params) -> Params:
+    """Exact additive composition of two LoRAs via rank concatenation."""
+    def walk(a, b):
+        if isinstance(a, dict) and set(a.keys()) == {"a", "b"}:
+            return {"a": jnp.concatenate([a["a"], b["a"]], axis=-1),
+                    "b": jnp.concatenate([a["b"], b["b"]], axis=-2)}
+        return {k: walk(a[k], b[k]) for k in a}
+
+    return walk(ad1, ad2)
+
+
+@dataclasses.dataclass
+class FedConfig:
+    n_clients: int = 5
+    rounds: int = 30
+    local_steps: int = 3
+    lr: float = 2e-4
+    seed: int = 0
+    # method-specific knobs
+    prox_mu: float = 0.01            # FedProx
+    amp_lambda: float = 0.1          # FedAMP prox to the attentive aggregate
+    amp_tau: float = 5.0             # FedAMP attention temperature
+    kd_temp: float = 2.0             # FedKD distillation temperature
+    kd_coef: float = 0.5
+
+
+def _dev(b):
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+class BaselineBase:
+    name = "base"
+
+    def __init__(self, model, cfg, fed: FedConfig, base_params):
+        self.model, self.cfg, self.fed = model, cfg, fed
+        self.base = base_params
+        self.scale = lora_scale(cfg)
+        self.opt = adamw(lr=fed.lr)
+        self.comm_bytes = 0.0
+
+    def _init_all(self):
+        return [init_adapters(jax.random.PRNGKey(self.fed.seed * 100 + i), self.cfg)
+                for i in range(self.fed.n_clients)]
+
+    def _count(self, tree):
+        self.comm_bytes += float(sum(l.size * l.dtype.itemsize
+                                     for l in jax.tree.leaves(tree)))
+
+    def fit(self, batchers) -> List[Params]:
+        raise NotImplementedError
+
+
+class Local(BaselineBase):
+    """Per-client training only — no communication at all."""
+    name = "local"
+
+    def fit(self, batchers):
+        step = jax.jit(make_lora_train_step(self.model, self.cfg, self.opt))
+        ads = self._init_all()
+        states = [self.opt.init(a) for a in ads]
+        for _ in range(self.fed.rounds):
+            for i in range(self.fed.n_clients):
+                for _ in range(self.fed.local_steps):
+                    ads[i], states[i], _ = step(self.base, ads[i], states[i],
+                                                _dev(batchers[i].sample()))
+        return ads
+
+
+class FedAvg(BaselineBase):
+    """McMahan et al. 2017 over LoRA parameters."""
+    name = "fedavg"
+
+    def fit(self, batchers):
+        step = jax.jit(make_lora_train_step(self.model, self.cfg, self.opt))
+        g = init_adapters(jax.random.PRNGKey(self.fed.seed), self.cfg)
+        states = [self.opt.init(g) for _ in range(self.fed.n_clients)]
+        for _ in range(self.fed.rounds):
+            locals_ = []
+            for i in range(self.fed.n_clients):
+                a = g
+                self._count(g)  # broadcast down
+                for _ in range(self.fed.local_steps):
+                    a, states[i], _ = step(self.base, a, states[i],
+                                           _dev(batchers[i].sample()))
+                locals_.append(a)
+                self._count(a)  # upload
+            g = tree_mean(locals_)
+        return [g] * self.fed.n_clients
+
+
+class FedProx(BaselineBase):
+    """Li et al. 2020: local loss + (μ/2)·‖θ − θ_global‖²."""
+    name = "fedprox"
+
+    def _make_step(self):
+        from repro.training.train_step import make_lora_loss_fn
+        loss_fn = make_lora_loss_fn(self.model, self.cfg)
+        mu = self.fed.prox_mu
+
+        def prox_loss(ad, base, batch, g):
+            l, m = loss_fn(ad, base, batch)
+            prox = sum(jnp.sum(jnp.square(x - y)) for x, y in
+                       zip(jax.tree.leaves(ad), jax.tree.leaves(g)))
+            return l + 0.5 * mu * prox, m
+
+        def step(base, ad, st, batch, g):
+            (_, m), grads = jax.value_and_grad(prox_loss, has_aux=True)(
+                ad, base, batch, g)
+            grads = clip_by_global_norm(grads, 1.0)
+            upd, st = self.opt.update(grads, st, ad)
+            return apply_updates(ad, upd), st, m
+
+        return jax.jit(step)
+
+    def fit(self, batchers):
+        step = self._make_step()
+        g = init_adapters(jax.random.PRNGKey(self.fed.seed), self.cfg)
+        states = [self.opt.init(g) for _ in range(self.fed.n_clients)]
+        for _ in range(self.fed.rounds):
+            locals_ = []
+            for i in range(self.fed.n_clients):
+                a = g
+                self._count(g)
+                for _ in range(self.fed.local_steps):
+                    a, states[i], _ = step(self.base, a, states[i],
+                                           _dev(batchers[i].sample()), g)
+                locals_.append(a)
+                self._count(a)
+            g = tree_mean(locals_)
+        return [g] * self.fed.n_clients
+
+
+class FedAMP(BaselineBase):
+    """Huang et al. 2021: attentive message passing — each client gets a
+    personalized aggregate u_i = Σ_j ξ_ij θ_j (ξ from parameter cosine
+    similarity) and trains with a prox toward u_i."""
+    name = "fedamp"
+
+    def _attention(self, thetas: List[Params]) -> List[Params]:
+        n = len(thetas)
+        flats = [jnp.concatenate([x.reshape(-1) for x in jax.tree.leaves(t)])
+                 for t in thetas]
+        normed = [f / (jnp.linalg.norm(f) + 1e-9) for f in flats]
+        sims = np.array([[float(jnp.vdot(normed[i], normed[j])) for j in range(n)]
+                         for i in range(n)])
+        out = []
+        for i in range(n):
+            logits = self.fed.amp_tau * sims[i]
+            w = np.exp(logits - logits.max())
+            w = w / w.sum()
+            agg = tree_scale(thetas[0], float(w[0]))
+            for j in range(1, n):
+                agg = tree_add(agg, tree_scale(thetas[j], float(w[j])))
+            out.append(agg)
+        return out
+
+    def _make_step(self):
+        from repro.training.train_step import make_lora_loss_fn
+        loss_fn = make_lora_loss_fn(self.model, self.cfg)
+        lam = self.fed.amp_lambda
+
+        def amp_loss(ad, base, batch, u):
+            l, m = loss_fn(ad, base, batch)
+            prox = sum(jnp.sum(jnp.square(x - y)) for x, y in
+                       zip(jax.tree.leaves(ad), jax.tree.leaves(u)))
+            return l + 0.5 * lam * prox, m
+
+        def step(base, ad, st, batch, u):
+            (_, m), grads = jax.value_and_grad(amp_loss, has_aux=True)(
+                ad, base, batch, u)
+            grads = clip_by_global_norm(grads, 1.0)
+            upd, st = self.opt.update(grads, st, ad)
+            return apply_updates(ad, upd), st, m
+
+        return jax.jit(step)
+
+    def fit(self, batchers):
+        step = self._make_step()
+        ads = self._init_all()
+        states = [self.opt.init(a) for a in ads]
+        for _ in range(self.fed.rounds):
+            us = self._attention(ads)          # server message passing
+            for u in us:
+                self._count(u)
+            for i in range(self.fed.n_clients):
+                self._count(ads[i])
+                for _ in range(self.fed.local_steps):
+                    ads[i], states[i], _ = step(self.base, ads[i], states[i],
+                                                _dev(batchers[i].sample()), us[i])
+        return ads
+
+
+def _split_rep_head(ad: Params):
+    """FedRep split: attention ('representation') adapters are shared,
+    MLP/router ('head') adapters stay personal (adapter-level analog of the
+    body/head decoupling; see module docstring)."""
+    shared = {k: v for k, v in ad.items()} if not isinstance(ad, dict) else None
+
+    def walk(t, keep):
+        out = {}
+        for k, v in t.items():
+            if k in ("mixer", "self_attn", "cross_attn"):
+                if keep == "shared":
+                    out[k] = v
+            elif k == "mlp":
+                if keep == "head":
+                    out[k] = v
+            elif isinstance(v, dict):
+                sub = walk(v, keep)
+                if sub:
+                    out[k] = sub
+        return out
+
+    return walk(ad, "shared"), walk(ad, "head")
+
+
+def _merge_rep_head(shared: Params, head: Params) -> Params:
+    def walk(s, h):
+        out = dict(s) if s else {}
+        for k, v in (h or {}).items():
+            if k in out and isinstance(v, dict) and not set(v.keys()) == {"a", "b"}:
+                out[k] = walk(out[k], v)
+            else:
+                out[k] = v
+        return out
+
+    return walk(shared, head)
+
+
+class FedRep(BaselineBase):
+    """Collins et al. 2021: shared representation, personal heads."""
+    name = "fedrep"
+
+    def fit(self, batchers):
+        step = jax.jit(make_lora_train_step(self.model, self.cfg, self.opt))
+        ads = self._init_all()
+        states = [self.opt.init(a) for a in ads]
+        for _ in range(self.fed.rounds):
+            for i in range(self.fed.n_clients):
+                for _ in range(self.fed.local_steps):
+                    ads[i], states[i], _ = step(self.base, ads[i], states[i],
+                                                _dev(batchers[i].sample()))
+            shared = tree_mean([_split_rep_head(a)[0] for a in ads])
+            self._count(shared)
+            for i in range(self.fed.n_clients):
+                ads[i] = _merge_rep_head(shared, _split_rep_head(ads[i])[1])
+                # fresh opt state leaves momenta aligned with the new params
+        return ads
+
+
+class FedRoD(BaselineBase):
+    """Chen & Chao 2021: decoupled generic + personalized predictors.
+    Generic adapter g is FedAvg'd; personal adapter p_i trains on top via
+    exact rank concatenation. Local loss = CE(g) + CE(g ⊕ p_i)."""
+    name = "fedrod"
+
+    def _make_step(self):
+        scale = self.scale
+
+        def loss_fn(both, base, batch):
+            g, p = both
+            lg, aux1 = self.model.forward(base, batch, adapters=g, lora_scale=scale)
+            l1, m = cross_entropy(self.cfg, lg, batch)
+            lp, aux2 = self.model.forward(base, batch, adapters=concat_rank(g, p),
+                                          lora_scale=scale)
+            l2, m2 = cross_entropy(self.cfg, lp, batch)
+            return l1 + l2 + self.cfg.router_aux_loss_coef * (aux1 + aux2), m2
+
+        def step(base, g, p, st, batch):
+            (_, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                (g, p), base, batch)
+            grads = clip_by_global_norm(grads, 1.0)
+            upd, st = self.opt.update(grads, st, (g, p))
+            g, p = apply_updates((g, p), upd)
+            return g, p, st, m
+
+        return jax.jit(step)
+
+    def fit(self, batchers):
+        step = self._make_step()
+        g = init_adapters(jax.random.PRNGKey(self.fed.seed), self.cfg)
+        ps = self._init_all()
+        states = [self.opt.init((g, p)) for p in ps]
+        for _ in range(self.fed.rounds):
+            locals_ = []
+            for i in range(self.fed.n_clients):
+                gi = g
+                self._count(g)
+                for _ in range(self.fed.local_steps):
+                    gi, ps[i], states[i], _ = step(self.base, gi, ps[i],
+                                                   states[i], _dev(batchers[i].sample()))
+                locals_.append(gi)
+                self._count(gi)
+            g = tree_mean(locals_)
+        self._final_g = g
+        return [concat_rank(g, p) for p in ps]
+
+
+class FedKD(BaselineBase):
+    """Wu et al. 2022: communication-efficient FL via mutual knowledge
+    distillation — a small *student* adapter (rank r/2) is the only thing
+    communicated; the local *teacher* learns from data + the student and
+    vice versa. (The paper's SVD gradient compression is orthogonal to the
+    adapter setting and omitted; noted in DESIGN.md.)"""
+    name = "fedkd"
+
+    def _make_step(self, student_rank):
+        scale = self.scale
+        T = self.fed.kd_temp
+        coef = self.fed.kd_coef
+
+        def kl(p_logits, q_logits, mask):
+            p = jax.nn.log_softmax(p_logits / T, -1)
+            q = jax.nn.log_softmax(q_logits / T, -1)
+            per = jnp.sum(jnp.exp(p) * (p - q), -1)
+            return (per * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+        def loss_fn(both, base, batch):
+            t, s = both
+            lt, _ = self.model.forward(base, batch, adapters=t, lora_scale=scale)
+            ls, _ = self.model.forward(base, batch, adapters=s, lora_scale=scale)
+            l1, m = cross_entropy(self.cfg, lt, batch)
+            l2, _ = cross_entropy(self.cfg, ls, batch)
+            mask = (batch["tokens"][:, 1:] >= 0).astype(jnp.float32)
+            mutual = kl(jax.lax.stop_gradient(lt[:, :-1]), ls[:, :-1], mask) + \
+                     kl(jax.lax.stop_gradient(ls[:, :-1]), lt[:, :-1], mask)
+            return l1 + l2 + coef * mutual, m
+
+        def step(base, t, s, st, batch):
+            (_, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                (t, s), base, batch)
+            grads = clip_by_global_norm(grads, 1.0)
+            upd, st = self.opt.update(grads, st, (t, s))
+            t, s = apply_updates((t, s), upd)
+            return t, s, st, m
+
+        return jax.jit(step)
+
+    def fit(self, batchers):
+        r_s = max(2, self.cfg.lora_rank // 2)
+        step = self._make_step(r_s)
+        teachers = self._init_all()
+        s_g = init_adapters(jax.random.PRNGKey(self.fed.seed + 1), self.cfg, rank=r_s)
+        states = [self.opt.init((t, s_g)) for t in teachers]
+        for _ in range(self.fed.rounds):
+            studs = []
+            for i in range(self.fed.n_clients):
+                s = s_g
+                self._count(s_g)
+                for _ in range(self.fed.local_steps):
+                    teachers[i], s, states[i], _ = step(
+                        self.base, teachers[i], s, states[i],
+                        _dev(batchers[i].sample()))
+                studs.append(s)
+                self._count(s)
+            s_g = tree_mean(studs)
+        return teachers
+
+
+BASELINES = {b.name: b for b in
+             (Local, FedAvg, FedProx, FedAMP, FedRep, FedRoD, FedKD)}

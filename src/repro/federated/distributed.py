@@ -1,0 +1,100 @@
+"""Multi-pod execution of FDLoRA: clients ride the mesh "pod" axis.
+
+The paper allows a client to be "a single device or a cluster"; on a TPU
+fleet the natural mapping is client == pod slice. We express one full
+federated round (K inner steps + outer aggregation) as a single jitted
+function over *client-stacked* state:
+
+    adapters:   (N_clients, ...)  sharded P("pod", ...)
+    batches:    (N_clients, K, B_local, L) sharded P("pod", None, "data", None)
+    base model: replicated across pods, model-parallel inside each pod
+
+Inside the round, clients are a ``vmap`` axis — so the K inner steps compile
+with **zero cross-pod collectives** — and the outer pseudo-gradient mean is a
+single reduction over the client axis, which XLA lowers to the only cross-pod
+all-reduce, of LoRA-sized tensors. That is the paper's "communication once
+every K steps, LoRA parameters only" property, visible in the dry-run HLO
+(EXPERIMENTS.md §Dry-run greps the collectives).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.lora import lora_scale
+from repro.training.optimizers import Optimizer, apply_updates, clip_by_global_norm
+from repro.training.train_step import make_lora_loss_fn
+
+Params = Any
+
+
+def make_fdlora_round_step(model, cfg, inner_opt: Optimizer,
+                           outer_opt: Optimizer, inner_steps: int,
+                           sync_personalized: bool = False,
+                           compress_outer: str = "none") -> Callable:
+    """Returns round(base, theta_s, stacked_state, batches) -> (theta_s', state').
+
+    stacked_state = {"adapters": (N,...), "personalized": (N,...),
+                     "inner_opt": (N,...), "outer_opt": {...}}
+    batches: dict of (N, K, B, ...) arrays.
+    """
+    loss_fn = make_lora_loss_fn(model, cfg)
+
+    def one_client(base, theta_s, inner_state, batches_k):
+        """K inner AdamW steps on this client's copy of the global LoRA."""
+        def inner(carry, batch):
+            ad, st = carry
+            (_, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                ad, base, batch)
+            grads = clip_by_global_norm(grads, 1.0)
+            upd, st = inner_opt.update(grads, st, ad)
+            return (apply_updates(ad, upd), st), m["loss"]
+
+        # dry-run cost accounting: unroll the K-step loop alongside the layer
+        # scan (XLA counts a while body once; see dryrun._extrapolated_cost)
+        (theta_i, inner_state), losses = jax.lax.scan(
+            inner, (theta_s, inner_state), batches_k,
+            unroll=inner_steps if getattr(cfg, "scan_unroll", 1) > 1 else 1)
+        return theta_i, inner_state, losses.mean()
+
+    def round_step(base, theta_s, state, batches):
+        # -- inner phase: clients independent (vmap over the pod axis) ----
+        theta_i, inner_state, loss = jax.vmap(
+            one_client, in_axes=(None, None, 0, 0))(
+            base, theta_s, state["inner_opt"], batches)
+        # -- outer phase: the ONLY cross-pod communication -----------------
+        if compress_outer == "bf16":
+            # beyond-paper (§Perf): halve cross-pod bytes by shipping the
+            # per-client pseudo-gradient in bf16 — the client-axis mean (the
+            # cross-pod all-reduce) runs on bf16 operands; the Nesterov
+            # update stays fp32. DiLoCo-style quantised outer gradients.
+            delta = jax.tree.map(
+                lambda prev, ti: (prev[None] - ti).astype(jnp.bfloat16)
+                .mean(axis=0).astype(jnp.float32),
+                theta_s, theta_i)
+        else:
+            delta = jax.tree.map(
+                lambda prev, ti: prev - ti.mean(axis=0), theta_s, theta_i)
+        upd, outer_state = outer_opt.update(delta, state["outer_opt"], theta_s)
+        theta_s_new = apply_updates(theta_s, upd)
+        new_state = dict(state, inner_opt=inner_state, outer_opt=outer_state)
+        if sync_personalized:  # Algorithm 1 lines 13-15 (H-round sync)
+            new_state["personalized"] = theta_i
+        return theta_s_new, new_state, loss.mean()
+
+    return round_step
+
+
+def client_stacked_specs(adapter_spec_tree, n_clients_axis: str = "pod"):
+    """Prepend the client axis (sharded on 'pod') to adapter specs."""
+    return jax.tree.map(
+        lambda s: P(*((n_clients_axis,) + tuple(s))), adapter_spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_specs(kind: str = "train") -> P:
+    # (N_clients, K, B, L): clients on pod, batch on data.
+    return P("pod", None, "data", None)

@@ -1,0 +1,86 @@
+"""jit'd high-level wrappers over the Pallas kernels.
+
+These adapt model-layer calling conventions ((B, S, d) activations, GQA
+head layouts, adapter dicts) to the 2-D kernel interfaces. On CPU they run
+in ``interpret=True`` (validation); on TPU pass ``interpret=False``.
+
+The model layer keeps pure-jnp math by default (``layers.dense`` /
+``multihead_attention``) — the kernels are drop-in replacements for the
+serving/training hot paths, exercised by tests and the §Perf iterations.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dual_lora import dual_lora_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lora_matmul import lora_matmul
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def lora_dense(x: jnp.ndarray, w: jnp.ndarray, adapter: Dict[str, jnp.ndarray],
+               scale: float, *, interpret: bool = True,
+               block: int = 256) -> jnp.ndarray:
+    """(..., K) @ (K, N) + LoRA via the fused kernel. Pads M/K/N to tiles."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    x2 = x.reshape(-1, K)
+    x2, M = _pad_to(x2, 0, block)
+    x2p, _ = _pad_to(x2, 1, block)
+    wp, _ = _pad_to(_pad_to(w, 0, block)[0], 1, block)
+    ap, _ = _pad_to(adapter["a"], 0, block)
+    bp, _ = _pad_to(adapter["b"], 1, block)
+    y = lora_matmul(x2p.astype(jnp.bfloat16), wp, ap, bp, scale,
+                    bm=block, bn=block, bk=block, interpret=interpret)
+    return y[:M, :N].reshape(*lead, N)
+
+
+def fused_dual_lora_dense(x: jnp.ndarray, w: jnp.ndarray,
+                          ad_p: Dict, ad_s: Dict, fusion_w: jnp.ndarray,
+                          scale: float, *, interpret: bool = True,
+                          block: int = 256) -> jnp.ndarray:
+    """FDLoRA serving path: base + Eq.7-merged dual adapters, one kernel."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    x2 = x.reshape(-1, K)
+    x2, M = _pad_to(x2, 0, block)
+    x2p, _ = _pad_to(x2, 1, block)
+    wp, _ = _pad_to(_pad_to(w, 0, block)[0], 1, block)
+    a1, _ = _pad_to(ad_p["a"], 0, block)
+    b1, _ = _pad_to(ad_p["b"], 1, block)
+    a2, _ = _pad_to(ad_s["a"], 0, block)
+    b2, _ = _pad_to(ad_s["b"], 1, block)
+    y = dual_lora_matmul(x2p.astype(jnp.bfloat16), wp, a1, b1, a2, b2,
+                         fusion_w, scale, bm=block, bn=block, bk=block,
+                         interpret=interpret)
+    return y[:M, :N].reshape(*lead, N)
+
+
+def gqa_flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, sliding_window: int = 0,
+                        interpret: bool = True) -> jnp.ndarray:
+    """GQA layout adapter: q (B, Sq, H, d), k/v (B, Sk, Kv, d) as produced by
+    the model layer -> flash kernel layout, repeating KV heads."""
+    B, Sq, H, d = q.shape
+    Kv = k.shape[2]
+    rep = H // Kv
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+    o = flash_attention(qt, kt, vt, causal=causal,
+                        sliding_window=sliding_window, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

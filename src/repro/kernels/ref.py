@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b, scale: float):
+    """y = x @ w + scale * (x @ a) @ b, fp32 accumulation."""
+    base = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    z = jnp.matmul(x.astype(jnp.float32), a.astype(jnp.float32))
+    z = jnp.matmul(z, b.astype(jnp.float32))
+    return (base + scale * z).astype(x.dtype)
+
+
+def dual_lora_matmul_ref(x, w, a1, b1, a2, b2, w1, w2, scale: float):
+    """Eq. 7 fused serving path: y = x@w + scale·x@[(w1A1+w2A2)(w1B1+w2B2)]."""
+    am = (w1 * a1 + w2 * a2).astype(jnp.float32)
+    bm = (w1 * b1 + w2 * b2).astype(jnp.float32)
+    base = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    z = jnp.matmul(jnp.matmul(x.astype(jnp.float32), am), bm)
+    return (base + scale * z).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        sliding_window: int = 0, scale: float | None = None):
+    """q: (B, H, Sq, d), k/v: (B, H, Sk, d) -> (B, H, Sq, d).
+
+    Positions are aligned at the end: query i has absolute position
+    Sk - Sq + i (the decode/prefill convention)."""
+    Bq, H, Sq, d = q.shape
+    Sk = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(Sq) + (Sk - Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if sliding_window > 0:
+        mask &= k_pos[None, :] > (q_pos[:, None] - sliding_window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

@@ -1,0 +1,34 @@
+"""Production mesh factory (TPU v5e target).
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis carries FDLoRA clients (client == pod slice; DESIGN.md §4).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    devices = jax.devices()[: 512 if multi_pod else 256]
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(shape), axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real local devices (CPU tests / examples)."""
+    import numpy as np
+    n = len(jax.devices())
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()).reshape(n // model, model),
+        ("data", "model"), axis_types=_auto(2))

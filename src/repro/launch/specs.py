@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct input stand-ins + sharding assignment for the dry-run.
+
+``input_specs(cfg, shape)`` returns abstract inputs for every model input —
+weak-type-correct, shardable, zero device allocation. Batch dims are sharded
+over ("pod","data") when divisible, "data" when only that divides, else
+replicated (long_500k has global_batch=1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_axes(mesh: Mesh, global_batch: int) -> Optional[Tuple[str, ...]]:
+    """Largest prefix of (pod, data) whose product divides the batch."""
+    names = [n for n in ("pod", "data") if n in mesh.axis_names]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    chosen = []
+    prod = 1
+    for n in names:
+        if global_batch % (prod * sizes[n]) == 0:
+            chosen.append(n)
+            prod *= sizes[n]
+    return tuple(chosen) or None
+
+
+def train_inputs(cfg: ModelConfig, shape_name: str) -> Dict[str, SDS]:
+    sh = INPUT_SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    out = {"tokens": SDS((B, S), jnp.int32),
+           "loss_mask": SDS((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = SDS((B, cfg.n_patch_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec:
+        out["enc_embeds"] = SDS((B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def train_input_specs(cfg: ModelConfig, mesh: Mesh, shape_name: str):
+    sh = INPUT_SHAPES[shape_name]
+    ba = batch_axes(mesh, sh.global_batch)
+    specs = {"tokens": P(ba, None), "loss_mask": P(ba, None)}
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = P(ba, None, None)
+    if cfg.is_encdec:
+        specs["enc_embeds"] = P(ba, None, None)
+    return specs
+
+
+def decode_inputs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    sh = INPUT_SHAPES[shape_name]
+    B = sh.global_batch
+    return {"tokens": SDS((B, 1), jnp.int32), "pos": SDS((), jnp.int32)}
+
+
+def decode_input_specs(cfg: ModelConfig, mesh: Mesh, shape_name: str):
+    sh = INPUT_SHAPES[shape_name]
+    ba = batch_axes(mesh, sh.global_batch)
+    return {"tokens": P(ba, None), "pos": P()}
+
+
+def abstract_tree(fn, *args, **kw):
+    """Shapes of fn(*args) without running it."""
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def sharding_tree(mesh: Mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree, dropping axes the mesh
+    doesn't have and axes that don't divide (replicate instead)."""
+    axes = set(mesh.axis_names)
+
+    def fix(spec):
+        entries = []
+        for e in spec:
+            names = e if isinstance(e, tuple) else (e,)
+            kept = tuple(n for n in names if n is not None and n in axes)
+            entries.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(fix, spec_tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def pad_spec_to(spec_tree, shape_tree):
+    """Ensure every spec has exactly the leaf's rank (pad with None)."""
+    def fix(spec, sds):
+        t = tuple(spec)
+        if len(t) < len(sds.shape):
+            t = t + (None,) * (len(sds.shape) - len(t))
+        return P(*t[:len(sds.shape)])
+
+    return jax.tree.map(fix, spec_tree, shape_tree,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,68 @@
+"""Family dispatch: one uniform interface over all model families.
+
+``Model.forward(params, batch, adapters)`` where ``batch`` is a dict:
+  * decoder families: {"tokens": (B,S)} (+ "patch_embeds": (B,P,d) for vlm)
+  * encdec:           {"enc_embeds": (B,T,d), "tokens": (B,S)}
+``Model.decode_step(params, cache, tokens, pos, adapters)`` for serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.models import encdec, model as dec
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+
+    # ---- init ------------------------------------------------------------
+    def init(self, rng) -> Params:
+        if self.cfg.is_encdec:
+            return encdec.init_params(rng, self.cfg)
+        return dec.init_params(rng, self.cfg)
+
+    def param_specs(self) -> Params:
+        if self.cfg.is_encdec:
+            return encdec.param_specs(self.cfg)
+        return dec.param_specs(self.cfg)
+
+    # ---- forward ----------------------------------------------------------
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray],
+                adapters: Optional[Params] = None, lora_scale: float = 1.0,
+                last_only: bool = False):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return encdec.forward(params, batch["enc_embeds"], batch["tokens"],
+                                  cfg, adapters, lora_scale)
+        extra = batch.get("patch_embeds") if cfg.family == "vlm" else None
+        return dec.forward(params, batch["tokens"], cfg, adapters, lora_scale,
+                           extra_embeds=extra, last_only=last_only)
+
+    # ---- decode -----------------------------------------------------------
+    def init_decode_cache(self, batch: int, cache_len: int) -> Params:
+        if self.cfg.is_encdec:
+            return encdec.init_decode_cache(self.cfg, batch, cache_len)
+        return dec.init_decode_cache(self.cfg, batch, cache_len)
+
+    def decode_cache_specs(self) -> Params:
+        if self.cfg.is_encdec:
+            return encdec.decode_cache_specs(self.cfg)
+        return dec.decode_cache_specs(self.cfg)
+
+    def decode_step(self, params: Params, cache: Params, tokens, pos,
+                    adapters: Optional[Params] = None, lora_scale: float = 1.0):
+        if self.cfg.is_encdec:
+            return encdec.decode_step(params, cache, tokens, pos, self.cfg,
+                                      adapters, lora_scale)
+        return dec.decode_step(params, cache, tokens, pos, self.cfg,
+                               adapters, lora_scale)
+
+
+def get_model(cfg) -> Model:
+    return Model(cfg)

@@ -1,0 +1,225 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the task spec, the modality frontend (mel-spectrogram + conv feature
+extractor) is a STUB: ``input_specs`` provides precomputed frame embeddings of
+shape (B, encoder_seq_len, d_model). Everything downstream — encoder stack,
+decoder stack with cross-attention, KV-cache decode — is implemented.
+
+Whisper flavour: learned positional embeddings (no RoPE), pre-LayerNorm,
+GELU MLP, tied unembedding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _stack(fn, key, n):
+    ks = jax.random.split(key, n)
+    return jax.vmap(fn)(ks)
+
+
+def init_params(rng, cfg) -> Params:
+    dtype = L.dt(cfg.param_dtype)
+    d = cfg.d_model
+    k = jax.random.split(rng, 8)
+
+    def enc_block(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {"self_attn": L.init_attention(k1, cfg, dtype),
+                "mlp": L.init_mlp(k2, d, cfg.d_ff, cfg.mlp_type, dtype),
+                "norm1": L.init_norm(k3, d, cfg.norm_type, dtype),
+                "norm2": L.init_norm(k4, d, cfg.norm_type, dtype)}
+
+    def dec_block(key):
+        k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+        return {"self_attn": L.init_attention(k1, cfg, dtype),
+                "cross_attn": L.init_attention(k2, cfg, dtype),
+                "mlp": L.init_mlp(k3, d, cfg.d_ff, cfg.mlp_type, dtype),
+                "norm1": L.init_norm(k4, d, cfg.norm_type, dtype),
+                "norm2": L.init_norm(k5, d, cfg.norm_type, dtype),
+                "norm3": L.init_norm(k6, d, cfg.norm_type, dtype)}
+
+    return {
+        "embed": L.init_embed(k[0], cfg.vocab_size, d, dtype),
+        "enc_pos": (jax.random.normal(k[1], (cfg.encoder_seq_len, d)) * 0.02).astype(dtype),
+        "dec_pos": (jax.random.normal(k[2], (cfg.max_seq_len, d)) * 0.02).astype(dtype),
+        "enc_blocks": _stack(enc_block, k[3], cfg.n_encoder_layers),
+        "dec_blocks": _stack(dec_block, k[4], cfg.n_layers),
+        "enc_final_norm": L.init_norm(k[5], d, cfg.norm_type, dtype),
+        "dec_final_norm": L.init_norm(k[6], d, cfg.norm_type, dtype),
+    }
+
+
+def param_specs(cfg) -> Params:
+    from repro.models.model import _add_leading
+    enc = {"self_attn": L.attention_specs(cfg), "mlp": L.mlp_specs(cfg.mlp_type),
+           "norm1": L.norm_specs(cfg.norm_type), "norm2": L.norm_specs(cfg.norm_type)}
+    dec = {"self_attn": L.attention_specs(cfg), "cross_attn": L.attention_specs(cfg),
+           "mlp": L.mlp_specs(cfg.mlp_type),
+           "norm1": L.norm_specs(cfg.norm_type), "norm2": L.norm_specs(cfg.norm_type),
+           "norm3": L.norm_specs(cfg.norm_type)}
+    return {
+        "embed": L.embed_specs(),
+        "enc_pos": P(None, None),
+        "dec_pos": P(None, None),
+        "enc_blocks": _add_leading(enc),
+        "dec_blocks": _add_leading(dec),
+        "enc_final_norm": L.norm_specs(cfg.norm_type),
+        "dec_final_norm": L.norm_specs(cfg.norm_type),
+    }
+
+
+def _ad(adapters, *path):
+    node = adapters
+    for p in path:
+        if node is None:
+            return None
+        node = node.get(p)
+    return node
+
+
+def encode(params: Params, enc_embeds: jnp.ndarray, cfg,
+           adapters: Optional[Params] = None, lora_scale: float = 1.0):
+    """enc_embeds: (B, T_enc, d) stubbed frame embeddings -> (B, T_enc, d)."""
+    dtype = L.dt(cfg.dtype)
+    T = enc_embeds.shape[1]
+    x = enc_embeds.astype(dtype) + params["enc_pos"][None, :T].astype(dtype)
+    positions = jnp.arange(T, dtype=jnp.int32)
+    ad = _ad(adapters, "enc_blocks")
+
+    def body(x, xs):
+        h = L.apply_norm(xs["norm1"], x, cfg.norm_type)
+        out, _ = L.multihead_attention(xs["self_attn"], h, cfg, positions,
+                                       xs.get("__ad_self_attn"), lora_scale,
+                                       causal=False)
+        x = x + out
+        h = L.apply_norm(xs["norm2"], x, cfg.norm_type)
+        x = x + L.apply_mlp(xs["mlp"], h, cfg.mlp_type, xs.get("__ad_mlp"),
+                            lora_scale)
+        return x, None
+
+    xs = dict(params["enc_blocks"])
+    if ad is not None:
+        xs["__ad_self_attn"] = ad["self_attn"]
+        xs["__ad_mlp"] = ad.get("mlp")
+    x, _ = jax.lax.scan(body, x, xs,
+                    unroll=min(cfg.scan_unroll, cfg.n_encoder_layers))
+    return L.apply_norm(params["enc_final_norm"], x, cfg.norm_type)
+
+
+def _cross_kv(block, enc_out, cfg):
+    B, T, _ = enc_out.shape
+    Kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = L.matmul(enc_out, block["cross_attn"]["wk"].astype(enc_out.dtype)).reshape(B, T, Kv, hd)
+    v = L.matmul(enc_out, block["cross_attn"]["wv"].astype(enc_out.dtype)).reshape(B, T, Kv, hd)
+    return k, v
+
+
+def _decoder_stack(params, x, positions, cfg, enc_out=None, cross_kv=None,
+                   adapters=None, lora_scale=1.0, cache=None):
+    """Shared decoder trunk. Either enc_out (train) or cross_kv (decode)."""
+    ad = _ad(adapters, "dec_blocks")
+    xs = dict(params["dec_blocks"])
+    if ad is not None:
+        for n in ("self_attn", "cross_attn", "mlp"):
+            if n in ad:
+                xs["__ad_" + n] = ad[n]
+    if cross_kv is not None:
+        xs["__ck"], xs["__cv"] = cross_kv
+    if cache is not None:
+        xs["__cache"] = cache
+
+    def body(x, xs):
+        h = L.apply_norm(xs["norm1"], x, cfg.norm_type)
+        out, new_cache = L.multihead_attention(
+            xs["self_attn"], h, cfg, positions, xs.get("__ad_self_attn"),
+            lora_scale, kv_cache=xs.get("__cache"))
+        x = x + out
+        h = L.apply_norm(xs["norm2"], x, cfg.norm_type)
+        if cross_kv is not None:
+            ck, cv = xs["__ck"], xs["__cv"]
+        else:
+            ck, cv = _cross_kv(xs, enc_out, cfg)
+        out, _ = L.multihead_attention(
+            xs["cross_attn"], h, cfg, positions, xs.get("__ad_cross_attn"),
+            lora_scale, causal=False, kv_override=(ck.astype(h.dtype), cv.astype(h.dtype)))
+        x = x + out
+        h = L.apply_norm(xs["norm3"], x, cfg.norm_type)
+        x = x + L.apply_mlp(xs["mlp"], h, cfg.mlp_type, xs.get("__ad_mlp"), lora_scale)
+        return x, new_cache
+
+    return jax.lax.scan(body, x, xs,
+                    unroll=min(cfg.scan_unroll, cfg.n_layers))
+
+
+def forward(params: Params, enc_embeds: jnp.ndarray, dec_tokens: jnp.ndarray,
+            cfg, adapters: Optional[Params] = None, lora_scale: float = 1.0
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward: (B,T_enc,d) embeds + (B,S) tokens -> (B,S,V) logits."""
+    dtype = L.dt(cfg.dtype)
+    enc_out = encode(params, enc_embeds, cfg, adapters, lora_scale)
+    S = dec_tokens.shape[1]
+    x = params["embed"].astype(dtype)[dec_tokens] + params["dec_pos"][None, :S].astype(dtype)
+    # + tokens[0,0]*0: defeat constant-folding of the (S, S) causal mask
+    positions = jnp.arange(S, dtype=jnp.int32) + dec_tokens[0, 0] * 0
+    x, _ = _decoder_stack(params, x, positions, cfg, enc_out=enc_out,
+                          adapters=adapters, lora_scale=lora_scale)
+    x = L.apply_norm(params["dec_final_norm"], x, cfg.norm_type)
+    logits = L.matmul(x, params["embed"].T.astype(dtype), out_dtype=jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_decode_cache(cfg, batch: int, cache_len: int) -> Params:
+    """Self-attn KV cache + precomputed cross-attn K/V per decoder layer."""
+    Kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    nL, T = cfg.n_layers, cfg.encoder_seq_len
+    kv = jax.tree.map(lambda *ls: jnp.stack(ls),
+                      *[L.init_kv_cache(cfg, batch, cache_len, jnp.bfloat16)
+                        for _ in range(nL)])
+    return {"self": kv,
+            "cross_k": jnp.zeros((nL, batch, T, Kv, hd), jnp.bfloat16),
+            "cross_v": jnp.zeros((nL, batch, T, Kv, hd), jnp.bfloat16)}
+
+
+def decode_cache_specs(cfg) -> Params:
+    from repro.models.model import _add_leading
+    return {"self": _add_leading(L.kv_cache_specs()),
+            "cross_k": P(None, L.DATA, None, L.MODEL, None),
+            "cross_v": P(None, L.DATA, None, L.MODEL, None)}
+
+
+def prefill_cross(params: Params, enc_embeds: jnp.ndarray, cfg,
+                  adapters=None, lora_scale=1.0):
+    """Run the encoder once and precompute cross K/V for every layer."""
+    enc_out = encode(params, enc_embeds, cfg, adapters, lora_scale)
+
+    def per_layer(block):
+        return _cross_kv(block, enc_out, cfg)
+
+    ck, cv = jax.vmap(per_layer, in_axes=(0,))(params["dec_blocks"])
+    return ck.astype(jnp.bfloat16), cv.astype(jnp.bfloat16)
+
+
+def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg, adapters: Optional[Params] = None,
+                lora_scale: float = 1.0) -> Tuple[jnp.ndarray, Params]:
+    dtype = L.dt(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos % cfg.max_seq_len, 1)[None].astype(dtype)
+    positions = pos[None].astype(jnp.int32)
+    x, new_kv = _decoder_stack(params, x, positions, cfg,
+                               cross_kv=(cache["cross_k"], cache["cross_v"]),
+                               adapters=adapters, lora_scale=lora_scale,
+                               cache=cache["self"])
+    x = L.apply_norm(params["dec_final_norm"], x, cfg.norm_type)
+    logits = L.matmul(x, params["embed"].T.astype(dtype), out_dtype=jnp.float32)
+    return logits, {"self": new_kv, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}

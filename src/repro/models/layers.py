@@ -1,0 +1,332 @@
+"""Shared neural-net primitives (pure-functional, param-dict based).
+
+Conventions
+-----------
+* Parameters are nested dicts of ``jnp.ndarray``; init functions mirror the
+  apply functions. Every init has a matching ``*_specs`` producing a
+  :class:`jax.sharding.PartitionSpec` tree with axes named ``data`` / ``model``
+  (mesh axis names are bound later by the launcher).
+* Linear layers optionally take a LoRA adapter ``(A, B)``; the adapter path is
+  ``y = x@W + (alpha/r) * (x@A)@B`` with the base weight frozen.
+* All matmuls accumulate in fp32 (``preferred_element_type``) and cast back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+# Mesh-axis aliases used in spec trees. The launcher rewrites "model"/"data"
+# to real mesh axes; "None" dims are replicated.
+MODEL = "model"
+DATA = "data"
+
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+
+def dt(name: str):
+    return jnp.dtype(name)
+
+
+def maybe_shard(x: jnp.ndarray, spec: P) -> jnp.ndarray:
+    """with_sharding_constraint that no-ops when tracing without a mesh
+    (CPU smoke tests) or when the spec names axes the mesh lacks."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    axes = set(mesh.axis_names)
+    fixed = []
+    for entry in spec:
+        names = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(n for n in names if n is None or n in axes)
+        kept = tuple(n for n in kept if n is not None)
+        fixed.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def matmul(x, w, *, out_dtype=None):
+    """x @ w with fp32 accumulation."""
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    return y.astype(out_dtype or x.dtype)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray,
+          lora: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+          lora_scale: float = 1.0) -> jnp.ndarray:
+    """Linear layer with optional LoRA adapter.
+
+    ``lora`` is ``(A, B)`` with A: (d_in, r) fp32, B: (r, d_out) fp32.
+    The adapter path always computes in fp32 (adapters are the trainable,
+    numerically sensitive part) and is added to the frozen base output.
+    """
+    y = matmul(x, w.astype(x.dtype))
+    if lora is not None:
+        a, b = lora
+        z = jnp.matmul(x.astype(jnp.float32), a.astype(jnp.float32))
+        z = jnp.matmul(z, b.astype(jnp.float32))
+        y = (y.astype(jnp.float32) + lora_scale * z).astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+def init_norm(key, d: int, norm_type: str, dtype) -> Params:
+    if norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+    if norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), dtype=jnp.float32),
+                "bias": jnp.zeros((d,), dtype=jnp.float32)}
+    if norm_type == "nonparametric":
+        return {}
+    raise ValueError(norm_type)
+
+
+def norm_specs(norm_type: str) -> Params:
+    if norm_type == "rmsnorm":
+        return {"scale": P(None)}
+    if norm_type == "layernorm":
+        return {"scale": P(None), "bias": P(None)}
+    return {}
+
+
+def apply_norm(params: Params, x: jnp.ndarray, norm_type: str,
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        if norm_type == "layernorm":
+            y = y * params["scale"] + params["bias"]
+        # nonparametric (OLMo): no affine params
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA, optional sliding window, optional logit softcap)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype) -> Params:
+    d, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (d, H * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, Kv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, Kv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (H * hd, d)) * s).astype(dtype),
+    }
+
+
+def attention_specs(cfg) -> Params:
+    # Head (output) dim of projections sharded on the model axis; wo sharded
+    # on its input (head) dim. d_model stays replicated -> activations only
+    # need a reduce-scatter/all-reduce at block boundaries.
+    return {"wq": P(None, MODEL), "wk": P(None, MODEL),
+            "wv": P(None, MODEL), "wo": P(MODEL, None)}
+
+
+def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, Kv, hd) -> (B, S, Kv*n_rep, hd)"""
+    if n_rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, hd))
+    return x.reshape(b, s, kv * n_rep, hd)
+
+
+def _attn_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+               sliding_window: int) -> jnp.ndarray:
+    """Boolean mask (..., Sq, Sk): True = attend."""
+    causal = k_pos[None, :] <= q_pos[:, None]
+    if sliding_window > 0:
+        causal &= k_pos[None, :] > (q_pos[:, None] - sliding_window)
+    return causal
+
+
+def multihead_attention(params: Params, x: jnp.ndarray, cfg,
+                        positions: jnp.ndarray,
+                        adapters: Optional[Params] = None,
+                        lora_scale: float = 1.0,
+                        kv_cache: Optional[Params] = None,
+                        causal: bool = True,
+                        kv_override: Optional[Tuple] = None,
+                        use_flash: bool = False):
+    """Attention over x: (B, S, d).
+
+    * training / prefill: ``kv_cache`` is None, causal (+ window) mask.
+    * decode: ``kv_cache`` = {"k","v": (B, S_cache, Kv, hd), "pos": scalar
+      next write offset}; x has S==1. Returns (out, new_cache).
+    * cross-attention (whisper): ``kv_override=(k, v)`` precomputed from the
+      encoder; causal=False.
+    """
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    B, S, _ = x.shape
+    la = (lambda name: (adapters[name]["a"], adapters[name]["b"])
+          if adapters is not None and name in adapters else None)
+
+    q = dense(x, params["wq"], la("wq"), lora_scale).reshape(B, S, H, hd)
+    if kv_override is None:
+        k = dense(x, params["wk"], la("wk"), lora_scale).reshape(B, S, Kv, hd)
+        v = dense(x, params["wv"], la("wv"), lora_scale).reshape(B, S, Kv, hd)
+        if cfg.use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+
+    new_cache = None
+    if kv_cache is not None:
+        # Ring buffer: slot = absolute_position % cache_len. For full
+        # attention the cache is allocated at full context length (no wrap);
+        # for sliding-window archs it is window-sized and wraps.
+        cache_len = kv_cache["k"].shape[1]
+        write_idx = kv_cache["pos"] % cache_len
+        ck = jax.lax.dynamic_update_slice(kv_cache["k"], k.astype(kv_cache["k"].dtype),
+                                          (0, write_idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(kv_cache["v"], v.astype(kv_cache["v"].dtype),
+                                          (0, write_idx, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": kv_cache["pos"] + S}
+        k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+        # Absolute position held by each slot: largest p <= n-1 with
+        # p % cache_len == slot (negative -> slot not written yet).
+        n = kv_cache["pos"] + S  # tokens written after this update
+        slot = jnp.arange(cache_len, dtype=jnp.int32)
+        k_pos = slot + ((n - 1 - slot) // cache_len) * cache_len
+        q_pos = positions
+    else:
+        k_pos = positions
+        q_pos = positions
+
+    scale = hd ** -0.5
+    sm_dtype = dt(getattr(cfg, "attn_softmax_dtype", "float32"))
+    grouped = getattr(cfg, "attn_impl", "repeat") == "grouped" and H != Kv
+
+    if grouped:
+        # §Perf optimization: never materialise the (B,S,H,hd) repeated K/V —
+        # fold the q-heads-per-kv-head group into the einsum instead.
+        G = H // Kv
+        qg = q.reshape(B, S, Kv, G, hd)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                            preferred_element_type=sm_dtype) * scale
+    else:
+        k = repeat_kv(k, H // Kv)
+        v = repeat_kv(v, H // Kv)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                            preferred_element_type=sm_dtype) * scale
+    if cfg.attn_logit_softcap > 0:
+        c = cfg.attn_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    if causal:
+        mask = _attn_mask(q_pos, k_pos, cfg.sliding_window)
+        mask &= (k_pos >= 0)[None, :]  # exclude never-written cache slots
+        neg = jnp.asarray(-1e30 if sm_dtype == jnp.float32 else -3e38 / 10,
+                          sm_dtype)
+        shaped = mask[None, None, None] if grouped else mask[None, None]
+        logits = jnp.where(shaped, logits, neg)
+    probs = jax.nn.softmax(logits.astype(sm_dtype), axis=-1).astype(x.dtype)
+    if grouped:
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+        out = out.reshape(B, S, H * hd)
+    else:
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+        out = out.reshape(B, S, H * hd)
+    out = dense(out, params["wo"], la("wo"), lora_scale)
+    return out, new_cache
+
+
+def init_kv_cache(cfg, batch: int, cache_len: int, dtype) -> Params:
+    Kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, cache_len, Kv, hd), dtype=dtype),
+            "v": jnp.zeros((batch, cache_len, Kv, hd), dtype=dtype),
+            "pos": jnp.zeros((), dtype=jnp.int32)}
+
+
+def kv_cache_specs() -> Params:
+    return {"k": P(DATA, None, MODEL, None), "v": P(DATA, None, MODEL, None),
+            "pos": P()}
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, mlp_type: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    p = {"w_out": (jax.random.normal(ks[2], (ff, d)) * s_out).astype(dtype)}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(ks[0], (d, ff)) * s_in).astype(dtype)
+        p["w_up"] = (jax.random.normal(ks[1], (d, ff)) * s_in).astype(dtype)
+    else:
+        p["w_up"] = (jax.random.normal(ks[1], (d, ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp_specs(mlp_type: str) -> Params:
+    p = {"w_up": P(None, MODEL), "w_out": P(MODEL, None)}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = P(None, MODEL)
+    return p
+
+
+def apply_mlp(params: Params, x: jnp.ndarray, mlp_type: str,
+              adapters: Optional[Params] = None, lora_scale: float = 1.0):
+    la = (lambda name: (adapters[name]["a"], adapters[name]["b"])
+          if adapters is not None and name in adapters else None)
+    if mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if mlp_type == "swiglu" else partial(jax.nn.gelu, approximate=True)
+        g = dense(x, params["w_gate"], la("w_gate"), lora_scale)
+        u = dense(x, params["w_up"], la("w_up"), lora_scale)
+        h = act(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = dense(x, params["w_up"], la("w_up"), lora_scale)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return dense(h, params["w_out"], la("w_out"), lora_scale)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def embed_specs() -> Any:
+    return P(MODEL, None)

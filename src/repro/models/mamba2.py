@@ -1,0 +1,224 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+TPU adaptation (DESIGN.md §2): the SSD "chunked" algorithm is matmul-form —
+intra-chunk attention-like matmuls feed the MXU, inter-chunk recurrence is a
+short ``lax.scan`` over chunk states. Decode keeps an explicit recurrent state
+``h: (B, n_heads, head_dim, d_state)`` so one-token steps are O(1) in seq len
+(this is what makes ``long_500k`` native for SSM/hybrid architectures).
+
+Parameterisation follows the Mamba2 reference: a single ``in_proj`` produces
+(z, x, B, C, dt); depthwise causal conv over (x, B, C); scalar-per-head decay
+A; gated RMSNorm before ``out_proj``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import MODEL, dense
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_d_inner
+    n_h = cfg.ssm_n_heads
+    d_st = cfg.ssm_d_state
+    n_g = cfg.ssm_n_groups
+    conv_dim = d_in + 2 * n_g * d_st
+    proj_dim = 2 * d_in + 2 * n_g * d_st + n_h
+    return d_in, n_h, d_st, n_g, conv_dim, proj_dim
+
+
+def init_mamba(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    d_in, n_h, d_st, n_g, conv_dim, proj_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_dim)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_d_conv, conv_dim)) * 0.1).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_h,), dtype=jnp.float32),
+        "d_skip": jnp.ones((n_h,), dtype=jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype=jnp.float32),
+        "out_proj": (jax.random.normal(ks[2], (d_in, d)) * d_in ** -0.5).astype(dtype),
+    }
+
+
+def mamba_specs(cfg) -> Params:
+    return {
+        "in_proj": P(None, MODEL),
+        "conv_w": P(None, MODEL),
+        "a_log": P(None),
+        "dt_bias": P(None),
+        "d_skip": P(None),
+        "norm_scale": P(MODEL),
+        "out_proj": P(MODEL, None),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in, n_h, d_st, n_g, _, _ = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * n_g * d_st], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d. xbc: (B, S, C), w: (K, C).
+
+    Training: zero left-pad. Decode (S==1): ``state`` is the last K-1 inputs
+    (B, K-1, C); returns updated state.
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), dtype=xbc.dtype)
+        xp = jnp.concatenate([pad, xbc], axis=1)
+        new_state = xp[:, -(K - 1):, :]
+    else:
+        xp = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)
+        new_state = xp[:, -(K - 1):, :]
+    # windowed sum: out[t] = sum_k w[k] * xp[t + k]
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    S = xbc.shape[1]
+    for k in range(K):
+        out = out + xp[:, k:k + S, :].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype), new_state
+
+
+def _gated_norm(x, z, scale, eps=1e-6):
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan (matmul form).
+
+    x:  (B, S, H, P)   inputs per head
+    dt: (B, S, H)      softplus'd timestep (>0)
+    A:  (H,)           negative decay rate (A < 0)
+    Bm: (B, S, G, N)   input->state projection
+    Cm: (B, S, G, N)   state->output projection
+    Returns y: (B, S, H, P), final_state: (B, H, P, N).
+    """
+    Bsz, S, H, Pd = x.shape
+    G = Bm.shape[2]
+    N = Bm.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    f32 = jnp.float32
+    x = x.astype(f32)
+    dt = dt.astype(f32)
+    Bm = jnp.repeat(Bm.astype(f32), rep, axis=2)   # (B,S,H,N)
+    Cm = jnp.repeat(Cm.astype(f32), rep, axis=2)
+
+    def reshape_c(t):
+        return t.reshape((Bsz, nc, chunk) + t.shape[2:])
+
+    xc, dtc, Bc, Cc = map(reshape_c, (x, dt, Bm, Cm))
+
+    # per-step log decay  a_t = A * dt_t  (A<0)
+    la = dtc * A[None, None, None, :]              # (B,nc,c,H)
+    cum = jnp.cumsum(la, axis=2)                   # running within chunk
+    # intra-chunk: y_intra[t] = sum_{s<=t} C_t . B_s x_s dt_s * exp(cum_t - cum_s)
+    # Mask BEFORE the exp: for s > t the exponent is positive-large; exp would
+    # overflow to inf and the masked backward produces 0·inf = NaN.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,t,s,H)
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(causal, diff, -1e30))
+    cb = jnp.einsum("bzthn,bzshn->bztsh", Cc, Bc)  # (B,nc,t,s,H)
+    xdt = xc * dtc[..., None]                      # (B,nc,c,H,P)
+    y_intra = jnp.einsum("bztsh,bzshp->bzthp", cb * decay, xdt)
+
+    # chunk-level states: state_z = sum_s exp(cum_end - cum_s) B_s x_s dt_s
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,c,H)
+    states = jnp.einsum("bzsh,bzshn,bzshp->bzhpn", seg, Bc, xdt)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])        # (B,nc,H)
+
+    # inter-chunk recurrence over nc chunks
+    def step(h, inp):
+        st, cd = inp                               # (B,H,P,N), (B,H)
+        h_prev = h
+        h = h * cd[:, :, None, None] + st
+        return h, h_prev
+
+    h0 = jnp.zeros((Bsz, H, Pd, N), dtype=f32)
+    states_t = jnp.moveaxis(states, 1, 0)          # (nc,B,H,P,N)
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)         # (nc,B,H)
+    h_final, h_prevs = jax.lax.scan(step, h0, (states_t, cd_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)          # (B,nc,H,P,N) state entering chunk
+
+    # contribution of the entering state to each position
+    into = jnp.exp(cum)                            # decay from chunk start to t
+    y_inter = jnp.einsum("bzth,bzthn,bzhpn->bzthp", into, Cc, h_prevs)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pd)
+    return y, h_final
+
+
+def apply_mamba(params: Params, x: jnp.ndarray, cfg,
+                adapters: Optional[Params] = None, lora_scale: float = 1.0,
+                ssm_cache: Optional[Params] = None):
+    """x: (B, S, d) -> (out, new_cache).
+
+    ``ssm_cache`` = {"h": (B,H,P,N), "conv": (B,K-1,conv_dim)} for decode.
+    """
+    B, S, d = x.shape
+    d_in, n_h, d_st, n_g, conv_dim, _ = _dims(cfg)
+    la = (lambda name: (adapters[name]["a"], adapters[name]["b"])
+          if adapters is not None and name in adapters else None)
+
+    zxbcdt = dense(x, params["in_proj"], la("in_proj"), lora_scale)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    conv_state = ssm_cache["conv"] if ssm_cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + n_g * d_st], axis=-1)
+    xs = xs.reshape(B, S, n_h, cfg.ssm_head_dim)
+    Bm = Bm.reshape(B, S, n_g, d_st)
+    Cm = Cm.reshape(B, S, n_g, d_st)
+    A = -jnp.exp(params["a_log"])                  # (H,) negative
+
+    if ssm_cache is None:
+        chunk = min(cfg.ssm_chunk, S)
+        y, h = ssd_chunked(xs, dt, A, Bm, Cm, chunk)
+    else:
+        # single-token recurrent update: h' = h*exp(dt*A) + dt * B x^T
+        h = ssm_cache["h"].astype(jnp.float32)
+        rep = n_h // n_g
+        Bh = jnp.repeat(Bm[:, 0].astype(jnp.float32), rep, axis=1)  # (B,H,N)
+        Ch = jnp.repeat(Cm[:, 0].astype(jnp.float32), rep, axis=1)
+        dt0 = dt[:, 0]                                               # (B,H)
+        decay = jnp.exp(dt0 * A[None, :])                            # (B,H)
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dt0, xs[:, 0].astype(jnp.float32), Bh)
+        h = h * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch)[:, None]              # (B,1,H,P)
+
+    y = y + xs.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = _gated_norm(y, z, params["norm_scale"])
+    out = dense(y, params["out_proj"], la("out_proj"), lora_scale)
+    new_cache = {"h": h.astype(jnp.float32), "conv": new_conv}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch: int) -> Params:
+    d_in, n_h, d_st, n_g, conv_dim, _ = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, n_h, cfg.ssm_head_dim, d_st), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, conv_dim), dtype=jnp.bfloat16),
+    }
+
+
+def ssm_cache_specs() -> Params:
+    from repro.models.layers import DATA
+    return {"h": P(DATA, MODEL, None, None), "conv": P(DATA, None, MODEL)}

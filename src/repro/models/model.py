@@ -1,0 +1,262 @@
+"""Unified decoder-only model covering dense / MoE / SSM / hybrid / VLM.
+
+A model is ``cfg.n_layers`` layers arranged as ``n_periods`` repetitions of
+``cfg.layer_pattern``. Per-period parameters are stacked on a leading axis and
+the period loop is a ``jax.lax.scan`` — this keeps the HLO size independent of
+depth (essential for the 512-device dry-run compiles) and is the idiomatic
+TPU structure for deep stacks.
+
+Public API (all pure functions):
+    init_params(rng, cfg)                 -> params
+    param_specs(cfg)                      -> PartitionSpec tree
+    forward(params, tokens, cfg, ...)     -> (logits, aux_loss)
+    init_decode_cache(cfg, batch, length) -> cache
+    decode_cache_specs(cfg)               -> PartitionSpec tree
+    decode_step(params, cache, tokens, pos, cfg, ...) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import mamba2, moe as moe_lib
+
+Params = Dict[str, Any]
+
+
+def _block_names(cfg):
+    return [f"b{i}" for i in range(len(cfg.layer_pattern))]
+
+
+def _parse(entry: str) -> Tuple[str, str]:
+    mixer, _, mlp = entry.partition("+")
+    return mixer, (mlp or "none")
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, entry: str, cfg, dtype) -> Params:
+    mixer, mlp = _parse(entry)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_norm(k3, cfg.d_model, cfg.norm_type, dtype)}
+    if mixer == "attn":
+        p["mixer"] = L.init_attention(k1, cfg, dtype)
+    else:
+        p["mixer"] = mamba2.init_mamba(k1, cfg, dtype)
+    if mlp == "mlp":
+        p["norm2"] = L.init_norm(k4, cfg.d_model, cfg.norm_type, dtype)
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    elif mlp == "moe":
+        p["norm2"] = L.init_norm(k4, cfg.d_model, cfg.norm_type, dtype)
+        p["mlp"] = moe_lib.init_moe(k2, cfg.d_model, cfg.resolved_d_ff_moe,
+                                    cfg.n_experts, cfg.mlp_type, dtype)
+    return p
+
+
+def _block_specs(entry: str, cfg) -> Params:
+    mixer, mlp = _parse(entry)
+    p: Params = {"norm1": L.norm_specs(cfg.norm_type)}
+    p["mixer"] = (L.attention_specs(cfg) if mixer == "attn"
+                  else mamba2.mamba_specs(cfg))
+    if mlp == "mlp":
+        p["norm2"] = L.norm_specs(cfg.norm_type)
+        p["mlp"] = L.mlp_specs(cfg.mlp_type)
+    elif mlp == "moe":
+        p["norm2"] = L.norm_specs(cfg.norm_type)
+        p["mlp"] = moe_lib.moe_specs(cfg.mlp_type)
+    return p
+
+
+def init_params(rng, cfg) -> Params:
+    dtype = L.dt(cfg.param_dtype)
+    n_blocks = len(cfg.layer_pattern)
+    keys = jax.random.split(rng, n_blocks + 3)
+
+    def stacked(entry, key):
+        ks = jax.random.split(key, cfg.n_periods)
+        return jax.vmap(lambda k: _init_block(k, entry, cfg, dtype))(ks)
+
+    params: Params = {
+        "embed": L.init_embed(keys[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": L.init_norm(keys[-2], cfg.d_model, cfg.norm_type, dtype),
+        "blocks": {name: stacked(entry, keys[i])
+                   for i, (name, entry) in
+                   enumerate(zip(_block_names(cfg), cfg.layer_pattern))},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[-3], (cfg.d_model, cfg.vocab_size)) * 0.02).astype(dtype)
+    return params
+
+
+def _add_leading(spec_tree):
+    """Prepend a replicated period axis to every PartitionSpec leaf."""
+    return jax.tree.map(lambda s: P(*((None,) + tuple(s))), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def param_specs(cfg) -> Params:
+    specs: Params = {
+        "embed": L.embed_specs(),
+        "final_norm": L.norm_specs(cfg.norm_type),
+        "blocks": {name: _add_leading(_block_specs(entry, cfg))
+                   for name, entry in zip(_block_names(cfg), cfg.layer_pattern)},
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, L.MODEL)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_block(entry: str, bp: Params, x, cfg, positions,
+                 adapters=None, lora_scale=1.0, cache=None):
+    """One layer. Returns (x, new_cache, aux)."""
+    mixer, mlp = _parse(entry)
+    ad = adapters or {}
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(bp["norm1"], x, cfg.norm_type)
+    if mixer == "attn":
+        out, new_mix_cache = L.multihead_attention(
+            bp["mixer"], h, cfg, positions, ad.get("mixer"), lora_scale,
+            kv_cache=cache)
+    else:
+        out, new_mix_cache = mamba2.apply_mamba(
+            bp["mixer"], h, cfg, ad.get("mixer"), lora_scale, ssm_cache=cache)
+    x = x + out
+    if mlp != "none":
+        h = L.apply_norm(bp["norm2"], x, cfg.norm_type)
+        if mlp == "mlp":
+            out = L.apply_mlp(bp["mlp"], h, cfg.mlp_type, ad.get("mlp"), lora_scale)
+        else:
+            out, aux = moe_lib.apply_moe(bp["mlp"], h, cfg, ad.get("mlp"), lora_scale)
+        x = x + out
+    return x, new_mix_cache, aux
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg,
+            adapters: Optional[Params] = None, lora_scale: float = 1.0,
+            extra_embeds: Optional[jnp.ndarray] = None,
+            last_only: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S_text) int32. extra_embeds: (B, P, d) prepended (VLM).
+
+    Returns (logits (B, S, V), aux_loss scalar)."""
+    dtype = L.dt(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    if cfg.family == "dense" and cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)  # gemma-style scaling
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(dtype), x], axis=1)
+    B, S, _ = x.shape
+    x = L.maybe_shard(x, P(("pod", "data"), None, None))
+    # data-dependence defeats XLA constant-folding of the (S, S) causal mask
+    # (a 1 GiB bool fold at S=32k that dominates compile time otherwise)
+    positions = jnp.arange(S, dtype=jnp.int32) + tokens[0, 0] * 0
+
+    block_names = _block_names(cfg)
+    ad_blocks = (adapters or {}).get("blocks", {})
+
+    def period_body(carry, xs):
+        x, aux = carry
+        for name in block_names:
+            entry = cfg.layer_pattern[block_names.index(name)]
+            x, _, a = _apply_block(entry, xs[name], x, cfg, positions,
+                                   xs.get("__ad_" + name), lora_scale)
+            aux = aux + a
+        return (x, aux), None
+
+    xs = dict(params["blocks"])
+    for name in block_names:
+        if name in ad_blocks:
+            xs["__ad_" + name] = ad_blocks[name]
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(period_body, policy=policy)
+    else:
+        body = period_body
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs,
+                           unroll=min(cfg.scan_unroll, cfg.n_periods))
+
+    if last_only:  # serving prefill: unembed only the final position
+        x = x[:, -1:]
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_type)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = L.matmul(x, head.astype(dtype), out_dtype=jnp.float32)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg, batch: int, cache_len: int) -> Params:
+    """cache_len: full context for dense attention, window for SW archs."""
+    cache: Params = {"blocks": {}}
+    for name, entry in zip(_block_names(cfg), cfg.layer_pattern):
+        mixer, _ = _parse(entry)
+        if mixer == "attn":
+            eff = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+            one = lambda: L.init_kv_cache(cfg, batch, eff, jnp.bfloat16)
+        else:
+            one = lambda: mamba2.init_ssm_cache(cfg, batch)
+        cache["blocks"][name] = jax.tree.map(
+            lambda *ls: jnp.stack(ls), *[one() for _ in range(cfg.n_periods)])
+    return cache
+
+
+def decode_cache_specs(cfg) -> Params:
+    specs: Params = {"blocks": {}}
+    for name, entry in zip(_block_names(cfg), cfg.layer_pattern):
+        mixer, _ = _parse(entry)
+        base = L.kv_cache_specs() if mixer == "attn" else mamba2.ssm_cache_specs()
+        specs["blocks"][name] = _add_leading(base)
+    return specs
+
+
+def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg,
+                adapters: Optional[Params] = None, lora_scale: float = 1.0
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (tokens
+    already in the cache). Returns (logits (B, 1, V), new cache)."""
+    dtype = L.dt(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    if cfg.family == "dense" and cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    positions = pos[None].astype(jnp.int32) if pos.ndim == 0 else pos.astype(jnp.int32)
+
+    block_names = _block_names(cfg)
+    ad_blocks = (adapters or {}).get("blocks", {})
+
+    def period_body(x, xs):
+        new_caches = {}
+        for name in block_names:
+            entry = cfg.layer_pattern[block_names.index(name)]
+            x, nc, _ = _apply_block(entry, xs[name], x, cfg, positions,
+                                    xs.get("__ad_" + name), lora_scale,
+                                    cache=xs["__cache_" + name])
+            new_caches[name] = nc
+        return x, new_caches
+
+    xs = dict(params["blocks"])
+    for name in block_names:
+        xs["__cache_" + name] = cache["blocks"][name]
+        if name in ad_blocks:
+            xs["__ad_" + name] = ad_blocks[name]
+    x, new_caches = jax.lax.scan(period_body, x, xs,
+                             unroll=min(cfg.scan_unroll, cfg.n_periods))
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_type)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = L.matmul(x, head.astype(dtype), out_dtype=jnp.float32)
+    return logits, {"blocks": new_caches}

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+TPU adaptation notes (see DESIGN.md §2): instead of the GShard one-hot
+dispatch einsum — whose ``(tokens, E, C)`` combine tensor is intractable for
+fine-grained MoE (DBRX E=16 is fine, Kimi-K2 E=384 is not) — we use a
+sort-based dispatch:
+
+  1. router -> top-k expert ids + weights per token,
+  2. flatten the (T*k) token copies, sort by expert id,
+  3. compute each copy's slot within its expert via a cumulative count,
+  4. scatter copies into a padded ``(E, C, d)`` buffer (overflow drops),
+  5. batched expert FFN ``(E, C, d) @ (E, d, ff)`` — expert-parallel on the
+     ``model`` mesh axis,
+  6. gather outputs back and combine with router weights.
+
+The buffer is the only E-proportional tensor and is sharded on E. Under pjit
+this lowers to all-to-all-flavoured collectives between the token (data)
+sharding and the expert (model) sharding — exactly the communication pattern
+the roofline analysis tracks for MoE architectures.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import DATA, MODEL, matmul, maybe_shard
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, d: int, ff: int, n_experts: int, mlp_type: str, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, n_experts)) * s_in).astype(jnp.float32),
+        "w_up": (jax.random.normal(ks[1], (n_experts, d, ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (n_experts, ff, d)) * s_out).astype(dtype),
+    }
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(ks[3], (n_experts, d, ff)) * s_in).astype(dtype)
+    return p
+
+
+def moe_specs(mlp_type: str) -> Params:
+    p = {"router": P(None, None),
+         "w_up": P(MODEL, None, None),
+         "w_out": P(MODEL, None, None)}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = P(MODEL, None, None)
+    return p
+
+
+def _top_k_routing(router_logits: jnp.ndarray, k: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(T, E) -> weights (T, k), ids (T, k), aux load-balance loss."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)
+    weights = weights / jnp.clip(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss.
+    E = router_logits.shape[-1]
+    density = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * (E ** 1)
+    return weights, ids, aux
+
+
+def apply_moe(params: Params, x: jnp.ndarray, cfg,
+              adapters: Optional[Params] = None, lora_scale: float = 1.0
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    ``adapters`` may contain a "router" LoRA (the only MoE sub-module that
+    receives adapters by default; per-expert adapters would defeat PEFT).
+    """
+    B, S, d = x.shape
+    E = cfg.n_experts
+    k = cfg.n_experts_per_tok
+    ff = cfg.resolved_d_ff_moe
+    T = B * S
+    # capacity per expert, rounded up to a multiple of 64 so the slot dim
+    # shards evenly over the data axis (and tiles the MXU).
+    cap = int(max(k, round(T * k / E * cfg.moe_capacity_factor)))
+    cap = -(-cap // 64) * 64
+
+    xf = x.reshape(T, d)
+    logits = matmul(xf, params["router"].astype(xf.dtype), out_dtype=jnp.float32)
+    if adapters is not None and "router" in adapters:
+        a, b = adapters["router"]["a"], adapters["router"]["b"]
+        logits = logits + lora_scale * (xf.astype(jnp.float32) @ a) @ b
+    weights, ids, aux = _top_k_routing(logits, k)          # (T,k)
+
+    # ---- sort-based dispatch ------------------------------------------
+    flat_ids = ids.reshape(-1)                              # (T*k,)
+    order = jnp.argsort(flat_ids)                           # stable
+    sorted_ids = flat_ids[order]
+    # slot of each sorted copy within its expert group
+    same = jnp.cumsum(jnp.ones_like(sorted_ids)) - 1
+    seg_start = jnp.searchsorted(sorted_ids, jnp.arange(E, dtype=sorted_ids.dtype))
+    slot_sorted = same - seg_start[sorted_ids]
+    # undo the sort to get (T*k,) slots aligned with flat_ids
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(T * k))
+    slot = slot_sorted[inv]
+
+    token_idx = jnp.repeat(jnp.arange(T), k)                # (T*k,)
+    keep = slot < cap
+    dest = jnp.where(keep, flat_ids * cap + slot, E * cap)  # overflow -> dropped row
+
+    buf = jnp.zeros((E * cap + 1, d), dtype=x.dtype)
+    buf = buf.at[dest].set(xf[token_idx], mode="drop")
+    buf = maybe_shard(buf[: E * cap].reshape(E, cap, d), _buffer_spec())
+
+    # ---- expert FFN (batched over E; expert-parallel on `model`) -------
+    if "w_gate" in params:
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+        h = (act(g) * u).astype(x.dtype)
+    else:
+        u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+        h = jax.nn.gelu(u).astype(x.dtype)
+    y_buf = jnp.einsum("ecf,efd->ecd", h, params["w_out"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    y_buf = maybe_shard(y_buf, _buffer_spec())
+
+    # ---- gather back + weighted combine --------------------------------
+    y_flat = jnp.concatenate(
+        [y_buf.reshape(E * cap, d), jnp.zeros((1, d), dtype=x.dtype)], axis=0)
+    y_copies = y_flat[dest]                                 # (T*k, d); dropped -> 0
+    w = (weights.reshape(-1) * keep.astype(jnp.float32))[:, None]
+    out = jnp.zeros((T, d), dtype=jnp.float32)
+    out = out.at[token_idx].add(y_copies.astype(jnp.float32) * w)
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _buffer_spec():
+    # Experts over `model` (expert parallelism), slots over `data`: without
+    # the data-axis constraint the SPMD partitioner replicates the expert
+    # GEMMs across every data row — 16x redundant compute on the production
+    # mesh (measured during bring-up; EXPERIMENTS.md §Perf, MoE iteration 0).
+    return P(MODEL, DATA, None)

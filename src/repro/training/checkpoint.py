@@ -1,0 +1,69 @@
+"""Checkpointing: nested pytrees <-> flat .npz archives.
+
+No orbax offline; npz round-trips every dtype we use (bf16 stored via
+uint16 view). Layout: keys are '/'-joined tree paths; a sidecar JSON holds
+dtypes and the tree structure for exact restoration.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]) -> Params:
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        node = tree
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def save_checkpoint(path: str, tree: Params, metadata: Dict = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        v = np.asarray(v)
+        dtypes[k] = str(v.dtype)
+        if v.dtype == jnp.bfloat16:
+            v = v.view(np.uint16)
+        arrays[k.replace("/", "\x1f")] = v
+    np.savez(path, **arrays)
+    with open(path + ".meta.json", "w") as f:
+        json.dump({"dtypes": dtypes, "metadata": metadata or {}}, f)
+
+
+def load_checkpoint(path: str) -> Params:
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat = {}
+    for key in data.files:
+        k = key.replace("\x1f", "/")
+        v = data[key]
+        if meta["dtypes"][k] == "bfloat16":
+            v = v.view(jnp.bfloat16)
+        flat[k] = jnp.asarray(v)
+    return _unflatten(flat)

@@ -1,0 +1,112 @@
+"""Optimizers (no optax dependency): AdamW, SGD(+Nesterov), schedules.
+
+All optimizers are pure pytree transforms:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Optional[Params]], Tuple[Params, Any]]
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# AdamW — the paper's InnerOpt (PagedAdamW32bit on GPU; paging is a CUDA
+# memory workaround, plain fp32-state AdamW is the TPU equivalent).
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float = 2e-4, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+          ) -> Optimizer:
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        step_lr = lr * (schedule(count) if schedule is not None else 1.0)
+
+        def upd(m, v, p):
+            mhat = m / c1
+            vhat = v / c2
+            u = -step_lr * (mhat / (jnp.sqrt(vhat) + eps)
+                            + weight_decay * p.astype(jnp.float32))
+            return u.astype(jnp.float32)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD with (Nesterov) momentum — the paper's OuterOpt (Sutskever et al.),
+# also the inner optimizer of the "large-batch DP" degenerate case.
+# ---------------------------------------------------------------------------
+
+def sgd(lr: float = 1e-3, momentum: float = 0.0, nesterov: bool = False
+        ) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads), state
+        v = jax.tree.map(lambda v, g: momentum * v + g.astype(jnp.float32),
+                         state["v"], grads)
+        if nesterov:
+            updates = jax.tree.map(lambda g, vn: -lr * (g.astype(jnp.float32)
+                                                        + momentum * vn), grads, v)
+        else:
+            updates = jax.tree.map(lambda vn: -lr * vn, v)
+        return updates, {"v": v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Gradient utilities
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Params:
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def cosine_schedule(warmup: int, total: int, floor: float = 0.1):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = c / jnp.maximum(warmup, 1)
+        prog = jnp.clip((c - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(c < warmup, warm, cos)
+    return fn

@@ -1,0 +1,144 @@
+"""Train/eval step factories.
+
+Three step flavours:
+  * full fine-tuning        (baseline; optimizer over all params)
+  * LoRA-only SFT           (the paper's setting: base frozen, adapters train)
+  * dual-LoRA fused eval    (AdaFusion objective evaluation)
+
+Steps are pure functions suitable for jit/pjit; the federated layer composes
+them (inner steps) with outer optimization at the adapter-tree level.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import lora_scale as _lora_scale
+from repro.training.optimizers import Optimizer, apply_updates, clip_by_global_norm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def _shift_for_family(cfg, logits: jnp.ndarray, batch: Dict[str, jnp.ndarray]):
+    """Return (logits_t, targets, mask) aligned for next-token prediction."""
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":
+        Pn = cfg.n_patch_tokens
+        lg = logits[:, Pn:Pn + tokens.shape[1] - 1]
+    else:
+        lg = logits[:, :-1]
+    tg = tokens[:, 1:]
+    mask = batch.get("loss_mask")
+    mask = (mask[:, 1:] if mask is not None else jnp.ones_like(tg)).astype(jnp.float32)
+    mask = mask * (tg >= 0)
+    return lg, jnp.maximum(tg, 0), mask
+
+
+def cross_entropy(cfg, logits: jnp.ndarray, batch) -> Tuple[jnp.ndarray, Dict]:
+    lg, tg, mask = _shift_for_family(cfg, logits, batch)
+    logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tg[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((jnp.argmax(lg, -1) == tg) * mask).sum() / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# LoRA-only SFT step (paper-faithful inner step)
+# ---------------------------------------------------------------------------
+
+def make_lora_loss_fn(model, cfg) -> Callable:
+    scale = _lora_scale(cfg)
+
+    def loss_fn(adapters: Params, params: Params, batch) -> Tuple[jnp.ndarray, Dict]:
+        logits, aux = model.forward(params, batch, adapters=adapters,
+                                    lora_scale=scale)
+        loss, metrics = cross_entropy(cfg, logits, batch)
+        total = loss + cfg.router_aux_loss_coef * aux
+        metrics = dict(metrics, aux_loss=aux)
+        return total, metrics
+
+    return loss_fn
+
+
+def make_lora_train_step(model, cfg, opt: Optimizer,
+                         clip_norm: float = 1.0) -> Callable:
+    """step(params, adapters, opt_state, batch) -> (adapters, opt_state, metrics).
+
+    ``params`` (the frozen base) receives no gradient — it is a closed-over
+    operand, which under pjit means zero optimizer/grad memory for the base.
+    """
+    loss_fn = make_lora_loss_fn(model, cfg)
+
+    def step(params, adapters, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            adapters, params, batch)
+        if clip_norm:
+            grads = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, adapters)
+        adapters = apply_updates(adapters, updates)
+        return adapters, opt_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Full fine-tuning step (cost/ablation baseline)
+# ---------------------------------------------------------------------------
+
+def make_full_train_step(model, cfg, opt: Optimizer,
+                         clip_norm: float = 1.0) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        loss, metrics = cross_entropy(cfg, logits, batch)
+        return loss + cfg.router_aux_loss_coef * aux, metrics
+
+    def step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        if clip_norm:
+            grads = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+def make_eval_fn(model, cfg) -> Callable:
+    """eval(params, adapters, batch) -> metrics (jit-able)."""
+    scale = _lora_scale(cfg)
+
+    def evaluate(params, adapters, batch):
+        logits, _ = model.forward(params, batch, adapters=adapters,
+                                  lora_scale=scale)
+        _, metrics = cross_entropy(cfg, logits, batch)
+        return metrics
+
+    return evaluate
+
+
+def make_fused_eval_fn(model, cfg) -> Callable:
+    """eval(params, ad_p, ad_s, w, batch) -> CE loss — the AdaFusion objective
+    (Eq. 8 without the L1 term, which the black-box wrapper adds)."""
+    from repro.core.dual_lora import merge
+    scale = _lora_scale(cfg)
+
+    def evaluate(params, ad_p, ad_s, w, batch):
+        fused = merge(ad_p, ad_s, w)
+        logits, _ = model.forward(params, batch, adapters=fused,
+                                  lora_scale=scale)
+        loss, metrics = cross_entropy(cfg, logits, batch)
+        return loss, metrics
+
+    return evaluate

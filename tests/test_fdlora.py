@@ -1,0 +1,132 @@
+"""FDLoRA Algorithm 1: stages, degenerate-case equivalences, fusion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense
+from repro.core.dual_lora import check_same_rank, merge
+from repro.core.fdlora import FDLoRAConfig, FDLoRATrainer
+from repro.core.lora import init_adapters, tree_mean, tree_sub
+from repro.core.outer_opt import make_outer_optimizer, outer_step, pseudo_gradient
+from repro.data.pipeline import SFTBatcher
+from repro.data.synthetic import gen_log_dataset
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.api import get_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_dense(vocab_size=300)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tok = ByteTokenizer()
+    batchers = [SFTBatcher(gen_log_dataset(rng, 24, i), tok, 64, 4, seed=i)
+                for i in range(3)]
+    return cfg, model, params, batchers
+
+
+def test_full_algorithm1_runs(setup):
+    cfg, model, params, batchers = setup
+    fed = FDLoRAConfig(n_clients=3, rounds=2, inner_steps=2, sync_every=1,
+                       stage1_steps=2, fusion_steps=2, few_shot_k=4)
+    tr = FDLoRATrainer(model, cfg, fed, params)
+    clients = tr.fit(batchers)
+    assert len(clients) == 3
+    for c in clients:
+        assert c.fusion_weights.shape == (2,)
+        fused = tr.fused_adapters(c)
+        assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(fused))
+    # communication accounting: up ≈ down, > 0
+    assert clients[0].comm_bytes_up > 0 and clients[0].comm_bytes_down > 0
+
+
+def test_eq6_global_init_is_client_mean(setup):
+    cfg, model, params, batchers = setup
+    fed = FDLoRAConfig(n_clients=3, rounds=1, stage1_steps=1, inner_steps=1)
+    tr = FDLoRATrainer(model, cfg, fed, params)
+    clients = tr.stage1(batchers)
+    mean = tree_mean([c.personalized for c in clients])
+    for a, b in zip(jax.tree.leaves(tr.theta_s), jax.tree.leaves(mean)):
+        assert jnp.allclose(a, b)
+
+
+def test_fedavg_degenerate_case():
+    """OuterOpt=SGD(lr=1, m=0) reduces the outer step to plain averaging."""
+    cfg = tiny_dense()
+    t0 = init_adapters(jax.random.PRNGKey(0), cfg)
+    clients = [jax.tree.map(lambda x: x + i * 0.1, t0) for i in (1, 2, 3)]
+    opt = make_outer_optimizer("fedavg")
+    new, _, delta = outer_step(opt, t0, opt.init(t0), clients)
+    expect = tree_mean(clients)
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_pseudo_gradient_direction():
+    cfg = tiny_dense()
+    t0 = init_adapters(jax.random.PRNGKey(0), cfg)
+    moved = jax.tree.map(lambda x: x + 1.0, t0)
+    delta = pseudo_gradient(t0, [moved, moved])
+    for l in jax.tree.leaves(delta):
+        np.testing.assert_allclose(np.asarray(l), -1.0, atol=1e-6)
+
+
+def test_nesterov_outer_momentum_accumulates():
+    cfg = tiny_dense()
+    t0 = init_adapters(jax.random.PRNGKey(0), cfg)
+    opt = make_outer_optimizer("nesterov", lr=0.1, momentum=0.9)
+    st = opt.init(t0)
+    g = jax.tree.map(jnp.ones_like, t0)
+    u1, st = opt.update(g, st, t0)
+    u2, st = opt.update(g, st, t0)
+    # second step is larger in magnitude (momentum)
+    n1 = sum(float(jnp.abs(l).sum()) for l in jax.tree.leaves(u1))
+    n2 = sum(float(jnp.abs(l).sum()) for l in jax.tree.leaves(u2))
+    assert n2 > n1
+
+
+def test_merge_eq7_linearity():
+    cfg = tiny_dense()
+    p = init_adapters(jax.random.PRNGKey(1), cfg)
+    s = init_adapters(jax.random.PRNGKey(2), cfg)
+    check_same_rank(p, s)
+    m = merge(p, s, jnp.array([1.0, 0.0]))
+    for a, b in zip(jax.tree.leaves(m), jax.tree.leaves(p)):
+        assert jnp.allclose(a, b)
+    m2 = merge(p, s, jnp.array([0.5, 0.5]))
+    mean = tree_mean([p, s])
+    for a, b in zip(jax.tree.leaves(m2), jax.tree.leaves(mean)):
+        assert jnp.allclose(a, b)
+
+
+def test_rank_mismatch_rejected():
+    cfg = tiny_dense()
+    p = init_adapters(jax.random.PRNGKey(1), cfg, rank=4)
+    s = init_adapters(jax.random.PRNGKey(2), cfg, rank=8)
+    with pytest.raises(ValueError):
+        check_same_rank(p, s)
+
+
+def test_sync_every_h_rounds(setup):
+    """H-sync (lines 13-15): with H=1 personalized tracks the global copy."""
+    cfg, model, params, batchers = setup
+    fed = FDLoRAConfig(n_clients=3, rounds=1, inner_steps=1, sync_every=1,
+                       stage1_steps=1)
+    tr = FDLoRATrainer(model, cfg, fed, params)
+    clients = tr.stage1(batchers)
+    tr.stage2_round(1, clients, batchers)
+    for c in clients:
+        for a, b in zip(jax.tree.leaves(c.personalized),
+                        jax.tree.leaves(c.global_copy)):
+            assert jnp.allclose(a, b)
+    # and with H=0 (∞) it must NOT track
+    fed2 = FDLoRAConfig(n_clients=3, rounds=1, inner_steps=1, sync_every=0,
+                        stage1_steps=1)
+    tr2 = FDLoRATrainer(model, cfg, fed2, params)
+    clients2 = tr2.stage1(batchers)
+    before = jax.tree.leaves(clients2[0].personalized)
+    tr2.stage2_round(1, clients2, batchers)
+    after = jax.tree.leaves(clients2[0].personalized)
+    assert all(jnp.allclose(a, b) for a, b in zip(before, after))

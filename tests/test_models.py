@@ -1,0 +1,179 @@
+"""Model-zoo behaviour: forwards, LoRA zero-init, decode consistency."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import rand_batch, tiny_dense, tiny_moe, tiny_ssm
+from repro.configs.base import ModelConfig
+from repro.core.lora import init_adapters, lora_scale
+from repro.models.api import get_model
+
+FAMILIES = {
+    "dense": tiny_dense(),
+    "dense_sw": tiny_dense(name="sw", sliding_window=6),
+    "moe": tiny_moe(),
+    "ssm": tiny_ssm(),
+    "hybrid": tiny_dense(
+        name="hy", family="hybrid",
+        layer_pattern=("mamba+mlp", "mamba+moe", "attn+mlp", "mamba+moe"),
+        n_layers=4, n_experts=4, n_experts_per_tok=2, ssm_d_state=16,
+        ssm_head_dim=16, ssm_chunk=8),
+    "vlm": tiny_dense(name="vlm", family="vlm", n_patch_tokens=8),
+    "encdec": tiny_dense(
+        name="ed", family="encdec", n_kv_heads=4, norm_type="layernorm",
+        mlp_type="gelu", use_rope=False, tie_embeddings=True,
+        n_encoder_layers=2, encoder_seq_len=24,
+        lora_targets=("wq", "wv", "w_up", "w_out")),
+}
+
+
+def _batch_for(cfg, B=2, S=16):
+    b = rand_batch(cfg, B, S)
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(5), (B, cfg.n_patch_tokens, cfg.d_model))
+    if cfg.is_encdec:
+        b["enc_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(6), (B, cfg.encoder_seq_len, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_forward_shapes_and_finite(fam):
+    cfg = FAMILIES[fam]
+    m = get_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    b = _batch_for(cfg)
+    logits, aux = m.forward(p, b)
+    S = b["tokens"].shape[1] + (cfg.n_patch_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_lora_zero_init_is_identity(fam):
+    cfg = FAMILIES[fam]
+    m = get_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    b = _batch_for(cfg)
+    base, _ = m.forward(p, b)
+    ad = init_adapters(jax.random.PRNGKey(1), cfg)
+    with_ad, _ = m.forward(p, b, adapters=ad, lora_scale=lora_scale(cfg))
+    assert jnp.allclose(base, with_ad, atol=1e-4)
+
+
+@pytest.mark.parametrize("fam", ["dense", "dense_sw", "ssm", "hybrid"])
+def test_decode_matches_forward(fam):
+    cfg = FAMILIES[fam]
+    m = get_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    b = _batch_for(cfg, B, S)
+    full, _ = m.forward(p, b)
+    cache = m.init_decode_cache(B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = m.decode_step(p, cache, b["tokens"][:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    assert jnp.max(jnp.abs(dec - full)) < 0.02  # bf16 attention tolerance
+
+
+def test_nonparametric_norm_has_no_params():
+    cfg = tiny_dense(norm_type="nonparametric", tie_embeddings=True)
+    m = get_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    assert p["final_norm"] == {}
+    logits, _ = m.forward(p, rand_batch(cfg))
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_gqa_repeat_consistency():
+    """MQA (kv=1) and MHA (kv=H) both run and differ from each other."""
+    out = {}
+    for kv in (1, 4):
+        cfg = tiny_dense(name=f"kv{kv}", n_kv_heads=kv)
+        m = get_model(cfg)
+        p = m.init(jax.random.PRNGKey(0))
+        out[kv], _ = m.forward(p, rand_batch(cfg))
+    assert out[1].shape == out[4].shape
+
+
+def test_moe_aux_loss_positive_and_capacity_drop():
+    cfg = tiny_moe(moe_capacity_factor=0.25)  # force drops
+    m = get_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    logits, aux = m.forward(p, rand_batch(cfg, B=2, S=32))
+    assert float(aux) > 0
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_sliding_window_changes_output():
+    b = rand_batch(tiny_dense(), B=1, S=32)
+    full, _ = get_model(tiny_dense()).forward(
+        get_model(tiny_dense()).init(jax.random.PRNGKey(0)), b)
+    cfgw = tiny_dense(name="w", sliding_window=4)
+    win, _ = get_model(cfgw).forward(
+        get_model(cfgw).init(jax.random.PRNGKey(0)), b)
+    assert not jnp.allclose(full, win, atol=1e-3)
+
+
+def test_grouped_attention_matches_repeat():
+    """§Perf knob: attn_impl=grouped is numerically identical (fp32)."""
+    cfg1 = tiny_dense(dtype="float32", param_dtype="float32")
+    cfg2 = cfg1.with_overrides(attn_impl="grouped")
+    b = rand_batch(cfg1, 2, 16)
+    p = get_model(cfg1).init(jax.random.PRNGKey(0))
+    l1, _ = get_model(cfg1).forward(p, b)
+    l2, _ = get_model(cfg2).forward(p, b)
+    assert jnp.max(jnp.abs(l1 - l2)) < 1e-5
+
+
+def test_bf16_softmax_close_to_fp32():
+    cfg1 = tiny_dense(dtype="float32", param_dtype="float32")
+    cfg2 = cfg1.with_overrides(attn_softmax_dtype="bfloat16")
+    b = rand_batch(cfg1, 2, 16)
+    p = get_model(cfg1).init(jax.random.PRNGKey(0))
+    l1, _ = get_model(cfg1).forward(p, b)
+    l2, _ = get_model(cfg2).forward(p, b)
+    assert jnp.max(jnp.abs(l1 - l2)) < 0.05
+
+
+def test_remat_policies_same_value_and_grad():
+    import repro.training.train_step as ts
+    from repro.core.lora import init_adapters, lora_scale
+    cfgs = [tiny_dense(remat=True),
+            tiny_dense(remat=True, remat_policy="dots"),
+            tiny_dense(remat=False)]
+    b = rand_batch(cfgs[0], 2, 16)
+    outs = []
+    for cfg in cfgs:
+        m = get_model(cfg)
+        p = m.init(jax.random.PRNGKey(0))
+        ad = init_adapters(jax.random.PRNGKey(1), cfg)
+        loss_fn = ts.make_lora_loss_fn(m, cfg)
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(ad, p, b)
+        outs.append((float(l), g))
+    assert abs(outs[0][0] - outs[1][0]) < 1e-4
+    assert abs(outs[0][0] - outs[2][0]) < 1e-4
+    for a, b2 in zip(jax.tree.leaves(outs[0][1]), jax.tree.leaves(outs[2][1])):
+        assert jnp.allclose(a, b2, atol=1e-3)
+
+
+def test_whisper_prefill_cross_matches_forward():
+    cfg = FAMILIES["encdec"]
+    m = get_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    b = _batch_for(cfg, 2, 8)
+    full, _ = m.forward(p, b)
+    from repro.models.encdec import prefill_cross
+    cache = m.init_decode_cache(2, 8)
+    ck, cv = prefill_cross(p, b["enc_embeds"], cfg)
+    cache["cross_k"], cache["cross_v"] = ck, cv
+    outs = []
+    for t in range(8):
+        lg, cache = m.decode_step(p, cache, b["tokens"][:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    assert jnp.max(jnp.abs(dec - full)) < 0.05

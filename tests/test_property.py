@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.roofline import _shape_bytes, parse_collectives
+from repro.core import fusion as fusion_lib
+from repro.core.lora import tree_add, tree_mean, tree_scale, tree_sub
+from repro.data.partition import dirichlet_partition, train_test_split
+from repro.data.synthetic import Example, gen_log_dataset, gen_medical_dataset
+from repro.data.tokenizer import ByteTokenizer, pad_batch
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer
+# ---------------------------------------------------------------------------
+
+@given(st.text(alphabet=st.characters(codec="utf-8"), max_size=200))
+@settings(**SETTINGS)
+def test_tokenizer_roundtrip(text):
+    tok = ByteTokenizer()
+    ids = tok.encode(text, add_bos=True, add_eos=True)
+    assert ids[0] == tok.bos_id and ids[-1] == tok.eos_id
+    assert tok.decode(ids) == text
+
+
+@given(st.lists(st.lists(st.integers(0, 255), min_size=1, max_size=30),
+                min_size=1, max_size=8),
+       st.integers(8, 40))
+@settings(**SETTINGS)
+def test_pad_batch_invariants(seqs, max_len):
+    toks, mask = pad_batch(seqs, max_len)
+    assert toks.shape == (len(seqs), max_len) == mask.shape
+    for i, s in enumerate(seqs):
+        n = min(len(s), max_len)
+        assert (toks[i, :n] == np.asarray(s[:n])).all()
+        assert mask[i, :n].all()
+        assert not mask[i, n:].any()
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet partition
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 8), st.floats(0.05, 10.0), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_dirichlet_partition_conserves_and_covers(n_clients, alpha, seed):
+    rng = np.random.default_rng(seed)
+    data = gen_log_dataset(rng, 60, 0) + gen_log_dataset(rng, 60, 1)
+    parts = dirichlet_partition(data, n_clients, alpha, rng, min_per_client=2)
+    assert len(parts) == n_clients
+    assert all(len(p) >= 2 for p in parts)
+    # without the min-fill the counts conserve exactly; with it, >=.
+    assert sum(len(p) for p in parts) >= len(data)
+
+
+@given(st.floats(0.1, 0.5), st.integers(0, 100))
+@settings(**SETTINGS)
+def test_train_test_split_disjoint_sizes(frac, seed):
+    rng = np.random.default_rng(seed)
+    data = gen_medical_dataset(rng, 50, 1)
+    tr, te = train_test_split(data, frac, rng)
+    assert len(tr) + len(te) >= len(data) - 1
+    assert len(tr) >= len(te)
+
+
+# ---------------------------------------------------------------------------
+# Tree arithmetic (federated aggregation algebra)
+# ---------------------------------------------------------------------------
+
+def _tree(seed, shape=(3, 4)):
+    k = jax.random.PRNGKey(seed)
+    return {"x": jax.random.normal(k, shape),
+            "sub": {"y": jax.random.normal(jax.random.split(k)[0], shape)}}
+
+
+@given(st.integers(0, 50), st.integers(51, 99))
+@settings(**SETTINGS)
+def test_tree_mean_is_fixed_point_of_identical(a, b):
+    t = _tree(a)
+    m = tree_mean([t, t, t])
+    for x, y in zip(jax.tree.leaves(m), jax.tree.leaves(t)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+
+
+@given(st.integers(0, 50), st.integers(51, 99),
+       st.floats(-2.0, 2.0, allow_nan=False))
+@settings(**SETTINGS)
+def test_tree_algebra(a, b, s):
+    t1, t2 = _tree(a), _tree(b)
+    lhs = tree_sub(tree_add(t1, tree_scale(t2, s)), t1)
+    rhs = tree_scale(t2, s)
+    for x, y in zip(jax.tree.leaves(lhs), jax.tree.leaves(rhs)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# AdaFusion black-box optimizers: must never end worse than they started
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(["es", "spsa", "nelder_mead"]),
+       st.floats(-0.5, 1.5), st.floats(-0.5, 1.5), st.integers(0, 99))
+@settings(**SETTINGS)
+def test_fusion_monotone_best(method, ox, oy, seed):
+    opt = np.array([ox, oy], np.float32)
+
+    def loss(w):
+        return float(((w - opt) ** 2).sum())
+
+    w, info = fusion_lib.adafusion(loss, method=method, steps=6, lam=0.0,
+                                   seed=seed)
+    hist = info["history"]
+    assert all(hist[i + 1] <= hist[i] + 1e-9 for i in range(len(hist) - 1))
+    assert loss(w) <= hist[0] + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(["bf16", "f32", "s32"]),
+       st.lists(st.integers(1, 64), min_size=1, max_size=3),
+       st.sampled_from(["all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"]))
+@settings(**SETTINGS)
+def test_parse_collectives_synthetic(dtype, dims, op):
+    shape = ",".join(map(str, dims))
+    line = (f"  %x.1 = {dtype}[{shape}]{{0}} {op}(%y), "
+            f"replica_groups={{{{0,1,2,3}}}}, channel_id=1\n")
+    colls = parse_collectives(line)
+    assert len(colls) == 1
+    c = colls[0]
+    assert c.op == op
+    assert c.group_size == 4
+    nbytes = int(np.prod(dims)) * {"bf16": 2, "f32": 4, "s32": 4}[dtype]
+    assert c.out_bytes == nbytes
+    assert c.per_chip_bytes > 0
