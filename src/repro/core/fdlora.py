@@ -107,6 +107,7 @@ class FDLoRATrainer:
         fed = self.fed
         down = tree_bytes(self.theta_s)
         client_thetas = []
+        round_losses: List[jnp.ndarray] = []
         for i, c in enumerate(clients):
             theta_i = self.theta_s                      # line 11: re-dispatch
             c.comm_bytes_down += down
@@ -114,6 +115,7 @@ class FDLoRATrainer:
             for _ in range(fed.inner_steps):            # line 12: K inner steps
                 batch = _dev(batchers[i].sample())
                 theta_i, st, m = self._step(self.base, theta_i, st, batch)
+                round_losses.append(m["loss"])  # device scalar; sync once below
             c.inner_opt_state = st
             c.global_copy = theta_i
             if fed.sync_every and t % fed.sync_every == 0:  # lines 13-15
@@ -123,7 +125,11 @@ class FDLoRATrainer:
         # lines 17-18: server outer update
         self.theta_s, self.outer_state, delta = outer_step(
             self.outer_opt, self.theta_s, self.outer_state, client_thetas)
-        self.history.append({"round": t, "loss": float(m["loss"])})
+        # per-round mean over every client's every inner step (not just the
+        # last client's last step; also well-defined when n_clients == 0)
+        mean_loss = (float(np.mean(jax.device_get(round_losses)))
+                     if round_losses else float("nan"))
+        self.history.append({"round": t, "loss": mean_loss})
         return delta
 
     def stage2(self, clients, batchers):

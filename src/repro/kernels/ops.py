@@ -15,6 +15,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.batched_lora import batched_lora_matmul
 from repro.kernels.dual_lora import dual_lora_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lora_matmul import lora_matmul
@@ -67,6 +68,33 @@ def fused_dual_lora_dense(x: jnp.ndarray, w: jnp.ndarray,
     y = dual_lora_matmul(x2p.astype(jnp.bfloat16), wp, a1, b1, a2, b2,
                          fusion_w, scale, bm=block, bn=block, bk=block,
                          interpret=interpret)
+    return y[:M, :N].reshape(*lead, N)
+
+
+def batched_lora_dense(x: jnp.ndarray, w: jnp.ndarray,
+                       bank: Dict[str, jnp.ndarray], adapter_ids: jnp.ndarray,
+                       scale: float, *, interpret: bool = True,
+                       block: int = 256) -> jnp.ndarray:
+    """Multi-tenant dense: (B, ..., K) @ (K, N) with per-*request* adapter
+    routing. ``bank`` = {"a": (C, K, r), "b": (C, r, N)}; ``adapter_ids`` is
+    (B,) int32 and broadcasts over the trailing (sequence) axes of ``x``.
+    Pads M/K/N to tiles; padded rows route to slot 0 and are sliced away."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    rows_per_item = 1
+    for s in lead[1:]:
+        rows_per_item *= s
+    g = jnp.repeat(adapter_ids.astype(jnp.int32), rows_per_item)
+    x2 = x.reshape(-1, K)
+    x2, M = _pad_to(x2, 0, block)
+    g = jnp.pad(g, (0, x2.shape[0] - M))
+    x2p, _ = _pad_to(x2, 1, block)
+    wp, _ = _pad_to(_pad_to(w, 0, block)[0], 1, block)
+    ap, _ = _pad_to(bank["a"], 1, block)
+    bp, _ = _pad_to(bank["b"], 2, block)
+    y = batched_lora_matmul(x2p.astype(jnp.bfloat16), wp, ap, bp, g, scale,
+                            bm=block, bn=block, bk=block, interpret=interpret)
     return y[:M, :N].reshape(*lead, N)
 
 

@@ -22,6 +22,37 @@ def dual_lora_matmul_ref(x, w, a1, b1, a2, b2, w1, w2, scale: float):
     return (base + scale * z).astype(x.dtype)
 
 
+def batched_lora_matmul_ref(x, w, a, b, adapter_ids, scale: float):
+    """Multi-tenant: y[i] = x[i]@w + scale*(x[i]@a[g[i]])@b[g[i]].
+
+    a: (C, K, r), b: (C, r, N), adapter_ids: (M,) int32. The reference
+    materialises the per-row gather (the thing the kernel avoids)."""
+    base = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    ag = jnp.take(a, adapter_ids, axis=0).astype(jnp.float32)   # (M, K, r)
+    bg = jnp.take(b, adapter_ids, axis=0).astype(jnp.float32)   # (M, r, N)
+    z = jnp.einsum("mk,mkr->mr", x.astype(jnp.float32), ag)
+    z = jnp.einsum("mr,mrn->mn", z, bg)
+    return (base + scale * z).astype(x.dtype)
+
+
+def batched_dual_lora_matmul_ref(x, w, a1, b1, a2, b2, adapter_ids, fusion_w,
+                                 scale: float):
+    """Per-request Eq. 7 over a personalized bank + shared global adapter:
+    y[i] = x@w + scale·x@[(w1ᵢA1[gᵢ]+w2ᵢA2)(w1ᵢB1[gᵢ]+w2ᵢB2)].
+
+    a1/b1: (C, K, r)/(C, r, N), a2/b2: (K, r)/(r, N), fusion_w: (M, 2)."""
+    w1 = fusion_w[:, 0, None, None].astype(jnp.float32)
+    w2 = fusion_w[:, 1, None, None].astype(jnp.float32)
+    am = w1 * jnp.take(a1, adapter_ids, 0).astype(jnp.float32) \
+        + w2 * a2[None].astype(jnp.float32)                     # (M, K, r)
+    bm = w1 * jnp.take(b1, adapter_ids, 0).astype(jnp.float32) \
+        + w2 * b2[None].astype(jnp.float32)                     # (M, r, N)
+    base = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    z = jnp.einsum("mk,mkr->mr", x.astype(jnp.float32), am)
+    z = jnp.einsum("mr,mrn->mn", z, bm)
+    return (base + scale * z).astype(x.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         sliding_window: int = 0, scale: float | None = None):
     """q: (B, H, Sq, d), k/v: (B, H, Sk, d) -> (B, H, Sq, d).

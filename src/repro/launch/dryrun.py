@@ -236,6 +236,13 @@ def _compile_once(cfg, mesh, shape_name, step):
     return compiled, model_flops
 
 
+def cost_dict(compiled):
+    """compiled.cost_analysis() as a dict: jaxlib <= 0.4.x wraps it in a
+    one-element list, newer versions return the dict directly."""
+    cost = compiled.cost_analysis()
+    return cost[0] if isinstance(cost, (list, tuple)) else cost
+
+
 def _extrapolated_cost(cfg, mesh, shape_name, step):
     """Exact flops/bytes/collectives via depth extrapolation.
 
@@ -249,7 +256,7 @@ def _extrapolated_cost(cfg, mesh, shape_name, step):
     if P == 1:
         c, _ = _compile_once(cfg.with_overrides(scan_unroll=1), mesh,
                              shape_name, step)
-        cost = c.cost_analysis()
+        cost = cost_dict(c)
         colls = rl.parse_collectives(c.as_text())
         return (float(cost.get("flops", 0)), float(cost.get("bytes accessed", 0)),
                 sum(x.per_chip_bytes for x in colls), colls)
@@ -260,7 +267,7 @@ def _extrapolated_cost(cfg, mesh, shape_name, step):
     out = []
     for p in (pa, pb):
         c, _ = _compile_once(_reduced_cfg(cfg, p), mesh, shape_name, step)
-        cost = c.cost_analysis()
+        cost = cost_dict(c)
         colls = rl.parse_collectives(c.as_text())
         out.append((float(cost.get("flops", 0)),
                     float(cost.get("bytes accessed", 0)),

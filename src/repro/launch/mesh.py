@@ -12,8 +12,13 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh_kwargs(n):
+    """``axis_types`` only exists on newer jax; 0.4.37 meshes are implicitly
+    Auto, so omit the kwarg there."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,7 +27,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     devices = jax.devices()[: 512 if multi_pod else 256]
     import numpy as np
     return jax.sharding.Mesh(
-        np.asarray(devices).reshape(shape), axes, axis_types=_auto(len(axes)))
+        np.asarray(devices).reshape(shape), axes, **_mesh_kwargs(len(axes)))
 
 
 def make_host_mesh(model: int = 1):
@@ -31,4 +36,4 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     return jax.sharding.Mesh(
         np.asarray(jax.devices()).reshape(n // model, model),
-        ("data", "model"), axis_types=_auto(2))
+        ("data", "model"), **_mesh_kwargs(2))

@@ -35,14 +35,19 @@ class Model:
     # ---- forward ----------------------------------------------------------
     def forward(self, params: Params, batch: Dict[str, jnp.ndarray],
                 adapters: Optional[Params] = None, lora_scale: float = 1.0,
-                last_only: bool = False):
+                last_only: bool = False,
+                adapter_ids: Optional[jnp.ndarray] = None):
         cfg = self.cfg
         if cfg.is_encdec:
+            if adapter_ids is not None:
+                raise NotImplementedError("multi-tenant banked adapters are "
+                                          "decoder-family only")
             return encdec.forward(params, batch["enc_embeds"], batch["tokens"],
                                   cfg, adapters, lora_scale)
         extra = batch.get("patch_embeds") if cfg.family == "vlm" else None
         return dec.forward(params, batch["tokens"], cfg, adapters, lora_scale,
-                           extra_embeds=extra, last_only=last_only)
+                           extra_embeds=extra, last_only=last_only,
+                           adapter_ids=adapter_ids)
 
     # ---- decode -----------------------------------------------------------
     def init_decode_cache(self, batch: int, cache_len: int) -> Params:
@@ -56,12 +61,16 @@ class Model:
         return dec.decode_cache_specs(self.cfg)
 
     def decode_step(self, params: Params, cache: Params, tokens, pos,
-                    adapters: Optional[Params] = None, lora_scale: float = 1.0):
+                    adapters: Optional[Params] = None, lora_scale: float = 1.0,
+                    adapter_ids: Optional[jnp.ndarray] = None):
         if self.cfg.is_encdec:
+            if adapter_ids is not None:
+                raise NotImplementedError("multi-tenant banked adapters are "
+                                          "decoder-family only")
             return encdec.decode_step(params, cache, tokens, pos, self.cfg,
                                       adapters, lora_scale)
         return dec.decode_step(params, cache, tokens, pos, self.cfg,
-                               adapters, lora_scale)
+                               adapters, lora_scale, adapter_ids=adapter_ids)
 
 
 def get_model(cfg) -> Model:

@@ -36,10 +36,23 @@ def dt(name: str):
     return jnp.dtype(name)
 
 
+def _current_mesh():
+    """The mesh in scope, or None. jax 0.4.37 has no
+    ``jax.sharding.get_abstract_mesh``; fall back to the thread-resources
+    physical mesh (set by ``with Mesh(...)``)."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        return get_abstract()
+    try:
+        return jax.interpreters.pxla.thread_resources.env.physical_mesh
+    except AttributeError:
+        return None
+
+
 def maybe_shard(x: jnp.ndarray, spec: P) -> jnp.ndarray:
     """with_sharding_constraint that no-ops when tracing without a mesh
     (CPU smoke tests) or when the spec names axes the mesh lacks."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = _current_mesh()
     if mesh is None or mesh.empty:
         return x
     axes = set(mesh.axis_names)
@@ -58,20 +71,44 @@ def matmul(x, w, *, out_dtype=None):
     return y.astype(out_dtype or x.dtype)
 
 
+def lora_delta(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+               adapter_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """fp32 LoRA update (x·A)·B, single-tenant or banked.
+
+    Single-tenant: ``a: (d_in, r)``, ``b: (r, d_out)``. Multi-tenant serving:
+    ``a: (C, d_in, r)``, ``b: (C, r, d_out)`` stacked client banks with
+    ``adapter_ids: (B,)`` int32 selecting one adapter per batch row of
+    ``x: (B, S, d_in)`` (the pure-jnp oracle of the batched Pallas kernel —
+    the kernel path never materialises the per-row gather in HBM).
+    """
+    xf = x.astype(jnp.float32)
+    if a.ndim == 3:  # banked: per-row client routing
+        if adapter_ids is None:
+            raise ValueError("banked LoRA leaves need adapter_ids")
+        ag = jnp.take(a.astype(jnp.float32), adapter_ids, axis=0)  # (B, d, r)
+        bg = jnp.take(b.astype(jnp.float32), adapter_ids, axis=0)  # (B, r, n)
+        z = jnp.einsum("b...k,bkr->b...r", xf, ag)
+        return jnp.einsum("b...r,brn->b...n", z, bg)
+    z = jnp.matmul(xf, a.astype(jnp.float32))
+    return jnp.matmul(z, b.astype(jnp.float32))
+
+
 def dense(x: jnp.ndarray, w: jnp.ndarray,
           lora: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
-          lora_scale: float = 1.0) -> jnp.ndarray:
+          lora_scale: float = 1.0,
+          adapter_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Linear layer with optional LoRA adapter.
 
-    ``lora`` is ``(A, B)`` with A: (d_in, r) fp32, B: (r, d_out) fp32.
-    The adapter path always computes in fp32 (adapters are the trainable,
-    numerically sensitive part) and is added to the frozen base output.
+    ``lora`` is ``(A, B)`` with A: (d_in, r) fp32, B: (r, d_out) fp32 — or
+    banked ``(C, d_in, r)`` / ``(C, r, d_out)`` with per-row ``adapter_ids``
+    (multi-tenant serving; see :func:`lora_delta`). The adapter path always
+    computes in fp32 (adapters are the trainable, numerically sensitive part)
+    and is added to the frozen base output.
     """
     y = matmul(x, w.astype(x.dtype))
     if lora is not None:
         a, b = lora
-        z = jnp.matmul(x.astype(jnp.float32), a.astype(jnp.float32))
-        z = jnp.matmul(z, b.astype(jnp.float32))
+        z = lora_delta(x, a, b, adapter_ids)
         y = (y.astype(jnp.float32) + lora_scale * z).astype(y.dtype)
     return y
 
@@ -184,7 +221,8 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
                         kv_cache: Optional[Params] = None,
                         causal: bool = True,
                         kv_override: Optional[Tuple] = None,
-                        use_flash: bool = False):
+                        use_flash: bool = False,
+                        adapter_ids: Optional[jnp.ndarray] = None):
     """Attention over x: (B, S, d).
 
     * training / prefill: ``kv_cache`` is None, causal (+ window) mask.
@@ -197,11 +235,12 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
     B, S, _ = x.shape
     la = (lambda name: (adapters[name]["a"], adapters[name]["b"])
           if adapters is not None and name in adapters else None)
+    dn = partial(dense, lora_scale=lora_scale, adapter_ids=adapter_ids)
 
-    q = dense(x, params["wq"], la("wq"), lora_scale).reshape(B, S, H, hd)
+    q = dn(x, params["wq"], la("wq")).reshape(B, S, H, hd)
     if kv_override is None:
-        k = dense(x, params["wk"], la("wk"), lora_scale).reshape(B, S, Kv, hd)
-        v = dense(x, params["wv"], la("wv"), lora_scale).reshape(B, S, Kv, hd)
+        k = dn(x, params["wk"], la("wk")).reshape(B, S, Kv, hd)
+        v = dn(x, params["wv"], la("wv")).reshape(B, S, Kv, hd)
         if cfg.use_rope:
             q = apply_rope(q, positions, cfg.rope_theta)
             k = apply_rope(k, positions, cfg.rope_theta)
@@ -266,7 +305,7 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
         out = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
                          preferred_element_type=jnp.float32).astype(x.dtype)
         out = out.reshape(B, S, H * hd)
-    out = dense(out, params["wo"], la("wo"), lora_scale)
+    out = dn(out, params["wo"], la("wo"))
     return out, new_cache
 
 
@@ -306,18 +345,20 @@ def mlp_specs(mlp_type: str) -> Params:
 
 
 def apply_mlp(params: Params, x: jnp.ndarray, mlp_type: str,
-              adapters: Optional[Params] = None, lora_scale: float = 1.0):
+              adapters: Optional[Params] = None, lora_scale: float = 1.0,
+              adapter_ids: Optional[jnp.ndarray] = None):
     la = (lambda name: (adapters[name]["a"], adapters[name]["b"])
           if adapters is not None and name in adapters else None)
+    dn = partial(dense, lora_scale=lora_scale, adapter_ids=adapter_ids)
     if mlp_type in ("swiglu", "geglu"):
         act = jax.nn.silu if mlp_type == "swiglu" else partial(jax.nn.gelu, approximate=True)
-        g = dense(x, params["w_gate"], la("w_gate"), lora_scale)
-        u = dense(x, params["w_up"], la("w_up"), lora_scale)
+        g = dn(x, params["w_gate"], la("w_gate"))
+        u = dn(x, params["w_up"], la("w_up"))
         h = act(g.astype(jnp.float32)).astype(x.dtype) * u
     else:
-        h = dense(x, params["w_up"], la("w_up"), lora_scale)
+        h = dn(x, params["w_up"], la("w_up"))
         h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
-    return dense(h, params["w_out"], la("w_out"), lora_scale)
+    return dn(h, params["w_out"], la("w_out"))
 
 
 # ---------------------------------------------------------------------------

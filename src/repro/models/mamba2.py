@@ -166,7 +166,8 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
 
 def apply_mamba(params: Params, x: jnp.ndarray, cfg,
                 adapters: Optional[Params] = None, lora_scale: float = 1.0,
-                ssm_cache: Optional[Params] = None):
+                ssm_cache: Optional[Params] = None,
+                adapter_ids: Optional[jnp.ndarray] = None):
     """x: (B, S, d) -> (out, new_cache).
 
     ``ssm_cache`` = {"h": (B,H,P,N), "conv": (B,K-1,conv_dim)} for decode.
@@ -176,7 +177,8 @@ def apply_mamba(params: Params, x: jnp.ndarray, cfg,
     la = (lambda name: (adapters[name]["a"], adapters[name]["b"])
           if adapters is not None and name in adapters else None)
 
-    zxbcdt = dense(x, params["in_proj"], la("in_proj"), lora_scale)
+    zxbcdt = dense(x, params["in_proj"], la("in_proj"), lora_scale,
+                   adapter_ids=adapter_ids)
     z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
 
@@ -206,7 +208,8 @@ def apply_mamba(params: Params, x: jnp.ndarray, cfg,
     y = y + xs.astype(jnp.float32) * params["d_skip"][None, None, :, None]
     y = y.reshape(B, S, d_in).astype(x.dtype)
     y = _gated_norm(y, z, params["norm_scale"])
-    out = dense(y, params["out_proj"], la("out_proj"), lora_scale)
+    out = dense(y, params["out_proj"], la("out_proj"), lora_scale,
+                adapter_ids=adapter_ids)
     new_cache = {"h": h.astype(jnp.float32), "conv": new_conv}
     return out, new_cache
 

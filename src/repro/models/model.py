@@ -118,7 +118,8 @@ def param_specs(cfg) -> Params:
 # ---------------------------------------------------------------------------
 
 def _apply_block(entry: str, bp: Params, x, cfg, positions,
-                 adapters=None, lora_scale=1.0, cache=None):
+                 adapters=None, lora_scale=1.0, cache=None,
+                 adapter_ids=None):
     """One layer. Returns (x, new_cache, aux)."""
     mixer, mlp = _parse(entry)
     ad = adapters or {}
@@ -127,17 +128,20 @@ def _apply_block(entry: str, bp: Params, x, cfg, positions,
     if mixer == "attn":
         out, new_mix_cache = L.multihead_attention(
             bp["mixer"], h, cfg, positions, ad.get("mixer"), lora_scale,
-            kv_cache=cache)
+            kv_cache=cache, adapter_ids=adapter_ids)
     else:
         out, new_mix_cache = mamba2.apply_mamba(
-            bp["mixer"], h, cfg, ad.get("mixer"), lora_scale, ssm_cache=cache)
+            bp["mixer"], h, cfg, ad.get("mixer"), lora_scale, ssm_cache=cache,
+            adapter_ids=adapter_ids)
     x = x + out
     if mlp != "none":
         h = L.apply_norm(bp["norm2"], x, cfg.norm_type)
         if mlp == "mlp":
-            out = L.apply_mlp(bp["mlp"], h, cfg.mlp_type, ad.get("mlp"), lora_scale)
+            out = L.apply_mlp(bp["mlp"], h, cfg.mlp_type, ad.get("mlp"),
+                              lora_scale, adapter_ids=adapter_ids)
         else:
-            out, aux = moe_lib.apply_moe(bp["mlp"], h, cfg, ad.get("mlp"), lora_scale)
+            out, aux = moe_lib.apply_moe(bp["mlp"], h, cfg, ad.get("mlp"),
+                                         lora_scale, adapter_ids=adapter_ids)
         x = x + out
     return x, new_mix_cache, aux
 
@@ -145,9 +149,13 @@ def _apply_block(entry: str, bp: Params, x, cfg, positions,
 def forward(params: Params, tokens: jnp.ndarray, cfg,
             adapters: Optional[Params] = None, lora_scale: float = 1.0,
             extra_embeds: Optional[jnp.ndarray] = None,
-            last_only: bool = False
+            last_only: bool = False,
+            adapter_ids: Optional[jnp.ndarray] = None
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """tokens: (B, S_text) int32. extra_embeds: (B, P, d) prepended (VLM).
+
+    ``adapter_ids``: (B,) int32 per-row client slots when ``adapters`` is a
+    stacked multi-tenant bank (leaves (n_periods, C, d_in, r)).
 
     Returns (logits (B, S, V), aux_loss scalar)."""
     dtype = L.dt(cfg.dtype)
@@ -170,7 +178,8 @@ def forward(params: Params, tokens: jnp.ndarray, cfg,
         for name in block_names:
             entry = cfg.layer_pattern[block_names.index(name)]
             x, _, a = _apply_block(entry, xs[name], x, cfg, positions,
-                                   xs.get("__ad_" + name), lora_scale)
+                                   xs.get("__ad_" + name), lora_scale,
+                                   adapter_ids=adapter_ids)
             aux = aux + a
         return (x, aux), None
 
@@ -225,10 +234,12 @@ def decode_cache_specs(cfg) -> Params:
 
 def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
                 pos: jnp.ndarray, cfg,
-                adapters: Optional[Params] = None, lora_scale: float = 1.0
+                adapters: Optional[Params] = None, lora_scale: float = 1.0,
+                adapter_ids: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Params]:
     """One decode step. tokens: (B, 1) int32; pos: scalar int32 (tokens
-    already in the cache). Returns (logits (B, 1, V), new cache)."""
+    already in the cache). ``adapter_ids``: (B,) int32 client slots for
+    multi-tenant banked adapters. Returns (logits (B, 1, V), new cache)."""
     dtype = L.dt(cfg.dtype)
     x = params["embed"].astype(dtype)[tokens]
     if cfg.family == "dense" and cfg.tie_embeddings:
@@ -244,7 +255,8 @@ def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
             entry = cfg.layer_pattern[block_names.index(name)]
             x, nc, _ = _apply_block(entry, xs[name], x, cfg, positions,
                                     xs.get("__ad_" + name), lora_scale,
-                                    cache=xs["__cache_" + name])
+                                    cache=xs["__cache_" + name],
+                                    adapter_ids=adapter_ids)
             new_caches[name] = nc
         return x, new_caches
 

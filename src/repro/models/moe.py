@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.layers import DATA, MODEL, matmul, maybe_shard
+from repro.models.layers import DATA, MODEL, lora_delta, matmul, maybe_shard
 
 Params = Dict[str, Any]
 
@@ -68,7 +68,8 @@ def _top_k_routing(router_logits: jnp.ndarray, k: int
 
 
 def apply_moe(params: Params, x: jnp.ndarray, cfg,
-              adapters: Optional[Params] = None, lora_scale: float = 1.0
+              adapters: Optional[Params] = None, lora_scale: float = 1.0,
+              adapter_ids: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
 
@@ -89,7 +90,8 @@ def apply_moe(params: Params, x: jnp.ndarray, cfg,
     logits = matmul(xf, params["router"].astype(xf.dtype), out_dtype=jnp.float32)
     if adapters is not None and "router" in adapters:
         a, b = adapters["router"]["a"], adapters["router"]["b"]
-        logits = logits + lora_scale * (xf.astype(jnp.float32) @ a) @ b
+        delta = lora_delta(x, a, b, adapter_ids)     # (B, S, E)
+        logits = logits + lora_scale * delta.reshape(T, E)
     weights, ids, aux = _top_k_routing(logits, k)          # (T,k)
 
     # ---- sort-based dispatch ------------------------------------------

@@ -1,23 +1,31 @@
-"""Serving engine: batched KV-cache decoding with (fused) LoRA adapters.
+"""Serving engines: batched KV-cache decoding with (fused) LoRA adapters.
 
 FDLoRA's inference story: after stage 3, each client's dual LoRA merges into
-one standard adapter (Eq. 7) — so serving is single-adapter and can also use
-the fused Pallas kernels. The engine supports:
+one standard adapter (Eq. 7). Two engines share one generation loop:
 
-  * ``prefill``: run the full prompt once, fill the cache (sub-quadratic
-    archs fill SSM state / windowed cache),
-  * ``decode``: steps of one token for a whole request batch,
-  * greedy and temperature sampling.
+  * :class:`Engine` — single-tenant: one adapter tree bound at construction
+    (the seed behaviour, kept for training-side evals and examples).
+  * :class:`MultiTenantEngine` — one base-model program + an
+    :class:`~repro.serving.registry.AdapterRegistry` bank; callers submit
+    :class:`Request` objects carrying ``client_id`` and the engine serves
+    *mixed-client* prefill+decode batches, routing every batch row to its
+    client's adapter via per-row ``adapter_ids`` (gathered on-chip, see
+    ``kernels/batched_lora.py``).
+
+Both support ``prefill`` (run the full prompt once, fill the cache —
+sub-quadratic archs fill SSM state / windowed cache), ``decode`` (steps of
+one token for a whole request batch), greedy and temperature sampling.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.lora import lora_scale
+from repro.serving.registry import AdapterRegistry
 
 Params = Any
 
@@ -31,17 +39,25 @@ class ServeConfig:
     seed: int = 0
 
 
-class Engine:
-    def __init__(self, model, cfg, params: Params,
-                 adapters: Optional[Params] = None):
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``prompt``: (S,) int32; prompts in a batch
+    must share S (continuous batching / paged prefill is a ROADMAP item)."""
+    client_id: Any
+    prompt: Any
+
+
+class _EngineBase:
+    """The generation loop, parameterised by optional per-row adapter ids."""
+
+    def __init__(self, model, cfg):
         self.model, self.cfg = model, cfg
-        self.params, self.adapters = params, adapters
         self.scale = lora_scale(cfg)
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
 
     # -- steps ---------------------------------------------------------------
-    def _prefill_impl(self, params, adapters, cache, tokens):
+    def _prefill_impl(self, params, adapters, ids, cache, tokens):
         """Sequential prefill through the decode path (cache-filling).
 
         For production prefill one would run the parallel forward and scatter
@@ -52,37 +68,81 @@ class Engine:
             cache, pos = carry
             logits, cache = self.model.decode_step(
                 params, cache, tok[:, None], pos, adapters=adapters,
-                lora_scale=self.scale)
+                lora_scale=self.scale, adapter_ids=ids)
             return (cache, pos + 1), logits[:, 0]
 
         (cache, pos), logits = jax.lax.scan(
             step, (cache, jnp.int32(0)), tokens.T)
         return cache, pos, logits[-1]
 
-    def _decode_impl(self, params, adapters, cache, tok, pos, rng, temperature):
+    def _decode_impl(self, params, adapters, ids, cache, tok, pos, rng,
+                     temperature):
         logits, cache = self.model.decode_step(
-            params, cache, tok, pos, adapters=adapters, lora_scale=self.scale)
+            params, cache, tok, pos, adapters=adapters, lora_scale=self.scale,
+            adapter_ids=ids)
         lg = logits[:, 0]
         greedy = jnp.argmax(lg, axis=-1)
         sampled = jax.random.categorical(rng, lg / jnp.maximum(temperature, 1e-6))
         nxt = jnp.where(temperature > 0, sampled, greedy)
         return nxt.astype(jnp.int32), cache
 
-    # -- public API ------------------------------------------------------------
-    def generate(self, prompts: jnp.ndarray, sc: ServeConfig) -> jnp.ndarray:
+    # -- loop ----------------------------------------------------------------
+    def _run(self, params, adapters, ids, prompts: jnp.ndarray,
+             sc: ServeConfig) -> jnp.ndarray:
         """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32."""
         B = prompts.shape[0]
         cache = self.model.init_decode_cache(B, sc.cache_len)
-        cache, pos, last_logits = self._prefill(self.params, self.adapters,
+        cache, pos, last_logits = self._prefill(params, adapters, ids,
                                                 cache, prompts)
         tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
         rng = jax.random.PRNGKey(sc.seed)
         out = [tok[:, 0]]
         for _ in range(sc.max_new_tokens - 1):
             rng, sub = jax.random.split(rng)
-            nxt, cache = self._decode(self.params, self.adapters, cache, tok,
+            nxt, cache = self._decode(params, adapters, ids, cache, tok,
                                       pos, sub, sc.temperature)
             pos = pos + 1
             tok = nxt[:, None]
             out.append(nxt)
         return jnp.stack(out, axis=1)
+
+
+class Engine(_EngineBase):
+    """Single-tenant engine: exactly one adapter tree bound per instance."""
+
+    def __init__(self, model, cfg, params: Params,
+                 adapters: Optional[Params] = None):
+        super().__init__(model, cfg)
+        self.params, self.adapters = params, adapters
+
+    def generate(self, prompts: jnp.ndarray, sc: ServeConfig) -> jnp.ndarray:
+        """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32."""
+        return self._run(self.params, self.adapters, None, prompts, sc)
+
+
+class MultiTenantEngine(_EngineBase):
+    """One compiled program serving every registered client.
+
+    Requests carry ``client_id``; the engine resolves each to its bank slot
+    (LRU-touching the registry), stacks the prompts into one mixed-client
+    batch and threads the (B,) slot vector through the model as
+    ``adapter_ids``. Adapter registration/eviction between calls never
+    changes bank shapes, so the jitted prefill/decode programs are reused
+    across any tenant mix.
+    """
+
+    def __init__(self, model, cfg, params: Params, registry: AdapterRegistry):
+        super().__init__(model, cfg)
+        self.params, self.registry = params, registry
+
+    def generate(self, requests: Sequence[Request],
+                 sc: ServeConfig) -> jnp.ndarray:
+        """requests: B same-length prompts (possibly all different clients)
+        -> (B, max_new_tokens) int32, row-aligned with ``requests``."""
+        if not requests:
+            raise ValueError("empty request batch")
+        ids = jnp.asarray([self.registry.acquire(r.client_id)
+                           for r in requests], jnp.int32)
+        prompts = jnp.stack([jnp.asarray(r.prompt, jnp.int32)
+                             for r in requests])
+        return self._run(self.params, self.registry.bank(), ids, prompts, sc)

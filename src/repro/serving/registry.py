@@ -1,0 +1,109 @@
+"""Multi-tenant adapter registry: a fixed-capacity stacked bank + LRU.
+
+One serving process holds ONE base-model program and a bank of per-client
+fused adapters (FDLoRA stage 3 output — ``FDLoRATrainer.fused_adapters`` /
+``core.dual_lora.merge``). The bank mirrors a single adapter tree but every
+leaf grows a *client* axis right after the period axis:
+
+    single client:  a: (n_periods, d_in, r)   b: (n_periods, r, d_out)
+    bank:           a: (n_periods, C, d_in, r) b: (n_periods, C, r, d_out)
+
+so the period ``lax.scan`` in the model still maps the leading axis and each
+block sees ``(C, d_in, r)`` leaves — the per-request gather then happens
+inside ``layers.lora_delta`` (jnp oracle) or ``kernels.batched_lora``
+(Pallas, gather never materialised in HBM).
+
+Capacity is fixed up front (the bank is a VMEM-budgetable, shape-stable
+buffer — no recompiles as tenants come and go); registration beyond capacity
+evicts the least-recently-*served* client. Slots are updated functionally
+(``leaf.at[:, slot].set``) so a jitted engine never sees a shape change.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dual_lora import merge
+from repro.core.lora import init_adapters
+
+Params = Any
+
+
+class AdapterRegistry:
+    """Registers/evicts client adapter trees into a stacked serving bank."""
+
+    def __init__(self, cfg, capacity: int, rank: Optional[int] = None):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.evictions = 0
+        template = jax.eval_shape(
+            lambda: init_adapters(jax.random.PRNGKey(0), cfg, rank))
+        # zero bank: a zero adapter is a no-op, so unregistered slots serve
+        # the frozen base model.
+        self._bank: Params = jax.tree.map(
+            lambda l: jnp.zeros(l.shape[:1] + (capacity,) + l.shape[1:],
+                                l.dtype), template)
+        self._lru: "OrderedDict[Any, int]" = OrderedDict()  # client -> slot
+        self._free: List[int] = list(range(capacity))
+
+    # ---- bookkeeping ------------------------------------------------------
+    def __contains__(self, client_id) -> bool:
+        return client_id in self._lru
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    @property
+    def resident(self) -> List[Any]:
+        """Client ids, least- to most-recently used."""
+        return list(self._lru)
+
+    def _grab_slot(self, client_id) -> int:
+        if client_id in self._lru:
+            return self._lru[client_id]
+        if self._free:
+            return self._free.pop(0)
+        evicted, slot = self._lru.popitem(last=False)   # LRU out
+        self.evictions += 1
+        return slot
+
+    # ---- writes -----------------------------------------------------------
+    def register(self, client_id, adapters: Params) -> int:
+        """Install (or refresh) a client's fused adapter tree; returns its
+        slot. Evicts the least-recently-used client when full."""
+        slot = self._grab_slot(client_id)
+        self._bank = jax.tree.map(
+            lambda bank, leaf: bank.at[:, slot].set(leaf.astype(bank.dtype)),
+            self._bank, adapters)
+        self._lru[client_id] = slot
+        self._lru.move_to_end(client_id)
+        return slot
+
+    def register_dual(self, client_id, personalized: Params, global_: Params,
+                      fusion_weights) -> int:
+        """Fuse a dual-LoRA state via Eq. 7 and install the result."""
+        fused = merge(personalized, global_, jnp.asarray(fusion_weights))
+        return self.register(client_id, fused)
+
+    def evict(self, client_id) -> None:
+        """Drop a client; its slot returns to the free list (stale weights
+        stay in the bank but are unreachable until the slot is reused)."""
+        slot = self._lru.pop(client_id)
+        self._free.append(slot)
+
+    # ---- reads ------------------------------------------------------------
+    def acquire(self, client_id) -> int:
+        """Slot for a request's client (touches LRU recency)."""
+        if client_id not in self._lru:
+            raise KeyError(f"client {client_id!r} is not resident "
+                           f"(resident: {self.resident})")
+        self._lru.move_to_end(client_id)
+        return self._lru[client_id]
+
+    def bank(self) -> Params:
+        """The stacked adapter tree (leaves (n_periods, C, d_in, r))."""
+        return self._bank

@@ -87,12 +87,13 @@ def test_cost_analysis_is_per_device_and_scan_counts_once():
         y, _ = jax.lax.scan(body, x, None, length=4)
         return y
 
+    from repro.launch.dryrun import cost_dict
+
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-    rolled = jax.jit(f).lower(x, w).compile().cost_analysis()["flops"]
-    unrolled = jax.jit(
-        lambda x, w: x @ w @ w @ w @ w).lower(x, w).compile(
-        ).cost_analysis()["flops"]
+    rolled = cost_dict(jax.jit(f).lower(x, w).compile())["flops"]
+    unrolled = cost_dict(jax.jit(
+        lambda x, w: x @ w @ w @ w @ w).lower(x, w).compile())["flops"]
     assert abs(unrolled - 4 * rolled) / unrolled < 0.05
 
 

@@ -1,0 +1,258 @@
+"""Multi-tenant serving: batched-LoRA kernel parity, adapter registry,
+mixed-client engine regression vs single-tenant generation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense
+from repro.core.dual_lora import merge
+from repro.core.lora import init_adapters, lora_scale
+from repro.kernels.batched_lora import (batched_dual_lora_matmul,
+                                        batched_lora_matmul)
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.ops import batched_lora_dense
+from repro.kernels.ref import (batched_dual_lora_matmul_ref,
+                               batched_lora_matmul_ref)
+from repro.models.api import get_model
+from repro.models.layers import lora_delta
+from repro.serving.engine import (Engine, MultiTenantEngine, Request,
+                                  ServeConfig)
+from repro.serving.registry import AdapterRegistry
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape, dtype, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+def _tol(dtype):
+    return 0.08 if dtype == jnp.bfloat16 else 2e-4
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r", [8, 16])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_batched_lora_matches_ref(r, dtype):
+    M, K, N, C = 256, 256, 384, 5
+    x = _rand((M, K), dtype)
+    w = _rand((K, N), dtype, 0.05)
+    a = _rand((C, K, r), jnp.float32, 0.05)
+    b = _rand((C, r, N), jnp.float32, 0.05)
+    g = jnp.asarray(RNG.integers(0, C, M), jnp.int32)  # non-uniform ids
+    y = batched_lora_matmul(x, w, a, b, g, 2.0, bm=128, bn=128, bk=128)
+    yr = batched_lora_matmul_ref(x, w, a, b, g, 2.0)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               atol=_tol(dtype), rtol=0.05)
+
+
+def test_batched_uniform_ids_equals_single_lora():
+    """Every row routed to slot c == the single-adapter kernel on bank[c]."""
+    M = K = N = 256
+    r, C = 8, 3
+    x = _rand((M, K), jnp.bfloat16)
+    w = _rand((K, N), jnp.bfloat16, 0.05)
+    a = _rand((C, K, r), jnp.float32, 0.05)
+    b = _rand((C, r, N), jnp.float32, 0.05)
+    for c in range(C):
+        g = jnp.full((M,), c, jnp.int32)
+        y = batched_lora_matmul(x, w, a, b, g, 2.0, bm=128, bn=128, bk=128)
+        ys = lora_matmul(x, w, a[c], b[c], scale=2.0, bm=128, bn=128, bk=128)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(ys, np.float32), atol=0.05)
+
+
+@pytest.mark.parametrize("r", [8, 16])
+def test_batched_dual_lora_per_row_fusion_weights(r):
+    """Eq. 7 merged on-chip per request: banked personalized + shared
+    global, every row with its own (w1, w2)."""
+    M, K, N, C = 256, 256, 256, 4
+    x = _rand((M, K), jnp.bfloat16)
+    w = _rand((K, N), jnp.bfloat16, 0.05)
+    a1 = _rand((C, K, r), jnp.float32, 0.05)
+    b1 = _rand((C, r, N), jnp.float32, 0.05)
+    a2 = _rand((K, r), jnp.float32, 0.05)
+    b2 = _rand((r, N), jnp.float32, 0.05)
+    g = jnp.asarray(RNG.integers(0, C, M), jnp.int32)
+    fw = jnp.asarray(RNG.uniform(-0.2, 1.2, (M, 2)), jnp.float32)
+    y = batched_dual_lora_matmul(x, w, a1, b1, a2, b2, g, fw, 2.0,
+                                 bm=128, bn=128, bk=128)
+    yr = batched_dual_lora_matmul_ref(x, w, a1, b1, a2, b2, g, fw, 2.0)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=0.08,
+                               rtol=0.05)
+
+
+def test_batched_dual_row_reduces_to_merged_single():
+    """A row with fusion weights (w1, w2) equals the pre-merged (Eq. 7)
+    adapter served through the plain batched kernel."""
+    M = K = N = 128
+    r, C = 8, 2
+    x = _rand((M, K), jnp.bfloat16)
+    w = _rand((K, N), jnp.bfloat16, 0.05)
+    a1 = _rand((C, K, r), jnp.float32, 0.05)
+    b1 = _rand((C, r, N), jnp.float32, 0.05)
+    a2 = _rand((K, r), jnp.float32, 0.05)
+    b2 = _rand((r, N), jnp.float32, 0.05)
+    g = jnp.zeros((M,), jnp.int32)
+    w1, w2 = 0.7, 0.4
+    fw = jnp.tile(jnp.array([[w1, w2]], jnp.float32), (M, 1))
+    y = batched_dual_lora_matmul(x, w, a1, b1, a2, b2, g, fw, 2.0,
+                                 bm=128, bn=128, bk=128)
+    am = (w1 * a1[0] + w2 * a2)[None]
+    bm_ = (w1 * b1[0] + w2 * b2)[None]
+    ym = batched_lora_matmul(x, w, am, bm_, g, 2.0, bm=128, bn=128, bk=128)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ym, np.float32), atol=0.06)
+
+
+def test_ops_batched_lora_dense_padding():
+    """Wrapper pads non-tile shapes and broadcasts (B,) ids over S."""
+    B, S, K, N, r, C = 3, 10, 200, 300, 4, 5
+    x = _rand((B, S, K), jnp.bfloat16)
+    w = _rand((K, N), jnp.bfloat16, 0.05)
+    bank = {"a": _rand((C, K, r), jnp.float32, 0.05),
+            "b": _rand((C, r, N), jnp.float32, 0.05)}
+    ids = jnp.asarray([1, 4, 2], jnp.int32)
+    y = batched_lora_dense(x, w, bank, ids, 2.0, block=128)
+    g = jnp.repeat(ids, S)
+    yr = batched_lora_matmul_ref(x.reshape(B * S, K), w, bank["a"], bank["b"],
+                                 g, 2.0).reshape(B, S, N)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=0.08,
+                               rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# layers.lora_delta banked path (the model-side oracle)
+# ---------------------------------------------------------------------------
+
+def test_lora_delta_banked_matches_per_row():
+    B, S, K, N, r, C = 4, 6, 32, 24, 4, 3
+    x = _rand((B, S, K), jnp.float32)
+    a = _rand((C, K, r), jnp.float32)
+    b = _rand((C, r, N), jnp.float32)
+    ids = jnp.asarray([2, 0, 1, 2], jnp.int32)
+    z = lora_delta(x, a, b, ids)
+    for i in range(B):
+        zi = lora_delta(x[i:i + 1], a[int(ids[i])], b[int(ids[i])])
+        np.testing.assert_allclose(np.asarray(z[i]), np.asarray(zi[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_lora_delta_banked_requires_ids():
+    with pytest.raises(ValueError):
+        lora_delta(_rand((2, 3, 8), jnp.float32),
+                   _rand((2, 8, 4), jnp.float32),
+                   _rand((2, 4, 8), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# AdapterRegistry
+# ---------------------------------------------------------------------------
+
+def _cfg():
+    return tiny_dense()
+
+
+def test_registry_register_acquire_roundtrip():
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, capacity=3)
+    ad = init_adapters(jax.random.PRNGKey(1), cfg)
+    slot = reg.register("alice", ad)
+    assert reg.acquire("alice") == slot
+    assert "alice" in reg and len(reg) == 1
+    # bank slot holds exactly the registered tree
+    bank = reg.bank()
+    leaf = jax.tree.leaves(ad)[0]
+    bank_leaf = jax.tree.leaves(bank)[0]
+    np.testing.assert_allclose(np.asarray(bank_leaf[:, slot]),
+                               np.asarray(leaf))
+    with pytest.raises(KeyError):
+        reg.acquire("nobody")
+
+
+def test_registry_lru_eviction_order():
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, capacity=2)
+    ad = init_adapters(jax.random.PRNGKey(1), cfg)
+    reg.register("a", ad)
+    reg.register("b", ad)
+    reg.acquire("a")              # 'a' now most-recent; LRU is 'b'
+    reg.register("c", ad)         # evicts 'b'
+    assert "b" not in reg and "a" in reg and "c" in reg
+    assert reg.evictions == 1
+    # re-register refreshes in place, no eviction
+    reg.register("a", ad)
+    assert reg.evictions == 1 and len(reg) == 2
+
+
+def test_registry_register_dual_is_eq7_merge():
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, capacity=1)
+    p = init_adapters(jax.random.PRNGKey(2), cfg)
+    s = init_adapters(jax.random.PRNGKey(3), cfg)
+    fw = jnp.array([0.7, 0.4], jnp.float32)
+    slot = reg.register_dual("c", p, s, fw)
+    fused = merge(p, s, fw)
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(reg.bank())[0][:, slot]),
+        np.asarray(jax.tree.leaves(fused)[0]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Engine regression: mixed-client batch == per-client single-tenant output
+# ---------------------------------------------------------------------------
+
+def _client_adapters(cfg, seed):
+    ad = init_adapters(jax.random.PRNGKey(seed), cfg)
+    bump = jax.random.PRNGKey(seed + 99)
+    return jax.tree.map(
+        lambda l: l + 0.02 * jax.random.normal(bump, l.shape), ad)
+
+
+def test_mixed_batch_matches_single_tenant_greedy():
+    cfg = tiny_dense()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ads = {"c0": _client_adapters(cfg, 1), "c1": _client_adapters(cfg, 2)}
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    sc = ServeConfig(batch_size=1, max_new_tokens=8, cache_len=32)
+
+    reg = AdapterRegistry(cfg, capacity=4)
+    for cid, ad in ads.items():
+        reg.register(cid, ad)
+    mt = MultiTenantEngine(model, cfg, params, reg)
+    order = ["c1", "c0", "c1", "c0"]          # interleaved two-client batch
+    out_mt = np.asarray(mt.generate([Request(c, prompt) for c in order], sc))
+
+    singles = {cid: np.asarray(
+        Engine(model, cfg, params, ad).generate(jnp.asarray(prompt)[None],
+                                                sc))[0]
+        for cid, ad in ads.items()}
+    assert (singles["c0"] != singles["c1"]).any(), "clients must differ"
+    for i, cid in enumerate(order):
+        np.testing.assert_array_equal(out_mt[i], singles[cid])
+
+
+def test_unregistered_slot_serves_base_model():
+    """A zeroed bank slot is a no-op adapter: identical to no adapters."""
+    cfg = tiny_dense()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    sc = ServeConfig(batch_size=1, max_new_tokens=6, cache_len=32)
+    reg = AdapterRegistry(cfg, capacity=2)
+    reg.register("zero", jax.tree.map(jnp.zeros_like,
+                                      init_adapters(jax.random.PRNGKey(5),
+                                                    cfg)))
+    mt = MultiTenantEngine(model, cfg, params, reg)
+    out = np.asarray(mt.generate([Request("zero", prompt)], sc))[0]
+    base = np.asarray(Engine(model, cfg, params, None).generate(
+        jnp.asarray(prompt)[None], sc))[0]
+    np.testing.assert_array_equal(out, base)
