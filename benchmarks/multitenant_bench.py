@@ -1,22 +1,29 @@
-"""Multi-tenant serving benchmark: tokens/s vs number of resident adapters.
+"""Multi-tenant serving benchmark: batching strategies and paged-cache wins.
 
-Compares the two ways to serve N FDLoRA clients on one host:
+Sections (CSV rows ``name,us_per_call,derived``; compile excluded by a
+warmup call; CPU interpret-mode numbers — the wins are architectural):
 
-  * ``per-client``: the seed architecture — N single-tenant ``Engine``s, one
-    adapter tree and one compiled program each; requests run client-by-client
-    as N batch-1 generations.
-  * ``batched``: one ``MultiTenantEngine`` + ``AdapterRegistry`` bank; the
-    same N requests run as ONE mixed-client batch through a single compiled
-    program, routed per-row to each client's adapter.
-
-CSV rows: ``name,us_per_call,derived`` where derived is tokens/s (compile
-excluded by the warmup call). CPU interpret-mode numbers; the win is
-architectural (batching + one program), not kernel micro-perf.
+  * default: tokens/s vs number of resident adapters, comparing
+      - ``per-client``: the seed architecture — N single-tenant ``Engine``s,
+        one adapter tree and one compiled program each;
+      - ``batched``: one ``MultiTenantEngine`` + ``AdapterRegistry`` bank,
+        one fixed-shape mixed-client batch (``generate_fixed``, PR-1).
+  * ``--ragged`` (also default): a mixed-length mixed-budget request stream
+    served by (a) the fixed-batch engine — requests grouped by prompt
+    length, every group decoding its max budget (padding waste) — and (b)
+    the continuous slot scheduler over the paged KV cache.  Writes
+    ``BENCH_serving.json`` (tok/s, waste, speedup).
+  * ``--block-sweep``: ``kernels/batched_lora.py`` tile-size sweep per
+    (n_clients, rank) — groundwork for the ROADMAP autotuning item.
+  * ``--smoke``: tiny correctness-only run for CI (serving-path regressions
+    fail fast; no timing claims).
 
     PYTHONPATH=src python benchmarks/multitenant_bench.py
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 
 import jax
@@ -28,6 +35,7 @@ from benchmarks.common import row, timed  # noqa: E402
 
 from repro.configs.base import ModelConfig  # noqa: E402
 from repro.core.lora import init_adapters  # noqa: E402
+from repro.kernels.batched_lora import batched_lora_matmul  # noqa: E402
 from repro.models.api import get_model  # noqa: E402
 from repro.serving.engine import (Engine, MultiTenantEngine, Request,  # noqa: E402
                                   ServeConfig)
@@ -50,19 +58,28 @@ def _adapters(seed: int):
         lambda l: l + 0.02 * jax.random.normal(bump, l.shape), ad)
 
 
-def main():
+def _setup(n_adapters: int):
     model = get_model(CFG)
     params = model.init(jax.random.PRNGKey(0))
+    ads = {f"c{i}": _adapters(i + 1) for i in range(n_adapters)}
+    registry = AdapterRegistry(CFG, capacity=max(n_adapters, 2))
+    for cid, ad in ads.items():
+        registry.register(cid, ad)
+    return model, params, ads, MultiTenantEngine(model, CFG, params, registry)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape sections (PR-1): per-client engines vs one batched engine
+# ---------------------------------------------------------------------------
+
+def fixed_shape_sections():
     prompt = (np.arange(PROMPT_LEN, dtype=np.int32) * 7) % CFG.vocab_size
     sc = ServeConfig(batch_size=1, max_new_tokens=NEW_TOKENS,
                      cache_len=CACHE_LEN)
-
-    print("name,us_per_call,derived")
     for n_adapters in (2, 4, 8):
-        ads = {f"c{i}": _adapters(i + 1) for i in range(n_adapters)}
+        model, params, ads, mt = _setup(n_adapters)
         total_tokens = n_adapters * NEW_TOKENS
 
-        # -- baseline: one engine (and one compiled program) per client ----
         engines = [Engine(model, CFG, params, ad) for ad in ads.values()]
         p1 = jnp.asarray(prompt)[None]
 
@@ -74,15 +91,10 @@ def main():
         print(row(f"per_client_engines_n{n_adapters}", us_base,
                   f"{tps_base:.1f}"))
 
-        # -- batched: one engine, one mixed-client batch --------------------
-        registry = AdapterRegistry(CFG, capacity=n_adapters)
-        for cid, ad in ads.items():
-            registry.register(cid, ad)
-        mt = MultiTenantEngine(model, CFG, params, registry)
         reqs = [Request(cid, prompt) for cid in ads]
 
         def batched():
-            return mt.generate(reqs, sc)
+            return mt.generate_fixed(reqs, sc)
 
         out_mt, us_mt = timed(batched)
         tps_mt = total_tokens / (us_mt / 1e6)
@@ -95,6 +107,152 @@ def main():
         ok = all(bool((np.asarray(out_mt)[i] == np.asarray(o)[0]).all())
                  for i, o in enumerate(base_out))
         assert ok, "batched engine diverged from per-client baseline"
+
+
+# ---------------------------------------------------------------------------
+# Ragged workload: fixed-batch grouping vs continuous batching (tentpole)
+# ---------------------------------------------------------------------------
+
+def _ragged_workload(n_clients: int = 4):
+    """Mixed prompt lengths x mixed budgets x mixed clients: the stream the
+    fixed-shape engine can only serve by grouping + over-decoding."""
+    reqs = []
+    lens = (4, 8, 12)
+    budgets = (4, 12, 28)
+    i = 0
+    for plen in lens:
+        for b in budgets:
+            prompt = (np.arange(plen, dtype=np.int32) * 5 + i) % CFG.vocab_size
+            reqs.append(Request(f"c{i % n_clients}", prompt,
+                                max_new_tokens=int(b)))
+            i += 1
+    return reqs
+
+
+def ragged_section(json_path: str, smoke: bool = False):
+    n_clients = 2 if smoke else 4
+    model, params, ads, mt = _setup(n_clients)
+    reqs = _ragged_workload(n_clients)
+    if smoke:
+        reqs = reqs[:4]
+    useful = sum(r.max_new_tokens for r in reqs)
+
+    # -- fixed-batch (PR-1): group by prompt length, decode each group to
+    #    its max budget — finished rows keep burning decode steps ----------
+    groups = {}
+    for r in reqs:
+        groups.setdefault(len(r.prompt), []).append(r)
+
+    def fixed():
+        outs = {}
+        for plen, grp in sorted(groups.items()):
+            sc = ServeConfig(batch_size=len(grp),
+                             max_new_tokens=max(g.max_new_tokens for g in grp),
+                             cache_len=CACHE_LEN)
+            o = mt.generate_fixed(grp, sc)
+            for g, row_ in zip(grp, np.asarray(o)):
+                outs[id(g)] = row_
+        return outs
+
+    decoded = sum(len(grp) * max(g.max_new_tokens for g in grp)
+                  for grp in groups.values())
+    waste = 1.0 - useful / decoded
+
+    # -- continuous: one slot-based engine over the paged KV cache ---------
+    sc_cont = ServeConfig(batch_size=4, max_new_tokens=NEW_TOKENS,
+                          block_size=8)
+
+    def continuous():
+        return mt.generate(reqs, sc_cont)
+
+    if smoke:
+        fixed_out, cont_out = fixed(), continuous()
+        for r, o in zip(reqs, cont_out):    # parity: continuous == fixed-path
+            np.testing.assert_array_equal(o, fixed_out[id(r)][:o.size])
+        print(row("ragged_smoke_parity", 0.0, "ok"))
+        return
+
+    fixed_out, us_fixed = timed(fixed)
+    cont_out, us_cont = timed(continuous)
+    for r, o in zip(reqs, cont_out):        # parity before trusting timings
+        np.testing.assert_array_equal(o, fixed_out[id(r)][:o.size])
+
+    tps_fixed = useful / (us_fixed / 1e6)
+    tps_cont = useful / (us_cont / 1e6)
+    print(row("ragged_fixed_batch", us_fixed,
+              f"{tps_fixed:.1f} tok/s, {waste:.1%} padding waste"))
+    print(row("ragged_continuous", us_cont,
+              f"{tps_cont:.1f} tok/s, 0.0% padding waste"))
+    print(row("ragged_speedup", us_fixed / us_cont * 100,
+              f"{tps_cont / tps_fixed:.2f}x"))
+    record = {
+        "workload": {"requests": len(reqs),
+                     "useful_tokens": useful,
+                     "prompt_lens": sorted({len(r.prompt) for r in reqs}),
+                     "budgets": sorted({r.max_new_tokens for r in reqs})},
+        "fixed_batch": {"us_per_call": us_fixed, "tok_per_s": tps_fixed,
+                        "decoded_tokens": decoded, "padding_waste": waste},
+        "continuous": {"us_per_call": us_cont, "tok_per_s": tps_cont,
+                       "decoded_tokens": useful, "padding_waste": 0.0,
+                       "slots": sc_cont.batch_size,
+                       "block_size": sc_cont.block_size},
+        "speedup": tps_cont / tps_fixed,
+        "note": "CPU interpret-mode; win = fewer decode dispatches "
+                "(no over-decoding, no per-length grouping)",
+    }
+    with open(json_path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {json_path}")
+
+
+# ---------------------------------------------------------------------------
+# Block-size sweep for the batched-LoRA kernel (autotuning groundwork)
+# ---------------------------------------------------------------------------
+
+def block_sweep():
+    """Tile-size table per (n_clients, rank) for batched_lora_matmul.
+
+    Interpret-mode timings rank tile shapes only relatively; on TPU rerun
+    with interpret=False to pick per-(C, r) defaults (ROADMAP autotuning)."""
+    rng = np.random.default_rng(3)
+    M = K = N = 256
+    print("# block-sweep: name,us_per_call,derived (bm=bn=bk)")
+    for C, r in ((2, 8), (4, 16), (8, 32)):
+        x = jnp.asarray(rng.standard_normal((M, K)), jnp.bfloat16)
+        w = jnp.asarray(rng.standard_normal((K, N)) * 0.05, jnp.bfloat16)
+        a = jnp.asarray(rng.standard_normal((C, K, r)) * 0.05, jnp.float32)
+        b = jnp.asarray(rng.standard_normal((C, r, N)) * 0.05, jnp.float32)
+        g = jnp.asarray(rng.integers(0, C, M), jnp.int32)
+        best = None
+        for blk in (64, 128, 256):
+            _, us = timed(batched_lora_matmul, x, w, a, b, g, 2.0,
+                          bm=blk, bn=blk, bk=blk)
+            print(row(f"batched_lora_C{C}_r{r}_blk{blk}", us, f"{blk}"))
+            if best is None or us < best[1]:
+                best = (blk, us)
+        print(row(f"batched_lora_C{C}_r{r}_best", best[1], f"blk={best[0]}"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny correctness-only run for CI")
+    ap.add_argument("--block-sweep", action="store_true",
+                    help="batched-LoRA tile-size sweep per (n_clients, rank)")
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="where the ragged-workload record is written")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    if args.block_sweep:
+        block_sweep()
+        return
+    if args.smoke:
+        ragged_section(args.json, smoke=True)
+        return
+    fixed_shape_sections()
+    ragged_section(args.json)
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ from repro.kernels.batched_lora import batched_lora_matmul
 from repro.kernels.dual_lora import dual_lora_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.paged_attention import paged_attention
 
 
 def _pad_to(x, axis, mult):
@@ -96,6 +97,35 @@ def batched_lora_dense(x: jnp.ndarray, w: jnp.ndarray,
     y = batched_lora_matmul(x2p.astype(jnp.bfloat16), wp, ap, bp, g, scale,
                             bm=block, bn=block, bk=block, interpret=interpret)
     return y[:M, :N].reshape(*lead, N)
+
+
+def paged_gqa_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                        v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                        lengths: jnp.ndarray, *,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Model-layout adapter for the paged decode kernel.
+
+    q: (B, 1, H, hd) (or (B, H, hd)) as produced by the serving decode step;
+    k_pool/v_pool: (NB, bs, Kv, hd). Pads head_dim to 128 lanes (zero key
+    lanes leave q·k unchanged; zero value lanes are sliced away) and keeps
+    the block-table gather inside the kernel. Returns q's shape.
+
+    ``lengths`` is exclusive (positions already written): when dropping this
+    into the paged branch of ``layers.multihead_attention``, pass the
+    per-row step position + 1 — i.e. AFTER scattering the step's K/V — so
+    the token being decoded attends itself (see ``paged_attention``)."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    hd = q.shape[-1]
+    scale = hd ** -0.5                       # scale from the *unpadded* head
+    qp, _ = _pad_to(q, 2, 128)
+    kp, _ = _pad_to(k_pool, 3, 128)
+    vp, _ = _pad_to(v_pool, 3, 128)
+    o = paged_attention(qp, kp, vp, block_tables.astype(jnp.int32),
+                        lengths.astype(jnp.int32), scale=scale,
+                        interpret=interpret)[..., :hd]
+    return o[:, None] if squeeze else o
 
 
 def gqa_flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,

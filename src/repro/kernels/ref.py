@@ -53,6 +53,32 @@ def batched_dual_lora_matmul_ref(x, w, a1, b1, a2, b2, adapter_ids, fusion_w,
     return (base + scale * z).astype(x.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                        scale: float | None = None):
+    """Paged decode attention: q: (B, H, hd), k_pool/v_pool:
+    (NB, bs, Kv, hd), block_tables: (B, MB) int32, lengths: (B,) int32.
+
+    The reference materialises the padded per-row block gather
+    (B, MB*bs, Kv, hd) in HBM — the thing the Pallas kernel avoids."""
+    B, H, hd = q.shape
+    bs, Kv = k_pool.shape[1], k_pool.shape[2]
+    MB = block_tables.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+    rep = H // Kv
+    k = jnp.repeat(k_pool[block_tables].reshape(B, MB * bs, Kv, hd),
+                   rep, axis=2).astype(jnp.float32)
+    v = jnp.repeat(v_pool[block_tables].reshape(B, MB * bs, Kv, hd),
+                   rep, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k) * scale
+    mask = jnp.arange(MB * bs)[None, :] < lengths[:, None]      # (B, L)
+    logits = jnp.where(mask[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (empty slots) -> zeros, matching the kernel
+    probs = jnp.where(mask[:, None, :], probs, 0.0)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, v)
+    return out.astype(q.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         sliding_window: int = 0, scale: float | None = None):
     """q: (B, H, Sq, d), k/v: (B, H, Sk, d) -> (B, H, Sq, d).

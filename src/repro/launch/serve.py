@@ -8,6 +8,12 @@ Multi-tenant demo (one engine, N resident client adapters, mixed batch):
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
         --tenants 4 --batch 8 --new-tokens 16
+
+Continuous batching (slot scheduler + paged KV cache: ragged prompts,
+per-request budgets, admission into freed slots):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+        --tenants 4 --batch 4 --requests 12 --continuous
 """
 from __future__ import annotations
 
@@ -42,6 +48,13 @@ def main(argv=None):
     ap.add_argument("--tenants", type=int, default=0,
                     help="multi-tenant demo: N resident client adapters, "
                          "one engine, mixed-client batch")
+    ap.add_argument("--continuous", action="store_true",
+                    help="with --tenants: serve a ragged request stream "
+                         "through the slot scheduler + paged KV cache")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="continuous mode: queued requests (default 3x batch)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="continuous mode: KV block size (tokens)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -57,6 +70,9 @@ def main(argv=None):
     sc = ServeConfig(batch_size=args.batch, max_new_tokens=args.new_tokens,
                      cache_len=args.cache_len)
 
+    if args.continuous and args.tenants <= 0:
+        raise SystemExit("--continuous needs --tenants N (the continuous "
+                         "scheduler serves the multi-tenant engine)")
     if args.tenants > 0:
         if args.adapters or args.dual:
             raise SystemExit("--tenants is a self-contained demo (random "
@@ -71,10 +87,30 @@ def main(argv=None):
             registry.register_dual(f"client{i}", ad_p, ad_s,
                                    jnp.array([0.6, 0.6]))
         eng = MultiTenantEngine(model, cfg, params, registry)
+        if args.continuous:
+            # ragged stream: varied prompt lengths AND per-request budgets;
+            # the scheduler admits queued requests as slots free up.
+            n_req = args.requests or 3 * args.batch
+            sc.block_size = args.block_size
+            reqs = [Request(f"client{i % args.tenants}",
+                            prompt[: 8 + (5 * i) % (len(prompt) - 7)],
+                            max_new_tokens=4 + (7 * i) % args.new_tokens)
+                    for i in range(n_req)]
+            t0 = time.time()
+            outs = eng.generate(reqs, sc)
+            dt = time.time() - t0
+            total = sum(o.size for o in outs)
+            print(f"{args.tenants} tenants, {n_req} ragged requests over "
+                  f"{args.batch} slots (block={sc.block_size}): {total} "
+                  f"tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl. compile)")
+            for r, o in list(zip(reqs, outs))[:args.tenants]:
+                print(f"  {r.client_id} (S={len(r.prompt)}, "
+                      f"budget={r.max_new_tokens}):", tok.decode(o)[:40])
+            return
         reqs = [Request(f"client{b % args.tenants}", prompt)
                 for b in range(args.batch)]
         t0 = time.time()
-        out = eng.generate(reqs, sc)
+        out = eng.generate_fixed(reqs, sc)
         dt = time.time() - t0
         total = args.batch * args.new_tokens
         print(f"{args.tenants} tenants resident, mixed batch of {args.batch}: "

@@ -60,17 +60,34 @@ class Model:
             return encdec.decode_cache_specs(self.cfg)
         return dec.decode_cache_specs(self.cfg)
 
+    def init_paged_decode_cache(self, num_slots: int, num_blocks: int,
+                                block_size: int) -> Params:
+        """Continuous-batching serving cache: shared K/V block pools +
+        dense per-slot SSM state (see serving/kv_cache.py)."""
+        if self.cfg.is_encdec:
+            raise NotImplementedError("paged decoding is decoder-family only")
+        return dec.init_paged_decode_cache(self.cfg, num_slots, num_blocks,
+                                           block_size)
+
+    def paged_decode_cache_specs(self) -> Params:
+        if self.cfg.is_encdec:
+            raise NotImplementedError("paged decoding is decoder-family only")
+        return dec.paged_decode_cache_specs(self.cfg)
+
     def decode_step(self, params: Params, cache: Params, tokens, pos,
                     adapters: Optional[Params] = None, lora_scale: float = 1.0,
-                    adapter_ids: Optional[jnp.ndarray] = None):
+                    adapter_ids: Optional[jnp.ndarray] = None,
+                    block_tables: Optional[jnp.ndarray] = None):
         if self.cfg.is_encdec:
-            if adapter_ids is not None:
-                raise NotImplementedError("multi-tenant banked adapters are "
-                                          "decoder-family only")
+            if adapter_ids is not None or block_tables is not None:
+                raise NotImplementedError("multi-tenant banked adapters and "
+                                          "paged decoding are decoder-family "
+                                          "only")
             return encdec.decode_step(params, cache, tokens, pos, self.cfg,
                                       adapters, lora_scale)
         return dec.decode_step(params, cache, tokens, pos, self.cfg,
-                               adapters, lora_scale, adapter_ids=adapter_ids)
+                               adapters, lora_scale, adapter_ids=adapter_ids,
+                               block_tables=block_tables)
 
 
 def get_model(cfg) -> Model:

@@ -222,12 +222,21 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
                         causal: bool = True,
                         kv_override: Optional[Tuple] = None,
                         use_flash: bool = False,
-                        adapter_ids: Optional[jnp.ndarray] = None):
+                        adapter_ids: Optional[jnp.ndarray] = None,
+                        paged: Optional[Tuple] = None):
     """Attention over x: (B, S, d).
 
     * training / prefill: ``kv_cache`` is None, causal (+ window) mask.
     * decode: ``kv_cache`` = {"k","v": (B, S_cache, Kv, hd), "pos": scalar
       next write offset}; x has S==1. Returns (out, new_cache).
+    * paged decode (continuous batching): ``kv_cache`` = {"k_pool","v_pool":
+      (num_blocks, block_size, Kv, hd)} shared across slots and
+      ``paged=(block_tables (B, MB) int32, lengths (B,) int32)`` — row b
+      holds ``lengths[b]`` context tokens in the blocks named by its table
+      row, the new token is scattered to block ``lengths[b]//bs`` offset
+      ``lengths[b]%bs``, and the mask is per-row (ragged lengths). The jnp
+      gather below is the oracle; ``kernels/paged_attention.py`` is the TPU
+      drop-in that never materialises it in HBM.
     * cross-attention (whisper): ``kv_override=(k, v)`` precomputed from the
       encoder; causal=False.
     """
@@ -248,7 +257,32 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
         k, v = kv_override
 
     new_cache = None
-    if kv_cache is not None:
+    row_mask = None
+    if kv_cache is not None and paged is not None:
+        # Paged decode: scatter the new K/V to each row's (block, offset),
+        # then attend over the row's gathered blocks with a per-row length
+        # mask. Blocks hold contiguous positions, so gathered order ==
+        # position order and softmax sums match the dense ring buffer.
+        block_tables, lengths = paged                 # (B, MB) i32, (B,) i32
+        bs_blk = kv_cache["k_pool"].shape[1]
+        rows = jnp.arange(B, dtype=jnp.int32)
+        blk = block_tables[rows, lengths // bs_blk]   # (B,) physical block
+        off = lengths % bs_blk
+        kp = kv_cache["k_pool"].at[blk, off].set(
+            k[:, 0].astype(kv_cache["k_pool"].dtype))
+        vp = kv_cache["v_pool"].at[blk, off].set(
+            v[:, 0].astype(kv_cache["v_pool"].dtype))
+        new_cache = {"k_pool": kp, "v_pool": vp}
+        MB = block_tables.shape[1]
+        L = MB * bs_blk
+        k = kp[block_tables].reshape(B, L, Kv, hd).astype(x.dtype)
+        v = vp[block_tables].reshape(B, L, Kv, hd).astype(x.dtype)
+        k_pos = jnp.arange(L, dtype=jnp.int32)        # slot-logical order
+        # per-row mask: q_pos = lengths (the new token's position), so the
+        # (B, L) causal+window mask falls out of _attn_mask directly
+        row_mask = _attn_mask(lengths, k_pos,
+                              cfg.sliding_window)[:, None, :]  # (B, Sq=1, L)
+    elif kv_cache is not None:
         # Ring buffer: slot = absolute_position % cache_len. For full
         # attention the cache is allocated at full context length (no wrap);
         # for sliding-window archs it is window-sized and wraps.
@@ -290,11 +324,15 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
         c = cfg.attn_logit_softcap
         logits = c * jnp.tanh(logits / c)
     if causal:
-        mask = _attn_mask(q_pos, k_pos, cfg.sliding_window)
-        mask &= (k_pos >= 0)[None, :]  # exclude never-written cache slots
         neg = jnp.asarray(-1e30 if sm_dtype == jnp.float32 else -3e38 / 10,
                           sm_dtype)
-        shaped = mask[None, None, None] if grouped else mask[None, None]
+        if row_mask is not None:                       # paged: (B, Sq, L)
+            shaped = (row_mask[:, None, None] if grouped
+                      else row_mask[:, None])
+        else:
+            mask = _attn_mask(q_pos, k_pos, cfg.sliding_window)
+            mask &= (k_pos >= 0)[None, :]  # exclude never-written cache slots
+            shaped = mask[None, None, None] if grouped else mask[None, None]
         logits = jnp.where(shaped, logits, neg)
     probs = jax.nn.softmax(logits.astype(sm_dtype), axis=-1).astype(x.dtype)
     if grouped:
@@ -319,6 +357,20 @@ def init_kv_cache(cfg, batch: int, cache_len: int, dtype) -> Params:
 def kv_cache_specs() -> Params:
     return {"k": P(DATA, None, MODEL, None), "v": P(DATA, None, MODEL, None),
             "pos": P()}
+
+
+def init_paged_kv_cache(cfg, num_blocks: int, block_size: int, dtype) -> Params:
+    """One K/V pool per layer, shared by every serving slot: blocks are
+    handed to slots by the host-side block table (serving/kv_cache.py)."""
+    Kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"k_pool": jnp.zeros((num_blocks, block_size, Kv, hd), dtype=dtype),
+            "v_pool": jnp.zeros((num_blocks, block_size, Kv, hd), dtype=dtype)}
+
+
+def paged_kv_cache_specs() -> Params:
+    # the block axis is a shared pool (no batch sharding); heads on MODEL
+    return {"k_pool": P(None, None, MODEL, None),
+            "v_pool": P(None, None, MODEL, None)}
 
 
 # ---------------------------------------------------------------------------

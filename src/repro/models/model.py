@@ -119,7 +119,7 @@ def param_specs(cfg) -> Params:
 
 def _apply_block(entry: str, bp: Params, x, cfg, positions,
                  adapters=None, lora_scale=1.0, cache=None,
-                 adapter_ids=None):
+                 adapter_ids=None, paged=None):
     """One layer. Returns (x, new_cache, aux)."""
     mixer, mlp = _parse(entry)
     ad = adapters or {}
@@ -128,7 +128,7 @@ def _apply_block(entry: str, bp: Params, x, cfg, positions,
     if mixer == "attn":
         out, new_mix_cache = L.multihead_attention(
             bp["mixer"], h, cfg, positions, ad.get("mixer"), lora_scale,
-            kv_cache=cache, adapter_ids=adapter_ids)
+            kv_cache=cache, adapter_ids=adapter_ids, paged=paged)
     else:
         out, new_mix_cache = mamba2.apply_mamba(
             bp["mixer"], h, cfg, ad.get("mixer"), lora_scale, ssm_cache=cache,
@@ -232,19 +232,59 @@ def decode_cache_specs(cfg) -> Params:
     return specs
 
 
+def init_paged_decode_cache(cfg, num_slots: int, num_blocks: int,
+                            block_size: int) -> Params:
+    """Serving-path cache for continuous batching: attention layers share one
+    K/V block pool (slots reference blocks through the scheduler's block
+    table); SSM/Mamba rows keep dense per-slot recurrent state."""
+    cache: Params = {"blocks": {}}
+    for name, entry in zip(_block_names(cfg), cfg.layer_pattern):
+        mixer, _ = _parse(entry)
+        if mixer == "attn":
+            one = lambda: L.init_paged_kv_cache(cfg, num_blocks, block_size,
+                                                jnp.bfloat16)
+        else:
+            one = lambda: mamba2.init_ssm_cache(cfg, num_slots)
+        cache["blocks"][name] = jax.tree.map(
+            lambda *ls: jnp.stack(ls), *[one() for _ in range(cfg.n_periods)])
+    return cache
+
+
+def paged_decode_cache_specs(cfg) -> Params:
+    specs: Params = {"blocks": {}}
+    for name, entry in zip(_block_names(cfg), cfg.layer_pattern):
+        mixer, _ = _parse(entry)
+        base = (L.paged_kv_cache_specs() if mixer == "attn"
+                else mamba2.ssm_cache_specs())
+        specs["blocks"][name] = _add_leading(base)
+    return specs
+
+
 def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
                 pos: jnp.ndarray, cfg,
                 adapters: Optional[Params] = None, lora_scale: float = 1.0,
-                adapter_ids: Optional[jnp.ndarray] = None
+                adapter_ids: Optional[jnp.ndarray] = None,
+                block_tables: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Params]:
     """One decode step. tokens: (B, 1) int32; pos: scalar int32 (tokens
     already in the cache). ``adapter_ids``: (B,) int32 client slots for
-    multi-tenant banked adapters. Returns (logits (B, 1, V), new cache)."""
+    multi-tenant banked adapters.
+
+    Continuous batching: pass ``block_tables`` (B, MB) int32 and a *per-row*
+    ``pos`` (B,) int32 of ragged context lengths; the cache must come from
+    :func:`init_paged_decode_cache`. Returns (logits (B, 1, V), new cache)."""
     dtype = L.dt(cfg.dtype)
     x = params["embed"].astype(dtype)[tokens]
     if cfg.family == "dense" and cfg.tie_embeddings:
         x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
-    positions = pos[None].astype(jnp.int32) if pos.ndim == 0 else pos.astype(jnp.int32)
+    if block_tables is not None:
+        pos = pos.astype(jnp.int32)                  # (B,) ragged lengths
+        positions = pos[:, None]                     # (B, S=1) for RoPE
+        paged = (block_tables, pos)
+    else:
+        positions = (pos[None].astype(jnp.int32) if pos.ndim == 0
+                     else pos.astype(jnp.int32))
+        paged = None
 
     block_names = _block_names(cfg)
     ad_blocks = (adapters or {}).get("blocks", {})
@@ -256,7 +296,7 @@ def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
             x, nc, _ = _apply_block(entry, xs[name], x, cfg, positions,
                                     xs.get("__ad_" + name), lora_scale,
                                     cache=xs["__cache_" + name],
-                                    adapter_ids=adapter_ids)
+                                    adapter_ids=adapter_ids, paged=paged)
             new_caches[name] = nc
         return x, new_caches
 

@@ -8,13 +8,16 @@ one standard adapter (Eq. 7). Two engines share one generation loop:
   * :class:`MultiTenantEngine` — one base-model program + an
     :class:`~repro.serving.registry.AdapterRegistry` bank; callers submit
     :class:`Request` objects carrying ``client_id`` and the engine serves
-    *mixed-client* prefill+decode batches, routing every batch row to its
-    client's adapter via per-row ``adapter_ids`` (gathered on-chip, see
+    *mixed-client* batches, routing every batch row to its client's adapter
+    via per-row ``adapter_ids`` (gathered on-chip, see
     ``kernels/batched_lora.py``).
 
-Both support ``prefill`` (run the full prompt once, fill the cache —
-sub-quadratic archs fill SSM state / windowed cache), ``decode`` (steps of
-one token for a whole request batch), greedy and temperature sampling.
+``MultiTenantEngine.generate`` is a **continuous-batching** loop over a
+paged KV cache (``serving/kv_cache.py`` + ``serving/scheduler.py``): ragged
+prompts, per-request token budgets, per-row EOS, and admission of queued
+requests into slots freed mid-flight.  ``generate_fixed`` keeps the
+fixed-shape one-batch-per-call path (equal-length prompts, one shared
+budget) — equal-shape greedy requests produce bit-identical tokens on both.
 """
 from __future__ import annotations
 
@@ -23,28 +26,39 @@ from typing import Any, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.lora import lora_scale
+from repro.serving.kv_cache import PagedKVCache, blocks_needed, reset_slot
 from repro.serving.registry import AdapterRegistry
+from repro.serving.scheduler import Scheduler
 
 Params = Any
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    batch_size: int
-    max_new_tokens: int = 32
-    cache_len: int = 4096
-    temperature: float = 0.0  # 0 => greedy
+    batch_size: int                  # decode slots (continuous) / batch rows
+    max_new_tokens: int = 32         # default per-request budget
+    cache_len: int = 4096            # fixed-path cache length
+    temperature: float = 0.0         # 0 => greedy
     seed: int = 0
+    eos_id: Optional[int] = None     # finished rows emit pad_id afterwards
+    pad_id: int = 0
+    block_size: int = 16             # paged-cache block size (continuous)
+    num_blocks: Optional[int] = None  # pool size; None => full residency
+    scan_chunk: int = 32             # max device steps between admissions
 
 
 @dataclasses.dataclass
 class Request:
-    """One generation request. ``prompt``: (S,) int32; prompts in a batch
-    must share S (continuous batching / paged prefill is a ROADMAP item)."""
+    """One generation request. ``prompt``: (S,) int32 — ragged lengths are
+    fine under ``MultiTenantEngine.generate`` (continuous batching); the
+    fixed path (``generate_fixed``) still needs every prompt to share S.
+    ``max_new_tokens`` overrides ``ServeConfig.max_new_tokens`` per request."""
     client_id: Any
     prompt: Any
+    max_new_tokens: Optional[int] = None
 
 
 class _EngineBase:
@@ -55,6 +69,8 @@ class _EngineBase:
         self.scale = lora_scale(cfg)
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
+        self._paged_chunk = jax.jit(self._paged_chunk_impl,
+                                    static_argnames=("chunk_cap",))
 
     # -- steps ---------------------------------------------------------------
     def _prefill_impl(self, params, adapters, ids, cache, tokens):
@@ -80,16 +96,54 @@ class _EngineBase:
         logits, cache = self.model.decode_step(
             params, cache, tok, pos, adapters=adapters, lora_scale=self.scale,
             adapter_ids=ids)
+        return self._sample(logits, rng, temperature), cache
+
+    def _paged_chunk_impl(self, params, adapters, ids, cache, prompt, plen,
+                          fed, last, active, lengths, block_tables, n_steps,
+                          rng, temperature, chunk_cap):
+        """Up to ``n_steps`` (dynamic, <= static ``chunk_cap``) decode steps
+        fully on device: each slot feeds its next prompt token while
+        ``fed < plen`` and its last sample afterwards — one dispatch per
+        chunk instead of per token.  Returns the (chunk_cap, K) sampled
+        block (rows >= n_steps are garbage; the scheduler slices)."""
+        K = ids.shape[0]
+        rows = jnp.arange(K, dtype=jnp.int32)
+        width = prompt.shape[1]
+
+        def body(t, carry):
+            cache, fed, last, lengths, rng, out = carry
+            tok = jnp.where(fed < plen,
+                            prompt[rows, jnp.clip(fed, 0, width - 1)], last)
+            rng, sub = jax.random.split(rng)
+            logits, cache = self.model.decode_step(
+                params, cache, tok[:, None], lengths, adapters=adapters,
+                lora_scale=self.scale, adapter_ids=ids,
+                block_tables=block_tables)
+            nxt = self._sample(logits, sub, temperature)
+            out = out.at[t].set(nxt)
+            return (cache, fed + active, nxt, lengths + active, rng, out)
+
+        out0 = jnp.zeros((chunk_cap, K), jnp.int32)
+        carry = jax.lax.fori_loop(
+            0, n_steps, body, (cache, fed, last, lengths, rng, out0))
+        cache, _, _, _, _, out = carry
+        return out, cache
+
+    @staticmethod
+    def _sample(logits, rng, temperature):
         lg = logits[:, 0]
         greedy = jnp.argmax(lg, axis=-1)
         sampled = jax.random.categorical(rng, lg / jnp.maximum(temperature, 1e-6))
-        nxt = jnp.where(temperature > 0, sampled, greedy)
-        return nxt.astype(jnp.int32), cache
+        return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
 
     # -- loop ----------------------------------------------------------------
     def _run(self, params, adapters, ids, prompts: jnp.ndarray,
              sc: ServeConfig) -> jnp.ndarray:
-        """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32."""
+        """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32.
+
+        With ``sc.eos_id`` set, a row that samples EOS emits ``sc.pad_id``
+        from then on and the loop exits early once every row has finished
+        (the output stays (B, max_new_tokens), pad-filled)."""
         B = prompts.shape[0]
         cache = self.model.init_decode_cache(B, sc.cache_len)
         cache, pos, last_logits = self._prefill(params, adapters, ids,
@@ -97,14 +151,25 @@ class _EngineBase:
         tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
         rng = jax.random.PRNGKey(sc.seed)
         out = [tok[:, 0]]
+        finished = (tok[:, 0] == sc.eos_id) if sc.eos_id is not None else None
         for _ in range(sc.max_new_tokens - 1):
+            if finished is not None and bool(finished.all()):
+                break
             rng, sub = jax.random.split(rng)
             nxt, cache = self._decode(params, adapters, ids, cache, tok,
                                       pos, sub, sc.temperature)
+            if finished is not None:
+                nxt = jnp.where(finished, jnp.int32(sc.pad_id), nxt)
+                finished = finished | (nxt == sc.eos_id)
             pos = pos + 1
             tok = nxt[:, None]
             out.append(nxt)
-        return jnp.stack(out, axis=1)
+        res = jnp.stack(out, axis=1)
+        if res.shape[1] < sc.max_new_tokens:          # early all-EOS exit
+            pad = jnp.full((B, sc.max_new_tokens - res.shape[1]),
+                           sc.pad_id, jnp.int32)
+            res = jnp.concatenate([res, pad], axis=1)
+        return res
 
 
 class Engine(_EngineBase):
@@ -124,10 +189,9 @@ class MultiTenantEngine(_EngineBase):
     """One compiled program serving every registered client.
 
     Requests carry ``client_id``; the engine resolves each to its bank slot
-    (LRU-touching the registry), stacks the prompts into one mixed-client
-    batch and threads the (B,) slot vector through the model as
-    ``adapter_ids``. Adapter registration/eviction between calls never
-    changes bank shapes, so the jitted prefill/decode programs are reused
+    (LRU-touching the registry) and threads the per-row slot vector through
+    the model as ``adapter_ids``. Adapter registration/eviction between
+    calls never changes bank shapes, so the jitted programs are reused
     across any tenant mix.
     """
 
@@ -135,10 +199,64 @@ class MultiTenantEngine(_EngineBase):
         super().__init__(model, cfg)
         self.params, self.registry = params, registry
 
+    # -- continuous batching (the serving path) ------------------------------
     def generate(self, requests: Sequence[Request],
-                 sc: ServeConfig) -> jnp.ndarray:
+                 sc: ServeConfig) -> List[np.ndarray]:
+        """Continuous batching over ``sc.batch_size`` slots of a paged KV
+        cache: ragged prompts, per-request ``max_new_tokens``, per-row EOS.
+        Requests beyond the slot count queue and are admitted as slots free
+        up; each result is returned when ITS request completes, not when the
+        whole batch drains.
+
+        Returns one 1-D int32 array per request (request order), length <=
+        its budget (EOS-terminated rows include the EOS token and stop)."""
+        if not requests:
+            raise ValueError("empty request batch")
+        prompts = [np.asarray(r.prompt, np.int32).reshape(-1)
+                   for r in requests]
+        budgets = [sc.max_new_tokens if r.max_new_tokens is None
+                   else r.max_new_tokens for r in requests]
+        num_slots = max(1, min(sc.batch_size, len(requests)))
+        max_span = max(p.size + b for p, b in zip(prompts, budgets))
+        blocks_per = blocks_needed(max_span, sc.block_size)
+        num_blocks = sc.num_blocks or (1 + num_slots * blocks_per)
+        kv = PagedKVCache(num_slots, sc.block_size, num_blocks, blocks_per)
+        sched = Scheduler(kv)
+        for rid, (r, p, b) in enumerate(zip(requests, prompts, budgets)):
+            sched.submit(rid, r.client_id, p, b)
+
+        cache = self.model.init_paged_decode_cache(num_slots, num_blocks,
+                                                   sc.block_size)
+        bank = self.registry.bank()
+        ids = np.zeros((num_slots,), np.int32)
+        rng = jax.random.PRNGKey(sc.seed)
+        width = max(p.size for p in prompts)
+        # EOS can end a row long before its budget; keep chunks short so its
+        # slot frees (and admits the queue head) at the next boundary.
+        cap = min(sc.scan_chunk, 8) if sc.eos_id is not None else sc.scan_chunk
+        while sched.has_work:
+            for slot, cid in sched.admit():
+                ids[slot] = self.registry.acquire(cid)
+                cache = reset_slot(cache, slot)
+            n = sched.plan_steps(cap)
+            st = sched.chunk_arrays(width)
+            bt, lens = kv.device_tables()
+            rng, sub = jax.random.split(rng)
+            out, cache = self._paged_chunk(
+                self.params, bank, jnp.asarray(ids), cache,
+                jnp.asarray(st["prompt"]), jnp.asarray(st["plen"]),
+                jnp.asarray(st["fed"]), jnp.asarray(st["last"]),
+                jnp.asarray(st["active"]), lens, bt, jnp.int32(n), sub,
+                sc.temperature, chunk_cap=cap)
+            sched.observe_chunk(np.asarray(out)[:n], eos_id=sc.eos_id)
+        return [sched.results[rid] for rid in range(len(requests))]
+
+    # -- fixed-shape batch (the PR-1 path, kept for equal-shape workloads) ---
+    def generate_fixed(self, requests: Sequence[Request],
+                       sc: ServeConfig) -> jnp.ndarray:
         """requests: B same-length prompts (possibly all different clients)
-        -> (B, max_new_tokens) int32, row-aligned with ``requests``."""
+        -> (B, max_new_tokens) int32, row-aligned with ``requests``. Every
+        row decodes the full shared ``sc.max_new_tokens`` budget."""
         if not requests:
             raise ValueError("empty request batch")
         ids = jnp.asarray([self.registry.acquire(r.client_id)

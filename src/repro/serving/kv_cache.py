@@ -1,0 +1,115 @@
+"""Paged KV cache: host-side block accounting over shared device pools.
+
+The serving path replaces the monolithic per-batch ``(B, cache_len)`` cache
+tree (``models/model.py::init_decode_cache``) with fixed-size K/V *blocks*
+drawn from one pool per attention layer
+(``models/model.py::init_paged_decode_cache``).  Each serving **slot** (a
+row of the decode batch) owns a *block table* — a row of physical block ids
+— plus a context length; attention gathers through the table, so slots with
+ragged lengths share one pool with zero padding waste in HBM.  SSM/Mamba
+layers have O(1) recurrent state and simply keep a dense per-slot row
+(reset on admission via :func:`reset_slot`).
+
+This class is pure host bookkeeping (numpy tables, a free list): the device
+cache pytree stays functional and flows through the jitted decode step; the
+tables are uploaded per step (a few hundred int32s).  Physical block 0 is
+reserved as a scratch target so *inactive* slots (table rows all-zero,
+length 0) scatter their garbage write somewhere harmless instead of
+corrupting a live request's block.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def blocks_needed(n_tokens: int, block_size: int) -> int:
+    return -(-max(n_tokens, 1) // block_size)
+
+
+class PagedKVCache:
+    """Block allocator + block tables for ``num_slots`` serving slots.
+
+    ``num_blocks`` counts physical blocks *including* the reserved scratch
+    block 0; ``max_blocks_per_slot`` fixes the block-table width (and so the
+    longest admissible context: ``max_blocks_per_slot * block_size``).
+    """
+
+    def __init__(self, num_slots: int, block_size: int, num_blocks: int,
+                 max_blocks_per_slot: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is scratch)")
+        self.num_slots = num_slots
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.max_blocks_per_slot = max_blocks_per_slot
+        self.block_tables = np.zeros((num_slots, max_blocks_per_slot),
+                                     np.int32)
+        self.lengths = np.zeros((num_slots,), np.int32)
+        self._free: List[int] = list(range(1, num_blocks))
+        self._owned: List[List[int]] = [[] for _ in range(num_slots)]
+
+    # ---- capacity ---------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def fits(self, n_tokens: int) -> bool:
+        """Can a request spanning ``n_tokens`` EVER be admitted?"""
+        n = blocks_needed(n_tokens, self.block_size)
+        return n <= min(self.max_blocks_per_slot, self.num_blocks - 1)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Are there free blocks for the request's full span right now?"""
+        return (self.fits(n_tokens)
+                and blocks_needed(n_tokens, self.block_size) <= self.free_blocks)
+
+    # ---- slot lifecycle ---------------------------------------------------
+    def admit(self, slot: int, n_tokens: int) -> None:
+        """Reserve every block of an ``n_tokens`` context for ``slot``.
+
+        Reserving the full span up front keeps admission deadlock-free (an
+        admitted request can always run to its budget); on-demand growth
+        with preemption is the vLLM refinement this trades away."""
+        assert not self._owned[slot], f"slot {slot} already occupied"
+        if not self.can_admit(n_tokens):
+            raise RuntimeError("admit() without can_admit()")
+        n = blocks_needed(n_tokens, self.block_size)
+        blocks = [self._free.pop(0) for _ in range(n)]
+        self._owned[slot] = blocks
+        self.block_tables[slot] = 0
+        self.block_tables[slot, :n] = blocks
+        self.lengths[slot] = 0
+
+    def advance(self, slot: int) -> None:
+        """One token was written at position ``lengths[slot]``."""
+        self.lengths[slot] += 1
+
+    def release(self, slot: int) -> None:
+        """Return a finished slot's blocks to the free list."""
+        self._free.extend(self._owned[slot])
+        self._owned[slot] = []
+        self.block_tables[slot] = 0
+        self.lengths[slot] = 0
+
+    # ---- device views -----------------------------------------------------
+    def device_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return (jnp.asarray(self.block_tables), jnp.asarray(self.lengths))
+
+
+def reset_slot(cache, slot: int):
+    """Zero one slot's dense recurrent state (SSM rows) in a paged decode
+    cache pytree.  K/V pool blocks need no reset — the per-row length mask
+    excludes never-written positions."""
+    def _zero(leaf_key, leaf):
+        if leaf_key in ("k_pool", "v_pool"):
+            return leaf
+        # mamba state stacked over periods: (n_periods, num_slots, ...)
+        return leaf.at[:, slot].set(jnp.zeros_like(leaf[:, slot]))
+
+    return {"blocks": {
+        name: {k: _zero(k, v) for k, v in entry.items()}
+        for name, entry in cache["blocks"].items()}}

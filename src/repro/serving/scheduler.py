@@ -1,0 +1,166 @@
+"""Continuous-batching scheduler: admission, per-slot progress, eviction.
+
+Sits between a request queue and the paged decode step.  Each serving slot
+tracks one in-flight request's lifecycle:
+
+    queued -> admitted (blocks reserved, SSM state reset)
+           -> prefilling (prompt tokens fed one per engine step; samples
+              discarded while ``fed < len(prompt)``)
+           -> decoding  (sampled tokens emitted and fed back)
+           -> finished  (budget exhausted or EOS) -> slot + blocks freed
+
+The engine drives the loop in chunks:  ``admit()`` between chunks pulls
+queued requests into freed slots (FCFS — the head waits if the block pool
+can't hold its full span, so admitted requests never deadlock),
+``chunk_arrays()`` snapshots per-slot state for up to ``plan_steps()``
+device-side decode steps over ALL active slots, and ``observe_chunk()``
+consumes the sampled block, returning each request's output the moment it
+completes rather than when the batch drains.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.kv_cache import PagedKVCache
+
+
+@dataclasses.dataclass
+class _SlotState:
+    rid: int
+    client_id: Any
+    prompt: np.ndarray            # (S,) int32
+    budget: int                   # max tokens to emit
+    next_token: int               # token the next step feeds
+    fed: int = 0                  # tokens already fed (prompt + emitted)
+    emitted: List[int] = dataclasses.field(default_factory=list)
+
+
+class Scheduler:
+    """FCFS admission over ``kv.num_slots`` slots; results keyed by rid."""
+
+    def __init__(self, kv: PagedKVCache):
+        self.kv = kv
+        self._queue: "deque[Tuple[int, Any, np.ndarray, int]]" = deque()
+        self._slots: List[Optional[_SlotState]] = [None] * kv.num_slots
+        self.results: Dict[int, np.ndarray] = {}
+        self.steps = 0                      # engine steps driven
+
+    # ---- intake -----------------------------------------------------------
+    def submit(self, rid: int, client_id: Any, prompt, budget: int) -> None:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError(f"request {rid}: empty prompt")
+        if budget < 1:
+            raise ValueError(f"request {rid}: budget must be >= 1")
+        span = int(prompt.size) + budget
+        if not self.kv.fits(span):
+            raise ValueError(
+                f"request {rid}: span {span} exceeds cache capacity "
+                f"({self.kv.max_blocks_per_slot} blocks of "
+                f"{self.kv.block_size})")
+        self._queue.append((rid, client_id, prompt, budget))
+
+    # ---- state ------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(s is not None for s in self._slots)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is not None]
+
+    # ---- lifecycle --------------------------------------------------------
+    def admit(self) -> List[Tuple[int, Any]]:
+        """Fill freed slots from the queue head; returns newly admitted
+        ``(slot, client_id)`` pairs (the engine resets SSM state and
+        resolves the adapter slot for each)."""
+        admitted = []
+        for slot in range(self.kv.num_slots):
+            if self._slots[slot] is not None or not self._queue:
+                continue
+            rid, cid, prompt, budget = self._queue[0]
+            span = int(prompt.size) + budget
+            if not self.kv.can_admit(span):
+                break                        # FCFS: wait for blocks to free
+            self._queue.popleft()
+            self.kv.admit(slot, span)
+            self._slots[slot] = _SlotState(rid, cid, prompt, budget,
+                                           next_token=int(prompt[0]))
+            admitted.append((slot, cid))
+        return admitted
+
+    # ---- chunked stepping --------------------------------------------------
+    # One host round-trip per token kills throughput: the engine instead
+    # runs a device-side fori_loop of up to plan_steps() decode steps (each
+    # slot feeding prompt-or-sampled tokens from chunk_arrays state) and
+    # hands the sampled block back to observe_chunk.  (A per-token driver is
+    # just observe_chunk with a (1, num_slots) block.)
+
+    def plan_steps(self, cap: int) -> int:
+        """Steps until the EARLIEST active slot completes its budget — no
+        slot can overrun its reserved block span inside a chunk this long.
+        ``cap`` bounds the chunk (keep small under EOS so early-stopping
+        rows don't burn steps until the boundary)."""
+        remaining = [st.prompt.size - 1 + st.budget - st.fed
+                     for st in self._slots if st is not None]
+        return max(1, min(min(remaining), cap))
+
+    def chunk_arrays(self, prompt_width: int):
+        """Per-slot device state for one chunk: padded prompts, prompt
+        lengths, fed counters, last-fed token, active mask."""
+        K = self.kv.num_slots
+        out = {"prompt": np.zeros((K, prompt_width), np.int32),
+               "plen": np.zeros((K,), np.int32),
+               "fed": np.zeros((K,), np.int32),
+               "last": np.zeros((K,), np.int32),
+               "active": np.zeros((K,), np.int32)}
+        for i, st in enumerate(self._slots):
+            if st is None:
+                continue
+            out["prompt"][i, :st.prompt.size] = st.prompt
+            out["plen"][i] = st.prompt.size
+            out["fed"][i] = st.fed
+            out["last"][i] = st.next_token
+            out["active"][i] = 1
+        return out
+
+    def observe_chunk(self, sampled: np.ndarray,
+                      eos_id: Optional[int] = None) -> List[int]:
+        """Consume an (n, num_slots) block of sampled tokens (step-major);
+        returns rids that finished. Step t of slot i fed token ``fed + t``
+        and its sample is an emission once the prompt is consumed
+        (``fed + t >= len(prompt) - 1``)."""
+        n = sampled.shape[0]
+        finished = []
+        for slot, st in enumerate(self._slots):
+            if st is None:
+                continue
+            done = False
+            for t in range(n):
+                fed_t = st.fed + t
+                if fed_t < st.prompt.size - 1:
+                    continue                 # still prefilling at this step
+                tok = int(sampled[t, slot])
+                st.emitted.append(tok)
+                if (len(st.emitted) >= st.budget
+                        or (eos_id is not None and tok == eos_id)):
+                    done = True
+                    break
+            st.fed += n
+            for _ in range(n):
+                self.kv.advance(slot)
+            if done:
+                self.results[st.rid] = np.asarray(st.emitted, np.int32)
+                self.kv.release(slot)
+                self._slots[slot] = None
+                finished.append(st.rid)
+            else:
+                st.next_token = (int(st.prompt[st.fed])
+                                 if st.fed < st.prompt.size
+                                 else int(sampled[n - 1, slot]))
+        self.steps += n
+        return finished

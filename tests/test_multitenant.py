@@ -192,6 +192,39 @@ def test_registry_lru_eviction_order():
     assert reg.evictions == 1 and len(reg) == 2
 
 
+def test_registry_capacity_one_eviction():
+    """Capacity 1: every registration of a new client evicts the resident
+    one and reuses the single bank slot."""
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, capacity=1)
+    ad = init_adapters(jax.random.PRNGKey(1), cfg)
+    s_a = reg.register("a", ad)
+    s_b = reg.register("b", ad)
+    assert s_a == s_b == 0                  # the one slot is recycled
+    assert "a" not in reg and "b" in reg and len(reg) == 1
+    assert reg.evictions == 1
+    with pytest.raises(KeyError):
+        reg.acquire("a")
+
+
+def test_registry_reregister_refreshes_recency_no_duplicate():
+    """Re-registering a resident client updates its slot in place (no second
+    bank slot) and bumps it to most-recent, changing who gets evicted."""
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, capacity=2)
+    ad1 = init_adapters(jax.random.PRNGKey(1), cfg)
+    ad2 = init_adapters(jax.random.PRNGKey(2), cfg)
+    s_a = reg.register("a", ad1)
+    reg.register("b", ad1)
+    assert reg.register("a", ad2) == s_a and len(reg) == 2   # refreshed, not dup
+    np.testing.assert_allclose(                               # new weights live
+        np.asarray(jax.tree.leaves(reg.bank())[0][:, s_a]),
+        np.asarray(jax.tree.leaves(ad2)[0]))
+    assert reg.resident == ["b", "a"]        # 'a' now most-recent
+    reg.register("c", ad1)                   # evicts 'b', NOT the refreshed 'a'
+    assert "a" in reg and "b" not in reg and reg.evictions == 1
+
+
 def test_registry_register_dual_is_eq7_merge():
     cfg = _cfg()
     reg = AdapterRegistry(cfg, capacity=1)
@@ -229,7 +262,8 @@ def test_mixed_batch_matches_single_tenant_greedy():
         reg.register(cid, ad)
     mt = MultiTenantEngine(model, cfg, params, reg)
     order = ["c1", "c0", "c1", "c0"]          # interleaved two-client batch
-    out_mt = np.asarray(mt.generate([Request(c, prompt) for c in order], sc))
+    out_mt = np.asarray(mt.generate_fixed([Request(c, prompt) for c in order],
+                                          sc))
 
     singles = {cid: np.asarray(
         Engine(model, cfg, params, ad).generate(jnp.asarray(prompt)[None],
@@ -252,7 +286,7 @@ def test_unregistered_slot_serves_base_model():
                                       init_adapters(jax.random.PRNGKey(5),
                                                     cfg)))
     mt = MultiTenantEngine(model, cfg, params, reg)
-    out = np.asarray(mt.generate([Request("zero", prompt)], sc))[0]
+    out = np.asarray(mt.generate_fixed([Request("zero", prompt)], sc))[0]
     base = np.asarray(Engine(model, cfg, params, None).generate(
         jnp.asarray(prompt)[None], sc))[0]
     np.testing.assert_array_equal(out, base)
