@@ -13,6 +13,11 @@ warmup call; CPU interpret-mode numbers — the wins are architectural):
     length, every group decoding its max budget (padding waste) — and (b)
     the continuous slot scheduler over the paged KV cache.  Writes
     ``BENCH_serving.json`` (tok/s, waste, speedup).
+  * prefill (also default): a prompt-heavy ragged stream served with
+    chunked multi-token prefill (``prefill_chunk=16``) vs the
+    one-token-per-dispatch baseline (``prefill_chunk=1``) — same outputs,
+    fraction of the prefill dispatches.  Appends a ``prefill`` section to
+    ``BENCH_serving.json``.
   * ``--block-sweep``: ``kernels/batched_lora.py`` tile-size sweep per
     (n_clients, rank) — groundwork for the ROADMAP autotuning item.
   * ``--smoke``: tiny correctness-only run for CI (serving-path regressions
@@ -23,7 +28,9 @@ warmup call; CPU interpret-mode numbers — the wins are architectural):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import os
 import sys
 
 import jax
@@ -207,6 +214,80 @@ def ragged_section(json_path: str, smoke: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill: dispatches per prompt token vs per prompt CHUNK
+# ---------------------------------------------------------------------------
+
+def prefill_section(json_path: str, smoke: bool = False):
+    """Prompt-heavy ragged stream through the continuous engine, chunked
+    prefill (prefill_chunk=16) vs the one-token-per-dispatch baseline
+    (prefill_chunk=1 drives the same machinery one prompt token at a time).
+    Outputs must be identical; the win is the prefill-phase dispatch count
+    (and wall time once prompts dominate)."""
+    n_clients = 2
+    model, params, ads, mt = _setup(n_clients)
+    plens = (24, 40) if smoke else (24, 40, 64, 32, 48, 56)
+    reqs = []
+    for i, plen in enumerate(plens):
+        prompt = (np.arange(plen, dtype=np.int32) * 5 + i) % CFG.vocab_size
+        reqs.append(Request(f"c{i % n_clients}", prompt, max_new_tokens=4))
+    prompt_tokens = sum(len(r.prompt) for r in reqs)
+
+    sc_chunk = ServeConfig(batch_size=4, max_new_tokens=4, block_size=8,
+                           prefill_chunk=16)
+    sc_token = dataclasses.replace(sc_chunk, prefill_chunk=1)
+
+    out_c = mt.generate(reqs, sc_chunk)
+    st_c = dict(mt.last_stats)
+    out_t = mt.generate(reqs, sc_token)
+    st_t = dict(mt.last_stats)
+    for a, b in zip(out_c, out_t):            # parity before trusting counts
+        np.testing.assert_array_equal(a, b)
+
+    reduction = st_t["prefill_dispatches"] / st_c["prefill_dispatches"]
+    print(row("prefill_dispatches_per_token", 0.0,
+              f"{st_t['prefill_dispatches']}"))
+    print(row("prefill_dispatches_chunked", 0.0,
+              f"{st_c['prefill_dispatches']}"))
+    print(row("prefill_dispatch_reduction", 0.0, f"{reduction:.2f}x"))
+    assert reduction >= 2.0, \
+        f"chunked prefill must cut dispatches >=2x (got {reduction:.2f}x)"
+    if smoke:
+        print(row("prefill_smoke_parity", 0.0, "ok"))
+        return
+
+    _, us_c = timed(lambda: mt.generate(reqs, sc_chunk))
+    _, us_t = timed(lambda: mt.generate(reqs, sc_token))
+    print(row("prefill_chunked", us_c, f"chunk=16"))
+    print(row("prefill_per_token", us_t, f"chunk=1"))
+    print(row("prefill_walltime_speedup", us_t / us_c * 100,
+              f"{us_t / us_c:.2f}x"))
+
+    record = {}
+    if os.path.exists(json_path):
+        with open(json_path) as f:
+            record = json.load(f)
+    record["prefill"] = {
+        "workload": {"requests": len(reqs), "prompt_tokens": prompt_tokens,
+                     "prompt_lens": sorted(plens), "budget": 4,
+                     "slots": sc_chunk.batch_size,
+                     "block_size": sc_chunk.block_size},
+        "per_token": {"prefill_dispatches": st_t["prefill_dispatches"],
+                      "us_per_call": us_t},
+        "chunked": {"prefill_chunk": sc_chunk.prefill_chunk,
+                    "prefill_dispatches": st_c["prefill_dispatches"],
+                    "us_per_call": us_c},
+        "dispatch_reduction": reduction,
+        "walltime_speedup": us_t / us_c,
+        "note": "CPU interpret-mode; chunked paged prefill consumes a whole "
+                "prompt chunk per dispatch (kernels/paged_prefill.py)",
+    }
+    with open(json_path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {json_path} (prefill section)")
+
+
+# ---------------------------------------------------------------------------
 # Block-size sweep for the batched-LoRA kernel (autotuning groundwork)
 # ---------------------------------------------------------------------------
 
@@ -250,9 +331,11 @@ def main(argv=None):
         return
     if args.smoke:
         ragged_section(args.json, smoke=True)
+        prefill_section(args.json, smoke=True)
         return
     fixed_shape_sections()
     ragged_section(args.json)
+    prefill_section(args.json)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ from repro.kernels.dual_lora import dual_lora_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lora_matmul import lora_matmul
 from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_prefill import paged_prefill_attention, paged_scatter
 
 
 def _pad_to(x, axis, mult):
@@ -126,6 +127,40 @@ def paged_gqa_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                         lengths.astype(jnp.int32), scale=scale,
                         interpret=interpret)[..., :hd]
     return o[:, None] if squeeze else o
+
+
+def paged_prefill_gqa_attention(q: jnp.ndarray, k_new: jnp.ndarray,
+                                v_new: jnp.ndarray, k_pool: jnp.ndarray,
+                                v_pool: jnp.ndarray,
+                                block_tables: jnp.ndarray,
+                                lengths: jnp.ndarray,
+                                n_new: jnp.ndarray, *,
+                                interpret: bool = True):
+    """Model-layout adapter for the chunked paged-prefill kernel.
+
+    q/k_new/v_new: (B, T, H|Kv, hd) — a whole prompt chunk per serving slot,
+    as produced by the serving prefill step; k_pool/v_pool: (NB, bs, Kv, hd).
+    Scatters the chunk's K/V into each row's block-table slots (positions
+    ``lengths[b] .. lengths[b] + n_new[b] - 1``; ragged tails with
+    ``t >= n_new[b]`` land in scratch block 0), then runs the Pallas kernel
+    over the updated pools — the O(T) scatter is materialised, the
+    O(context) gather never is.  Pads head_dim to 128 lanes.
+
+    Returns (out (B, T, H, hd), new_k_pool, new_v_pool)."""
+    hd = q.shape[-1]
+    kp, vp = paged_scatter(k_pool, v_pool, k_new, v_new,
+                           block_tables.astype(jnp.int32),
+                           lengths.astype(jnp.int32),
+                           n_new.astype(jnp.int32))
+
+    scale = hd ** -0.5                       # scale from the *unpadded* head
+    qp, _ = _pad_to(q, 3, 128)
+    kpp, _ = _pad_to(kp, 3, 128)
+    vpp, _ = _pad_to(vp, 3, 128)
+    o = paged_prefill_attention(qp, kpp, vpp, block_tables.astype(jnp.int32),
+                                lengths.astype(jnp.int32), scale=scale,
+                                interpret=interpret)[..., :hd]
+    return o, kp, vp
 
 
 def gqa_flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,

@@ -79,6 +79,36 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
     return out.astype(q.dtype)
 
 
+def paged_prefill_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                                scale: float | None = None):
+    """Chunked paged prefill: q: (B, T, H, hd) chunk queries at absolute
+    positions ``lengths[b] + t``; k_pool/v_pool: (NB, bs, Kv, hd) pools WITH
+    the chunk's K/V already scattered in; block_tables: (B, MB) int32;
+    lengths: (B,) int32 context written before the chunk.
+
+    Query t of row b attends positions ``[0, lengths[b] + t]`` — prior
+    context plus the causal mask inside the chunk.  The reference
+    materialises the padded per-row block gather (B, MB*bs, Kv, hd) in HBM,
+    which is what ``kernels/paged_prefill.py`` avoids."""
+    B, T, H, hd = q.shape
+    bs, Kv = k_pool.shape[1], k_pool.shape[2]
+    MB = block_tables.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+    rep = H // Kv
+    k = jnp.repeat(k_pool[block_tables].reshape(B, MB * bs, Kv, hd),
+                   rep, axis=2).astype(jnp.float32)
+    v = jnp.repeat(v_pool[block_tables].reshape(B, MB * bs, Kv, hd),
+                   rep, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bthd,bkhd->bhtk", q.astype(jnp.float32), k) * scale
+    q_pos = lengths[:, None] + jnp.arange(T)[None, :]           # (B, T)
+    mask = jnp.arange(MB * bs)[None, None, :] <= q_pos[:, :, None]  # (B,T,L)
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(mask[:, None], probs, 0.0)
+    out = jnp.einsum("bhtk,bkhd->bthd", probs, v)
+    return out.astype(q.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         sliding_window: int = 0, scale: float | None = None):
     """q: (B, H, Sq, d), k/v: (B, H, Sk, d) -> (B, H, Sq, d).

@@ -55,6 +55,12 @@ def main(argv=None):
                     help="continuous mode: queued requests (default 3x batch)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="continuous mode: KV block size (tokens)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="continuous mode: prompt tokens per prefill "
+                         "dispatch (1 = legacy one-token-per-step)")
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous mode: print per-request token "
+                         "increments as chunks complete (generate_stream)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -92,17 +98,33 @@ def main(argv=None):
             # the scheduler admits queued requests as slots free up.
             n_req = args.requests or 3 * args.batch
             sc.block_size = args.block_size
+            sc.prefill_chunk = args.prefill_chunk
             reqs = [Request(f"client{i % args.tenants}",
                             prompt[: 8 + (5 * i) % (len(prompt) - 7)],
                             max_new_tokens=4 + (7 * i) % args.new_tokens)
                     for i in range(n_req)]
             t0 = time.time()
-            outs = eng.generate(reqs, sc)
+            if args.stream:
+                outs = [np.zeros((0,), np.int32)] * n_req
+                for rid, toks, finished in eng.generate_stream(reqs, sc):
+                    outs[rid] = np.concatenate(
+                        [outs[rid], np.asarray(toks, np.int32)])
+                    tag = " <done>" if finished else ""
+                    print(f"  [stream] req{rid} +{len(toks)} "
+                          f"({outs[rid].size} total){tag}: "
+                          f"{tok.decode(np.asarray(toks))[:24]!r}")
+            else:
+                outs = eng.generate(reqs, sc)
             dt = time.time() - t0
             total = sum(o.size for o in outs)
+            stats = eng.last_stats
             print(f"{args.tenants} tenants, {n_req} ragged requests over "
-                  f"{args.batch} slots (block={sc.block_size}): {total} "
-                  f"tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl. compile)")
+                  f"{args.batch} slots (block={sc.block_size}, "
+                  f"prefill_chunk={sc.prefill_chunk}): {total} tokens in "
+                  f"{dt:.2f}s ({total/dt:.1f} tok/s incl. compile); "
+                  f"{stats['prefill_dispatches']} prefill + "
+                  f"{stats['decode_dispatches']} decode dispatches, "
+                  f"{stats['preemptions']} preemptions")
             for r, o in list(zip(reqs, outs))[:args.tenants]:
                 print(f"  {r.client_id} (S={len(r.prompt)}, "
                       f"budget={r.max_new_tokens}):", tok.decode(o)[:40])

@@ -74,6 +74,20 @@ class Model:
             raise NotImplementedError("paged decoding is decoder-family only")
         return dec.paged_decode_cache_specs(self.cfg)
 
+    def prefill_step(self, params: Params, cache: Params, tokens, pos, n_new,
+                     adapters: Optional[Params] = None,
+                     lora_scale: float = 1.0,
+                     adapter_ids: Optional[jnp.ndarray] = None,
+                     block_tables: Optional[jnp.ndarray] = None):
+        """Chunked paged prefill: tokens (B, T) with n_new (B,) valid per
+        row, scattered through block_tables at per-row offsets pos (B,).
+        Returns (logits (B, T, V), cache)."""
+        if self.cfg.is_encdec:
+            raise NotImplementedError("paged prefill is decoder-family only")
+        return dec.prefill_step(params, cache, tokens, pos, n_new, self.cfg,
+                                adapters, lora_scale, adapter_ids=adapter_ids,
+                                block_tables=block_tables)
+
     def decode_step(self, params: Params, cache: Params, tokens, pos,
                     adapters: Optional[Params] = None, lora_scale: float = 1.0,
                     adapter_ids: Optional[jnp.ndarray] = None,

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels.paged_prefill import paged_scatter
+
 Params = Dict[str, Any]
 
 # Mesh-axis aliases used in spec trees. The launcher rewrites "model"/"data"
@@ -214,6 +216,52 @@ def _attn_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
     return causal
 
 
+
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg,
+          mask: Optional[jnp.ndarray], out_dtype) -> jnp.ndarray:
+    """Masked softmax attention: q (B, Sq, H, hd), k/v (B, Sk, Kv, hd) ->
+    (B, Sq, H*hd).  ``mask``: (Sq, Sk) shared, (B, Sq, Sk) per-row, or None.
+
+    Grouped mode folds the q-heads-per-kv-head group into the einsum instead
+    of materialising the (B, Sk, H, hd) repeated K/V."""
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    scale = hd ** -0.5
+    sm_dtype = dt(getattr(cfg, "attn_softmax_dtype", "float32"))
+    grouped = getattr(cfg, "attn_impl", "repeat") == "grouped" and H != Kv
+
+    if grouped:
+        G = H // Kv
+        qg = q.reshape(B, Sq, Kv, G, hd)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                            preferred_element_type=sm_dtype) * scale
+    else:
+        k = repeat_kv(k, H // Kv)
+        v = repeat_kv(v, H // Kv)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                            preferred_element_type=sm_dtype) * scale
+    if cfg.attn_logit_softcap > 0:
+        c = cfg.attn_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    if mask is not None:
+        neg = jnp.asarray(-1e30 if sm_dtype == jnp.float32 else -3e38 / 10,
+                          sm_dtype)
+        if mask.ndim == 3:                             # per-row (B, Sq, Sk)
+            shaped = mask[:, None, None] if grouped else mask[:, None]
+        else:                                          # shared (Sq, Sk)
+            shaped = mask[None, None, None] if grouped else mask[None, None]
+        logits = jnp.where(shaped, logits, neg)
+    probs = jax.nn.softmax(logits.astype(sm_dtype), axis=-1).astype(out_dtype)
+    if grouped:
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v,
+                         preferred_element_type=jnp.float32).astype(out_dtype)
+    else:
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                         preferred_element_type=jnp.float32).astype(out_dtype)
+    return out.reshape(B, Sq, H * hd)
+
+
 def multihead_attention(params: Params, x: jnp.ndarray, cfg,
                         positions: jnp.ndarray,
                         adapters: Optional[Params] = None,
@@ -229,14 +277,21 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
     * training / prefill: ``kv_cache`` is None, causal (+ window) mask.
     * decode: ``kv_cache`` = {"k","v": (B, S_cache, Kv, hd), "pos": scalar
       next write offset}; x has S==1. Returns (out, new_cache).
-    * paged decode (continuous batching): ``kv_cache`` = {"k_pool","v_pool":
-      (num_blocks, block_size, Kv, hd)} shared across slots and
-      ``paged=(block_tables (B, MB) int32, lengths (B,) int32)`` — row b
-      holds ``lengths[b]`` context tokens in the blocks named by its table
-      row, the new token is scattered to block ``lengths[b]//bs`` offset
-      ``lengths[b]%bs``, and the mask is per-row (ragged lengths). The jnp
-      gather below is the oracle; ``kernels/paged_attention.py`` is the TPU
-      drop-in that never materialises it in HBM.
+    * paged decode / chunked paged prefill (continuous batching):
+      ``kv_cache`` = {"k_pool","v_pool": (num_blocks, block_size, Kv, hd)}
+      shared across slots and ``paged=(block_tables (B, MB) int32,
+      lengths (B,) int32[, n_new (B,) int32])`` — row b holds ``lengths[b]``
+      context tokens in the blocks named by its table row.  The S incoming
+      tokens are scattered to positions ``lengths[b] + t`` through the
+      table (with the 3-tuple form, rows ``t >= n_new[b]`` are redirected
+      to scratch block 0 — host-side chunk raggedness), and each query
+      attends ``[0, lengths[b] + t]``.  Attention is computed one chunk
+      position at a time so a multi-token prefill chunk stays BITWISE equal
+      to feeding the same tokens one decode step each (the probs·V matmul
+      is not chunk-size-invariant on CPU).  The jnp gather below is the
+      oracle; ``kernels/paged_attention.py`` (decode) and
+      ``kernels/paged_prefill.py`` (chunk) are the TPU drop-ins that never
+      materialise it in HBM.
     * cross-attention (whisper): ``kv_override=(k, v)`` precomputed from the
       encoder; causal=False.
     """
@@ -257,31 +312,39 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
         k, v = kv_override
 
     new_cache = None
-    row_mask = None
     if kv_cache is not None and paged is not None:
-        # Paged decode: scatter the new K/V to each row's (block, offset),
-        # then attend over the row's gathered blocks with a per-row length
-        # mask. Blocks hold contiguous positions, so gathered order ==
-        # position order and softmax sums match the dense ring buffer.
-        block_tables, lengths = paged                 # (B, MB) i32, (B,) i32
+        # Paged path: scatter the S new K/V tokens to each row's
+        # (block, offset) slots, then attend over the row's gathered blocks
+        # with a per-row length mask. Blocks hold contiguous positions, so
+        # gathered order == position order and softmax sums match the dense
+        # ring buffer.
+        if len(paged) == 3:
+            block_tables, lengths, n_new = paged
+        else:
+            block_tables, lengths = paged             # (B, MB) i32, (B,) i32
+            n_new = None
         bs_blk = kv_cache["k_pool"].shape[1]
-        rows = jnp.arange(B, dtype=jnp.int32)
-        blk = block_tables[rows, lengths // bs_blk]   # (B,) physical block
-        off = lengths % bs_blk
-        kp = kv_cache["k_pool"].at[blk, off].set(
-            k[:, 0].astype(kv_cache["k_pool"].dtype))
-        vp = kv_cache["v_pool"].at[blk, off].set(
-            v[:, 0].astype(kv_cache["v_pool"].dtype))
+        pos = (lengths[:, None].astype(jnp.int32)
+               + jnp.arange(S, dtype=jnp.int32)[None, :])  # write positions
+        kp, vp = paged_scatter(kv_cache["k_pool"], kv_cache["v_pool"], k, v,
+                               block_tables, lengths, n_new)
         new_cache = {"k_pool": kp, "v_pool": vp}
         MB = block_tables.shape[1]
         L = MB * bs_blk
-        k = kp[block_tables].reshape(B, L, Kv, hd).astype(x.dtype)
-        v = vp[block_tables].reshape(B, L, Kv, hd).astype(x.dtype)
+        kg = kp[block_tables].reshape(B, L, Kv, hd).astype(x.dtype)
+        vg = vp[block_tables].reshape(B, L, Kv, hd).astype(x.dtype)
         k_pos = jnp.arange(L, dtype=jnp.int32)        # slot-logical order
-        # per-row mask: q_pos = lengths (the new token's position), so the
-        # (B, L) causal+window mask falls out of _attn_mask directly
-        row_mask = _attn_mask(lengths, k_pos,
-                              cfg.sliding_window)[:, None, :]  # (B, Sq=1, L)
+        # One attend per chunk position, each with the exact decode-step
+        # shapes: q_pos = lengths + t, so the (B, L) causal+window mask
+        # falls out of _attn_mask directly.
+        outs = [_sdpa(q[:, t:t + 1], kg, vg, cfg,
+                      _attn_mask(pos[:, t], k_pos,
+                                 cfg.sliding_window)[:, None, :]
+                      if causal else None, x.dtype)
+                for t in range(S)]
+        out = outs[0] if S == 1 else jnp.concatenate(outs, axis=1)
+        out = dn(out, params["wo"], la("wo"))
+        return out, new_cache
     elif kv_cache is not None:
         # Ring buffer: slot = absolute_position % cache_len. For full
         # attention the cache is allocated at full context length (no wrap);
@@ -304,45 +367,12 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
         k_pos = positions
         q_pos = positions
 
-    scale = hd ** -0.5
-    sm_dtype = dt(getattr(cfg, "attn_softmax_dtype", "float32"))
-    grouped = getattr(cfg, "attn_impl", "repeat") == "grouped" and H != Kv
-
-    if grouped:
-        # §Perf optimization: never materialise the (B,S,H,hd) repeated K/V —
-        # fold the q-heads-per-kv-head group into the einsum instead.
-        G = H // Kv
-        qg = q.reshape(B, S, Kv, G, hd)
-        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
-                            preferred_element_type=sm_dtype) * scale
-    else:
-        k = repeat_kv(k, H // Kv)
-        v = repeat_kv(v, H // Kv)
-        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
-                            preferred_element_type=sm_dtype) * scale
-    if cfg.attn_logit_softcap > 0:
-        c = cfg.attn_logit_softcap
-        logits = c * jnp.tanh(logits / c)
     if causal:
-        neg = jnp.asarray(-1e30 if sm_dtype == jnp.float32 else -3e38 / 10,
-                          sm_dtype)
-        if row_mask is not None:                       # paged: (B, Sq, L)
-            shaped = (row_mask[:, None, None] if grouped
-                      else row_mask[:, None])
-        else:
-            mask = _attn_mask(q_pos, k_pos, cfg.sliding_window)
-            mask &= (k_pos >= 0)[None, :]  # exclude never-written cache slots
-            shaped = mask[None, None, None] if grouped else mask[None, None]
-        logits = jnp.where(shaped, logits, neg)
-    probs = jax.nn.softmax(logits.astype(sm_dtype), axis=-1).astype(x.dtype)
-    if grouped:
-        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v,
-                         preferred_element_type=jnp.float32).astype(x.dtype)
-        out = out.reshape(B, S, H * hd)
+        mask = _attn_mask(q_pos, k_pos, cfg.sliding_window)
+        mask &= (k_pos >= 0)[None, :]      # exclude never-written cache slots
     else:
-        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
-                         preferred_element_type=jnp.float32).astype(x.dtype)
-        out = out.reshape(B, S, H * hd)
+        mask = None
+    out = _sdpa(q, k, v, cfg, mask, x.dtype)
     out = dn(out, params["wo"], la("wo"))
     return out, new_cache
 

@@ -68,11 +68,15 @@ def _split_proj(cfg, zxbcdt):
 
 
 def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray,
-                 state: Optional[jnp.ndarray] = None):
+                 state: Optional[jnp.ndarray] = None,
+                 n_valid: Optional[jnp.ndarray] = None):
     """Depthwise causal conv1d. xbc: (B, S, C), w: (K, C).
 
-    Training: zero left-pad. Decode (S==1): ``state`` is the last K-1 inputs
-    (B, K-1, C); returns updated state.
+    Training: zero left-pad. Decode: ``state`` is the last K-1 inputs
+    (B, K-1, C); returns updated state.  Chunked decode with ragged fill:
+    ``n_valid`` (B,) int32 counts the valid leading tokens per row — the new
+    state is the last K-1 inputs ENDING at each row's valid fill, so rows
+    fed only padding keep their state bit-for-bit.
     """
     K = w.shape[0]
     if state is None:
@@ -81,7 +85,11 @@ def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray,
         new_state = xp[:, -(K - 1):, :]
     else:
         xp = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)
-        new_state = xp[:, -(K - 1):, :]
+        if n_valid is None:
+            new_state = xp[:, -(K - 1):, :]
+        else:
+            idx = n_valid[:, None] + jnp.arange(K - 1, dtype=jnp.int32)[None]
+            new_state = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     # windowed sum: out[t] = sum_k w[k] * xp[t + k]
     out = jnp.zeros_like(xbc, dtype=jnp.float32)
     S = xbc.shape[1]
@@ -167,10 +175,17 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
 def apply_mamba(params: Params, x: jnp.ndarray, cfg,
                 adapters: Optional[Params] = None, lora_scale: float = 1.0,
                 ssm_cache: Optional[Params] = None,
-                adapter_ids: Optional[jnp.ndarray] = None):
+                adapter_ids: Optional[jnp.ndarray] = None,
+                n_new: Optional[jnp.ndarray] = None):
     """x: (B, S, d) -> (out, new_cache).
 
     ``ssm_cache`` = {"h": (B,H,P,N), "conv": (B,K-1,conv_dim)} for decode.
+    Decode accepts S >= 1 (chunked prefill): the recurrence steps through
+    the chunk with the exact per-token update ops, so a multi-token chunk
+    is bitwise-equal to S one-token calls.  ``n_new`` (B,) int32 marks each
+    row's valid leading tokens (ragged chunks): rows beyond their fill get
+    dt masked to 0 — decay exp(0)=1, update 0 — so their recurrent and conv
+    state pass through untouched.
     """
     B, S, d = x.shape
     d_in, n_h, d_st, n_g, conv_dim, _ = _dims(cfg)
@@ -183,7 +198,9 @@ def apply_mamba(params: Params, x: jnp.ndarray, cfg,
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
 
     conv_state = ssm_cache["conv"] if ssm_cache is not None else None
-    xbc, new_conv = _causal_conv(xbc, params["conv_w"], conv_state)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], conv_state,
+                                 n_valid=n_new if ssm_cache is not None
+                                 else None)
     xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + n_g * d_st], axis=-1)
     xs = xs.reshape(B, S, n_h, cfg.ssm_head_dim)
     Bm = Bm.reshape(B, S, n_g, d_st)
@@ -193,17 +210,45 @@ def apply_mamba(params: Params, x: jnp.ndarray, cfg,
     if ssm_cache is None:
         chunk = min(cfg.ssm_chunk, S)
         y, h = ssd_chunked(xs, dt, A, Bm, Cm, chunk)
-    else:
+    elif S == 1:
         # single-token recurrent update: h' = h*exp(dt*A) + dt * B x^T
         h = ssm_cache["h"].astype(jnp.float32)
         rep = n_h // n_g
         Bh = jnp.repeat(Bm[:, 0].astype(jnp.float32), rep, axis=1)  # (B,H,N)
         Ch = jnp.repeat(Cm[:, 0].astype(jnp.float32), rep, axis=1)
         dt0 = dt[:, 0]                                               # (B,H)
+        if n_new is not None:
+            dt0 = jnp.where(n_new[:, None] > 0, dt0, 0.0)
         decay = jnp.exp(dt0 * A[None, :])                            # (B,H)
         upd = jnp.einsum("bh,bhp,bhn->bhpn", dt0, xs[:, 0].astype(jnp.float32), Bh)
         h = h * decay[:, :, None, None] + upd
         y = jnp.einsum("bhpn,bhn->bhp", h, Ch)[:, None]              # (B,1,H,P)
+    else:
+        # chunked recurrent decode: the SAME per-token update as the S==1
+        # branch, stepped over the chunk — invalid tail tokens (t >= n_new)
+        # carry dt=0 and pass h through unchanged.
+        h = ssm_cache["h"].astype(jnp.float32)
+        rep = n_h // n_g
+        Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)  # (B,S,H,N)
+        Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+        dtm = dt
+        if n_new is not None:
+            valid = jnp.arange(S, dtype=jnp.int32)[None, :] < n_new[:, None]
+            dtm = jnp.where(valid[:, :, None], dt, 0.0)
+
+        def step(h, inp):
+            x_t, b_t, c_t, dt_t = inp
+            decay = jnp.exp(dt_t * A[None, :])
+            upd = jnp.einsum("bh,bhp,bhn->bhpn", dt_t, x_t, b_t)
+            h = h * decay[:, :, None, None] + upd
+            y_t = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+            return h, y_t
+
+        h, ys = jax.lax.scan(
+            step, h, (jnp.moveaxis(xs.astype(jnp.float32), 1, 0),
+                      jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0),
+                      jnp.moveaxis(dtm, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1)                                   # (B,S,H,P)
 
     y = y + xs.astype(jnp.float32) * params["d_skip"][None, None, :, None]
     y = y.reshape(B, S, d_in).astype(x.dtype)

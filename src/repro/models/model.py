@@ -119,8 +119,9 @@ def param_specs(cfg) -> Params:
 
 def _apply_block(entry: str, bp: Params, x, cfg, positions,
                  adapters=None, lora_scale=1.0, cache=None,
-                 adapter_ids=None, paged=None):
-    """One layer. Returns (x, new_cache, aux)."""
+                 adapter_ids=None, paged=None, n_new=None):
+    """One layer. Returns (x, new_cache, aux).  ``n_new``: (B,) int32 valid
+    leading tokens per row in a ragged prefill chunk (see prefill_step)."""
     mixer, mlp = _parse(entry)
     ad = adapters or {}
     aux = jnp.zeros((), jnp.float32)
@@ -132,7 +133,7 @@ def _apply_block(entry: str, bp: Params, x, cfg, positions,
     else:
         out, new_mix_cache = mamba2.apply_mamba(
             bp["mixer"], h, cfg, ad.get("mixer"), lora_scale, ssm_cache=cache,
-            adapter_ids=adapter_ids)
+            adapter_ids=adapter_ids, n_new=n_new)
     x = x + out
     if mlp != "none":
         h = L.apply_norm(bp["norm2"], x, cfg.norm_type)
@@ -273,10 +274,6 @@ def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
     Continuous batching: pass ``block_tables`` (B, MB) int32 and a *per-row*
     ``pos`` (B,) int32 of ragged context lengths; the cache must come from
     :func:`init_paged_decode_cache`. Returns (logits (B, 1, V), new cache)."""
-    dtype = L.dt(cfg.dtype)
-    x = params["embed"].astype(dtype)[tokens]
-    if cfg.family == "dense" and cfg.tie_embeddings:
-        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
     if block_tables is not None:
         pos = pos.astype(jnp.int32)                  # (B,) ragged lengths
         positions = pos[:, None]                     # (B, S=1) for RoPE
@@ -285,6 +282,49 @@ def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
         positions = (pos[None].astype(jnp.int32) if pos.ndim == 0
                      else pos.astype(jnp.int32))
         paged = None
+    return _cached_scan(params, cache, tokens, positions, cfg, adapters,
+                        lora_scale, adapter_ids, paged=paged, n_new=None)
+
+
+def prefill_step(params: Params, cache: Params, tokens: jnp.ndarray,
+                 pos: jnp.ndarray, n_new: jnp.ndarray, cfg,
+                 adapters: Optional[Params] = None, lora_scale: float = 1.0,
+                 adapter_ids: Optional[jnp.ndarray] = None,
+                 block_tables: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, Params]:
+    """Chunked paged prefill: one dispatch consumes a whole prompt chunk.
+
+    tokens: (B, T) int32 — up to T prompt tokens per serving slot, of which
+    ``n_new[b]`` are valid (ragged chunks; tail positions are padding whose
+    K/V scatters to scratch block 0 and whose SSM updates are masked out).
+    pos: (B,) int32 per-row context lengths already written; the chunk
+    occupies positions ``pos[b] .. pos[b] + n_new[b] - 1``.  Requires a
+    paged cache (:func:`init_paged_decode_cache`) and ``block_tables``
+    whose rows cover ``pos + n_new`` positions (the host scheduler grows
+    tables before each chunk).
+
+    Returns (logits (B, T, V), new cache) — the serving engine samples each
+    row's logits at its last valid position to seed decoding."""
+    if block_tables is None:
+        raise ValueError("prefill_step requires block_tables (paged cache)")
+    T = tokens.shape[1]
+    pos = pos.astype(jnp.int32)
+    n_new = n_new.astype(jnp.int32)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    return _cached_scan(params, cache, tokens, positions, cfg, adapters,
+                        lora_scale, adapter_ids,
+                        paged=(block_tables, pos, n_new), n_new=n_new)
+
+
+def _cached_scan(params: Params, cache: Params, tokens: jnp.ndarray,
+                 positions: jnp.ndarray, cfg, adapters, lora_scale,
+                 adapter_ids, paged, n_new) -> Tuple[jnp.ndarray, Params]:
+    """Shared cache-threading scaffold of decode_step / prefill_step:
+    embed, period scan with per-block caches, final norm, unembed."""
+    dtype = L.dt(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    if cfg.family == "dense" and cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
 
     block_names = _block_names(cfg)
     ad_blocks = (adapters or {}).get("blocks", {})
@@ -296,7 +336,8 @@ def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
             x, nc, _ = _apply_block(entry, xs[name], x, cfg, positions,
                                     xs.get("__ad_" + name), lora_scale,
                                     cache=xs["__cache_" + name],
-                                    adapter_ids=adapter_ids, paged=paged)
+                                    adapter_ids=adapter_ids, paged=paged,
+                                    n_new=n_new)
             new_caches[name] = nc
         return x, new_caches
 

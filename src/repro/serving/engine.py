@@ -12,17 +12,21 @@ one standard adapter (Eq. 7). Two engines share one generation loop:
     via per-row ``adapter_ids`` (gathered on-chip, see
     ``kernels/batched_lora.py``).
 
-``MultiTenantEngine.generate`` is a **continuous-batching** loop over a
-paged KV cache (``serving/kv_cache.py`` + ``serving/scheduler.py``): ragged
-prompts, per-request token budgets, per-row EOS, and admission of queued
-requests into slots freed mid-flight.  ``generate_fixed`` keeps the
-fixed-shape one-batch-per-call path (equal-length prompts, one shared
-budget) — equal-shape greedy requests produce bit-identical tokens on both.
+``MultiTenantEngine.generate_stream`` is a **continuous-batching** loop
+over a paged KV cache (``serving/kv_cache.py`` + ``serving/scheduler.py``):
+ragged prompts fed through CHUNKED multi-token prefill dispatches, on-demand
+block growth with preemption when the pool runs dry, per-request token
+budgets, per-row EOS, admission of queued requests into slots freed
+mid-flight — and ``(rid, tokens, finished)`` increments yielded the moment
+each chunk is observed, before the batch drains.  ``generate`` collects the
+stream into per-request arrays; ``generate_fixed`` keeps the fixed-shape
+one-batch-per-call path (equal-length prompts, one shared budget) —
+equal-shape greedy requests produce bit-identical tokens on both.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional, Sequence
+from typing import Any, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +52,7 @@ class ServeConfig:
     block_size: int = 16             # paged-cache block size (continuous)
     num_blocks: Optional[int] = None  # pool size; None => full residency
     scan_chunk: int = 32             # max device steps between admissions
+    prefill_chunk: int = 16          # prompt tokens per prefill dispatch
 
 
 @dataclasses.dataclass
@@ -69,8 +74,9 @@ class _EngineBase:
         self.scale = lora_scale(cfg)
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
-        self._paged_chunk = jax.jit(self._paged_chunk_impl,
-                                    static_argnames=("chunk_cap",))
+        self._decode_chunk = jax.jit(self._decode_chunk_impl,
+                                     static_argnames=("chunk_cap",))
+        self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
 
     # -- steps ---------------------------------------------------------------
     def _prefill_impl(self, params, adapters, ids, cache, tokens):
@@ -98,36 +104,49 @@ class _EngineBase:
             adapter_ids=ids)
         return self._sample(logits, rng, temperature), cache
 
-    def _paged_chunk_impl(self, params, adapters, ids, cache, prompt, plen,
-                          fed, last, active, lengths, block_tables, n_steps,
-                          rng, temperature, chunk_cap):
+    def _decode_chunk_impl(self, params, adapters, ids, cache, last, active,
+                           lengths, block_tables, n_steps, rng, temperature,
+                           chunk_cap):
         """Up to ``n_steps`` (dynamic, <= static ``chunk_cap``) decode steps
-        fully on device: each slot feeds its next prompt token while
-        ``fed < plen`` and its last sample afterwards — one dispatch per
-        chunk instead of per token.  Returns the (chunk_cap, K) sampled
-        block (rows >= n_steps are garbage; the scheduler slices)."""
+        fully on device: each slot feeds its last sampled token — one
+        dispatch per chunk instead of per token.  (Prompts are fed by
+        ``_prefill_chunk``; every active slot here is past its prompt.)
+        Returns the (chunk_cap, K) sampled block (rows >= n_steps are
+        garbage; the scheduler slices)."""
         K = ids.shape[0]
-        rows = jnp.arange(K, dtype=jnp.int32)
-        width = prompt.shape[1]
 
         def body(t, carry):
-            cache, fed, last, lengths, rng, out = carry
-            tok = jnp.where(fed < plen,
-                            prompt[rows, jnp.clip(fed, 0, width - 1)], last)
+            cache, last, lengths, rng, out = carry
             rng, sub = jax.random.split(rng)
             logits, cache = self.model.decode_step(
-                params, cache, tok[:, None], lengths, adapters=adapters,
+                params, cache, last[:, None], lengths, adapters=adapters,
                 lora_scale=self.scale, adapter_ids=ids,
                 block_tables=block_tables)
             nxt = self._sample(logits, sub, temperature)
             out = out.at[t].set(nxt)
-            return (cache, fed + active, nxt, lengths + active, rng, out)
+            return (cache, nxt, lengths + active, rng, out)
 
         out0 = jnp.zeros((chunk_cap, K), jnp.int32)
         carry = jax.lax.fori_loop(
-            0, n_steps, body, (cache, fed, last, lengths, rng, out0))
-        cache, _, _, _, _, out = carry
+            0, n_steps, body, (cache, last, lengths, rng, out0))
+        cache, _, _, _, out = carry
         return out, cache
+
+    def _prefill_chunk_impl(self, params, adapters, ids, cache, tokens,
+                            lengths, n_new, block_tables, rng, temperature):
+        """One chunked-prefill dispatch: scatter+attend ``tokens`` (K, T)
+        — ``n_new[k]`` valid per row — through the paged cache, and sample
+        each row's logits at its LAST valid position (the first emitted
+        token for rows whose prompt just completed; garbage, discarded by
+        the scheduler, for the rest).  Returns ((K,) sampled, cache)."""
+        logits, cache = self.model.prefill_step(
+            params, cache, tokens, lengths, n_new, adapters=adapters,
+            lora_scale=self.scale, adapter_ids=ids,
+            block_tables=block_tables)
+        K, T, _ = logits.shape
+        rows = jnp.arange(K, dtype=jnp.int32)
+        lg = logits[rows, jnp.clip(n_new - 1, 0, T - 1)]       # (K, V)
+        return self._sample(lg[:, None], rng, temperature), cache
 
     @staticmethod
     def _sample(logits, rng, temperature):
@@ -198,18 +217,25 @@ class MultiTenantEngine(_EngineBase):
     def __init__(self, model, cfg, params: Params, registry: AdapterRegistry):
         super().__init__(model, cfg)
         self.params, self.registry = params, registry
+        self.last_stats: Optional[dict] = None   # set when a stream drains
 
     # -- continuous batching (the serving path) ------------------------------
-    def generate(self, requests: Sequence[Request],
-                 sc: ServeConfig) -> List[np.ndarray]:
+    def generate_stream(self, requests: Sequence[Request], sc: ServeConfig
+                        ) -> Iterator[Tuple[int, List[int], bool]]:
         """Continuous batching over ``sc.batch_size`` slots of a paged KV
-        cache: ragged prompts, per-request ``max_new_tokens``, per-row EOS.
-        Requests beyond the slot count queue and are admitted as slots free
-        up; each result is returned when ITS request completes, not when the
-        whole batch drains.
+        cache, streamed: yields ``(rid, new_tokens, finished)`` increments
+        as each device chunk is observed — callers see tokens the moment
+        they exist, not when the batch drains.
 
-        Returns one 1-D int32 array per request (request order), length <=
-        its budget (EOS-terminated rows include the EOS token and stop)."""
+        Prompts are consumed by CHUNKED prefill dispatches
+        (``sc.prefill_chunk`` tokens per dispatch through the paged
+        scatter+attend path) instead of one decode step per token; blocks
+        are allocated on demand at chunk boundaries, and when the pool runs
+        dry the newest active request is preempted (requeued with
+        prompt+emitted as its new prompt — no tokens are lost or
+        re-yielded).  ``rid`` is the request's index in ``requests``.
+        After the stream drains, ``self.last_stats`` records dispatch and
+        preemption counters for the run."""
         if not requests:
             raise ValueError("empty request batch")
         prompts = [np.asarray(r.prompt, np.int32).reshape(-1)
@@ -230,7 +256,11 @@ class MultiTenantEngine(_EngineBase):
         bank = self.registry.bank()
         ids = np.zeros((num_slots,), np.int32)
         rng = jax.random.PRNGKey(sc.seed)
-        width = max(p.size for p in prompts)
+        self.last_stats = None       # a partially consumed stream has none
+        # Preemption replays prompt+emitted, so prefill chunks must fit the
+        # longest possible replayed prompt too — width is fixed per run to
+        # keep one compiled prefill program.
+        T = max(1, min(sc.prefill_chunk, max_span - 1))
         # EOS can end a row long before its budget; keep chunks short so its
         # slot frees (and admits the queue head) at the next boundary.
         cap = min(sc.scan_chunk, 8) if sc.eos_id is not None else sc.scan_chunk
@@ -238,18 +268,50 @@ class MultiTenantEngine(_EngineBase):
             for slot, cid in sched.admit():
                 ids[slot] = self.registry.acquire(cid)
                 cache = reset_slot(cache, slot)
-            n = sched.plan_steps(cap)
-            st = sched.chunk_arrays(width)
+            plan = sched.prepare_chunk(T, cap)
+            if plan is None:                 # nothing active: admit failed
+                raise RuntimeError("scheduler stalled with queued work")
             bt, lens = kv.device_tables()
             rng, sub = jax.random.split(rng)
-            out, cache = self._paged_chunk(
-                self.params, bank, jnp.asarray(ids), cache,
-                jnp.asarray(st["prompt"]), jnp.asarray(st["plen"]),
-                jnp.asarray(st["fed"]), jnp.asarray(st["last"]),
-                jnp.asarray(st["active"]), lens, bt, jnp.int32(n), sub,
-                sc.temperature, chunk_cap=cap)
-            sched.observe_chunk(np.asarray(out)[:n], eos_id=sc.eos_id)
-        return [sched.results[rid] for rid in range(len(requests))]
+            if plan[0] == "prefill":
+                arrs = sched.prefill_arrays(T)
+                sampled, cache = self._prefill_chunk(
+                    self.params, bank, jnp.asarray(ids), cache,
+                    jnp.asarray(arrs["tokens"]), lens,
+                    jnp.asarray(arrs["n_new"]), bt, sub, sc.temperature)
+                events = sched.observe_prefill(arrs["n_new"],
+                                               np.asarray(sampled),
+                                               eos_id=sc.eos_id)
+            else:
+                n = plan[1]
+                st = sched.chunk_arrays()
+                out, cache = self._decode_chunk(
+                    self.params, bank, jnp.asarray(ids), cache,
+                    jnp.asarray(st["last"]), jnp.asarray(st["active"]),
+                    lens, bt, jnp.int32(n), sub, sc.temperature,
+                    chunk_cap=cap)
+                events = sched.observe_chunk(np.asarray(out)[:n],
+                                             eos_id=sc.eos_id)
+            yield from events
+        self.last_stats = {"prefill_dispatches": sched.prefill_dispatches,
+                           "decode_dispatches": sched.decode_dispatches,
+                           "decode_steps": sched.steps,
+                           "preemptions": sched.preemptions}
+
+    def generate(self, requests: Sequence[Request],
+                 sc: ServeConfig) -> List[np.ndarray]:
+        """Continuous batching over ``sc.batch_size`` slots of a paged KV
+        cache: ragged prompts, per-request ``max_new_tokens``, per-row EOS.
+        Requests beyond the slot count queue and are admitted as slots free
+        up (preempted requests resume transparently).
+
+        Returns one 1-D int32 array per request (request order), length <=
+        its budget (EOS-terminated rows include the EOS token and stop).
+        ``generate_stream`` is the incremental form this collects."""
+        outs: List[List[int]] = [[] for _ in requests]
+        for rid, toks, _ in self.generate_stream(requests, sc):
+            outs[rid].extend(toks)
+        return [np.asarray(o, np.int32) for o in outs]
 
     # -- fixed-shape batch (the PR-1 path, kept for equal-shape workloads) ---
     def generate_fixed(self, requests: Sequence[Request],

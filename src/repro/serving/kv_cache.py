@@ -10,15 +10,26 @@ ragged lengths share one pool with zero padding waste in HBM.  SSM/Mamba
 layers have O(1) recurrent state and simply keep a dense per-slot row
 (reset on admission via :func:`reset_slot`).
 
-This class is pure host bookkeeping (numpy tables, a free list): the device
-cache pytree stays functional and flows through the jitted decode step; the
-tables are uploaded per step (a few hundred int32s).  Physical block 0 is
-reserved as a scratch target so *inactive* slots (table rows all-zero,
-length 0) scatter their garbage write somewhere harmless instead of
-corrupting a live request's block.
+Blocks are allocated **on demand** (vLLM style): admission claims a slot
+with zero blocks, and the scheduler calls :meth:`PagedKVCache.ensure`
+before each device chunk to grow every active slot's table to cover the
+positions the chunk will write.  A failed ``ensure`` (empty free list) is
+the scheduler's preemption trigger — it releases a victim's blocks and
+requeues the victim with its prompt+emitted tokens as the new prompt, so
+the pool admits far deeper queues than full-span reservation while no work
+is ever lost.  The free list is a ``deque`` (``popleft`` allocation is on
+the per-chunk host path); release appends, so block reuse is FIFO.
+
+This class is pure host bookkeeping: the device cache pytree stays
+functional and flows through the jitted steps; the tables are uploaded per
+chunk (a few hundred int32s).  Physical block 0 is reserved as a scratch
+target so *inactive* slots (table rows all-zero, length 0) and ragged
+prefill-chunk tails scatter their garbage writes somewhere harmless
+instead of corrupting a live request's block.
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import List, Tuple
 
 import jax
@@ -49,7 +60,7 @@ class PagedKVCache:
         self.block_tables = np.zeros((num_slots, max_blocks_per_slot),
                                      np.int32)
         self.lengths = np.zeros((num_slots,), np.int32)
-        self._free: List[int] = list(range(1, num_blocks))
+        self._free: "deque[int]" = deque(range(1, num_blocks))
         self._owned: List[List[int]] = [[] for _ in range(num_slots)]
 
     # ---- capacity ---------------------------------------------------------
@@ -58,42 +69,71 @@ class PagedKVCache:
         return len(self._free)
 
     def fits(self, n_tokens: int) -> bool:
-        """Can a request spanning ``n_tokens`` EVER be admitted?"""
+        """Can a request spanning ``n_tokens`` EVER be admitted (even with
+        every other slot preempted)?"""
         n = blocks_needed(n_tokens, self.block_size)
         return n <= min(self.max_blocks_per_slot, self.num_blocks - 1)
 
     def can_admit(self, n_tokens: int) -> bool:
-        """Are there free blocks for the request's full span right now?"""
+        """Are there free blocks to cover ``n_tokens`` positions right now?
+        (An admission heuristic — blocks are NOT reserved until
+        :meth:`ensure` allocates them chunk by chunk.)"""
         return (self.fits(n_tokens)
                 and blocks_needed(n_tokens, self.block_size) <= self.free_blocks)
 
     # ---- slot lifecycle ---------------------------------------------------
-    def admit(self, slot: int, n_tokens: int) -> None:
-        """Reserve every block of an ``n_tokens`` context for ``slot``.
-
-        Reserving the full span up front keeps admission deadlock-free (an
-        admitted request can always run to its budget); on-demand growth
-        with preemption is the vLLM refinement this trades away."""
+    def admit(self, slot: int) -> None:
+        """Claim ``slot`` with zero blocks; :meth:`ensure` grows it."""
         assert not self._owned[slot], f"slot {slot} already occupied"
-        if not self.can_admit(n_tokens):
-            raise RuntimeError("admit() without can_admit()")
-        n = blocks_needed(n_tokens, self.block_size)
-        blocks = [self._free.pop(0) for _ in range(n)]
-        self._owned[slot] = blocks
         self.block_tables[slot] = 0
-        self.block_tables[slot, :n] = blocks
         self.lengths[slot] = 0
 
-    def advance(self, slot: int) -> None:
-        """One token was written at position ``lengths[slot]``."""
-        self.lengths[slot] += 1
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot`` to own blocks covering ``n_tokens`` positions.
+
+        Returns False (allocating nothing) when the free list cannot cover
+        the growth — the scheduler's cue to preempt a victim and retry."""
+        need = blocks_needed(n_tokens, self.block_size)
+        assert need <= self.max_blocks_per_slot, (need, n_tokens)
+        add = need - len(self._owned[slot])
+        if add <= 0:
+            return True
+        if add > len(self._free):
+            return False
+        for _ in range(add):
+            b = self._free.popleft()
+            self.block_tables[slot, len(self._owned[slot])] = b
+            self._owned[slot].append(b)
+        return True
+
+    def advance(self, slot: int, n: int = 1) -> None:
+        """``n`` tokens were written at positions ``lengths[slot]``..."""
+        self.lengths[slot] += n
+        assert self.lengths[slot] <= len(self._owned[slot]) * self.block_size, \
+            f"slot {slot} advanced past its owned blocks"
 
     def release(self, slot: int) -> None:
-        """Return a finished slot's blocks to the free list."""
+        """Return a finished/preempted slot's blocks to the free list."""
         self._free.extend(self._owned[slot])
         self._owned[slot] = []
         self.block_tables[slot] = 0
         self.lengths[slot] = 0
+
+    # ---- invariants -------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Block accounting must hold after every scheduler transition:
+        free list + owned blocks partition {1..num_blocks-1}, no block is
+        owned twice, tables name owned blocks in position order, and no
+        slot's length exceeds its owned span."""
+        owned_all = [b for blocks in self._owned for b in blocks]
+        assert len(set(owned_all)) == len(owned_all), "block owned twice"
+        both = sorted(owned_all + list(self._free))
+        assert both == list(range(1, self.num_blocks)), \
+            "free+owned must partition {1..num_blocks-1}"
+        for slot, blocks in enumerate(self._owned):
+            assert self.lengths[slot] <= len(blocks) * self.block_size
+            assert list(self.block_tables[slot, :len(blocks)]) == blocks
+            assert (self.block_tables[slot, len(blocks):] == 0).all()
 
     # ---- device views -----------------------------------------------------
     def device_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:

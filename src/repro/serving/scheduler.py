@@ -1,21 +1,33 @@
-"""Continuous-batching scheduler: admission, per-slot progress, eviction.
+"""Continuous-batching scheduler: admission, growth, preemption, progress.
 
-Sits between a request queue and the paged decode step.  Each serving slot
-tracks one in-flight request's lifecycle:
+Sits between a request queue and the paged prefill/decode steps.  Each
+serving slot tracks one in-flight request's lifecycle:
 
-    queued -> admitted (blocks reserved, SSM state reset)
-           -> prefilling (prompt tokens fed one per engine step; samples
-              discarded while ``fed < len(prompt)``)
-           -> decoding  (sampled tokens emitted and fed back)
+    queued -> admitted (slot claimed, zero blocks, SSM state reset)
+           -> prefilling (whole prompt CHUNKS fed per prefill dispatch)
+           -> decoding  (sampled tokens emitted and fed back, chunked)
            -> finished  (budget exhausted or EOS) -> slot + blocks freed
+        or -> preempted (blocks released; requeued at the queue head with
+              prompt+emitted as the new prompt, so no work is lost)
+
+Blocks are allocated on demand: :meth:`prepare_chunk` plans the next device
+chunk (a prefill chunk while any active slot still has prompt tokens
+pending, else a decode chunk) and grows every active slot's block table to
+cover exactly the positions that chunk will write — oldest request first.
+When the pool runs dry mid-growth, the NEWEST active request (highest rid)
+is preempted and planning restarts; the oldest active request is therefore
+never preempted by a younger one and always completes, which bounds
+progress (no livelock) as long as every request's full span fits the pool
+alone (checked at submit).
 
 The engine drives the loop in chunks:  ``admit()`` between chunks pulls
-queued requests into freed slots (FCFS — the head waits if the block pool
-can't hold its full span, so admitted requests never deadlock),
-``chunk_arrays()`` snapshots per-slot state for up to ``plan_steps()``
-device-side decode steps over ALL active slots, and ``observe_chunk()``
-consumes the sampled block, returning each request's output the moment it
-completes rather than when the batch drains.
+queued requests into freed slots (FCFS — the head waits while free blocks
+can't cover its prompt), ``prepare_chunk()`` plans + grows + preempts,
+``prefill_arrays()``/``chunk_arrays()`` snapshot per-slot state for the
+device dispatch, and ``observe_prefill()``/``observe_chunk()`` consume the
+sampled results, returning ``(rid, new_tokens, finished)`` events the
+moment tokens exist — the streaming API yields them before the batch
+drains.
 """
 from __future__ import annotations
 
@@ -32,11 +44,14 @@ from repro.serving.kv_cache import PagedKVCache
 class _SlotState:
     rid: int
     client_id: Any
-    prompt: np.ndarray            # (S,) int32
-    budget: int                   # max tokens to emit
-    next_token: int               # token the next step feeds
+    prompt: np.ndarray            # (S,) int32 — original prompt + any tokens
+    #                               emitted before a preemption (replayed)
+    budget: int                   # tokens still to emit this incarnation
+    next_token: int               # token the next decode step feeds
     fed: int = 0                  # tokens already fed (prompt + emitted)
     emitted: List[int] = dataclasses.field(default_factory=list)
+    prior: List[int] = dataclasses.field(default_factory=list)
+    #                               tokens emitted before preemption(s)
 
 
 class Scheduler:
@@ -44,10 +59,15 @@ class Scheduler:
 
     def __init__(self, kv: PagedKVCache):
         self.kv = kv
-        self._queue: "deque[Tuple[int, Any, np.ndarray, int]]" = deque()
+        # queue entries: (rid, client_id, prompt, budget, prior_emitted)
+        self._queue: "deque[Tuple[int, Any, np.ndarray, int, List[int]]]" = \
+            deque()
         self._slots: List[Optional[_SlotState]] = [None] * kv.num_slots
         self.results: Dict[int, np.ndarray] = {}
-        self.steps = 0                      # engine steps driven
+        self.steps = 0                      # decode steps driven
+        self.prefill_dispatches = 0         # prefill chunks dispatched
+        self.decode_dispatches = 0          # decode chunks dispatched
+        self.preemptions = 0
 
     # ---- intake -----------------------------------------------------------
     def submit(self, rid: int, client_id: Any, prompt, budget: int) -> None:
@@ -62,7 +82,7 @@ class Scheduler:
                 f"request {rid}: span {span} exceeds cache capacity "
                 f"({self.kv.max_blocks_per_slot} blocks of "
                 f"{self.kv.block_size})")
-        self._queue.append((rid, client_id, prompt, budget))
+        self._queue.append((rid, client_id, prompt, budget, []))
 
     # ---- state ------------------------------------------------------------
     @property
@@ -73,94 +93,223 @@ class Scheduler:
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s is not None]
 
+    @property
+    def prefill_pending(self) -> bool:
+        return any(s is not None and s.fed < s.prompt.size
+                   for s in self._slots)
+
     # ---- lifecycle --------------------------------------------------------
     def admit(self) -> List[Tuple[int, Any]]:
         """Fill freed slots from the queue head; returns newly admitted
         ``(slot, client_id)`` pairs (the engine resets SSM state and
-        resolves the adapter slot for each)."""
+        resolves the adapter slot for each).  Admission claims a slot with
+        zero blocks — the head waits (FCFS) while the free list can't cover
+        its prompt, and growth past the prompt relies on preemption."""
         admitted = []
         for slot in range(self.kv.num_slots):
             if self._slots[slot] is not None or not self._queue:
                 continue
-            rid, cid, prompt, budget = self._queue[0]
-            span = int(prompt.size) + budget
-            if not self.kv.can_admit(span):
+            rid, cid, prompt, budget, prior = self._queue[0]
+            if not self.kv.can_admit(int(prompt.size)):
                 break                        # FCFS: wait for blocks to free
             self._queue.popleft()
-            self.kv.admit(slot, span)
+            self.kv.admit(slot)
             self._slots[slot] = _SlotState(rid, cid, prompt, budget,
-                                           next_token=int(prompt[0]))
+                                           next_token=int(prompt[0]),
+                                           prior=prior)
             admitted.append((slot, cid))
         return admitted
 
-    # ---- chunked stepping --------------------------------------------------
-    # One host round-trip per token kills throughput: the engine instead
-    # runs a device-side fori_loop of up to plan_steps() decode steps (each
-    # slot feeding prompt-or-sampled tokens from chunk_arrays state) and
-    # hands the sampled block back to observe_chunk.  (A per-token driver is
-    # just observe_chunk with a (1, num_slots) block.)
+    def preempt(self, slot: int) -> int:
+        """Release ``slot``'s blocks and requeue its request at the queue
+        head with prompt+emitted as the new prompt (emitted-so-far moves to
+        ``prior``), so the resumed incarnation replays its context and
+        continues from the exact same state — no work is lost.  Returns the
+        preempted rid."""
+        st = self._slots[slot]
+        assert st is not None, f"slot {slot} not active"
+        new_prompt = np.concatenate(
+            [st.prompt, np.asarray(st.emitted, np.int32)])
+        self._queue.appendleft((st.rid, st.client_id, new_prompt,
+                                st.budget - len(st.emitted),
+                                st.prior + st.emitted))
+        self.kv.release(slot)
+        self._slots[slot] = None
+        self.preemptions += 1
+        return st.rid
 
+    def _finish(self, slot: int) -> None:
+        st = self._slots[slot]
+        self.results[st.rid] = np.asarray(st.prior + st.emitted, np.int32)
+        self.kv.release(slot)
+        self._slots[slot] = None
+
+    # ---- chunk planning ----------------------------------------------------
     def plan_steps(self, cap: int) -> int:
-        """Steps until the EARLIEST active slot completes its budget — no
-        slot can overrun its reserved block span inside a chunk this long.
+        """Decode steps until the EARLIEST active slot completes its budget.
         ``cap`` bounds the chunk (keep small under EOS so early-stopping
-        rows don't burn steps until the boundary)."""
+        rows don't burn steps until the boundary).  Returns 1 when no slot
+        is active (nothing to plan — the engine admits and retries)."""
         remaining = [st.prompt.size - 1 + st.budget - st.fed
                      for st in self._slots if st is not None]
+        if not remaining:
+            return 1
         return max(1, min(min(remaining), cap))
 
-    def chunk_arrays(self, prompt_width: int):
-        """Per-slot device state for one chunk: padded prompts, prompt
-        lengths, fed counters, last-fed token, active mask."""
+    def prepare_chunk(self, prefill_chunk: int, decode_cap: int):
+        """Plan the next device chunk under on-demand block growth.
+
+        Grows each active slot (oldest rid first) to cover the positions
+        the chunk will write; when the pool runs dry, preempts the newest
+        active request and replans.  Returns ``("prefill", None)`` or
+        ``("decode", n_steps)``, or None when no slot is active."""
+        while True:
+            active = sorted((st.rid, slot)
+                            for slot, st in enumerate(self._slots)
+                            if st is not None)
+            if not active:
+                return None
+            prefill = self.prefill_pending
+            targets = {}
+            if prefill:
+                for _, slot in active:
+                    st = self._slots[slot]
+                    rem = st.prompt.size - st.fed
+                    # slots already decoding ride along as 1-token feedback
+                    # rows (no decode stall behind another slot's prompt)
+                    n = min(prefill_chunk, rem) if rem > 0 else 1
+                    targets[slot] = int(self.kv.lengths[slot]) + n
+            else:
+                n = self.plan_steps(decode_cap)
+                for _, slot in active:
+                    targets[slot] = int(self.kv.lengths[slot]) + n
+            preempted = False
+            for _, slot in active:           # oldest request claims first
+                if self._slots[slot] is None:
+                    continue                 # preempted earlier in this pass
+                while not self.kv.ensure(slot, targets[slot]):
+                    victim = max((st.rid, s)
+                                 for s, st in enumerate(self._slots)
+                                 if st is not None)[1]
+                    if victim == slot and len(self.active_slots) == 1:
+                        raise RuntimeError(
+                            "pool cannot hold a single request's span "
+                            "(submit() should have rejected it)")
+                    self.preempt(victim)
+                    preempted = True
+                    if victim == slot:
+                        break                # self-preempted; replan
+            if not preempted:
+                return ("prefill", None) if prefill else ("decode", n)
+
+    # ---- prefill chunks ----------------------------------------------------
+    def prefill_arrays(self, width: int):
+        """Per-slot token chunks for one prefill dispatch: ``tokens``
+        (K, width) int32 padded, ``n_new`` (K,) valid counts.  Slots still
+        prefilling feed their next prompt chunk; slots already DECODING
+        ride along as 1-token feedback rows (``tokens[i, 0] = last
+        sample``) so decode never stalls behind another slot's prompt —
+        a 1-token prefill row is bitwise-identical to a decode step."""
         K = self.kv.num_slots
-        out = {"prompt": np.zeros((K, prompt_width), np.int32),
-               "plen": np.zeros((K,), np.int32),
-               "fed": np.zeros((K,), np.int32),
-               "last": np.zeros((K,), np.int32),
+        out = {"tokens": np.zeros((K, width), np.int32),
+               "n_new": np.zeros((K,), np.int32)}
+        for i, st in enumerate(self._slots):
+            if st is None:
+                continue
+            n = min(width, st.prompt.size - st.fed)
+            if n > 0:
+                out["tokens"][i, :n] = st.prompt[st.fed:st.fed + n]
+                out["n_new"][i] = n
+            else:                            # decoding: feedback row
+                out["tokens"][i, 0] = st.next_token
+                out["n_new"][i] = 1
+        return out
+
+    def observe_prefill(self, n_new: np.ndarray, sampled: np.ndarray,
+                        eos_id: Optional[int] = None
+                        ) -> List[Tuple[int, List[int], bool]]:
+        """Consume one prefill chunk: ``n_new[slot]`` tokens were written
+        for each slot and ``sampled[slot]`` is the sample at the slot's
+        last valid position.  A slot whose prompt just completed records
+        that sample as its first emission; a slot that rode along as a
+        decoding feedback row records it as its next emission.  Returns
+        (rid, new_tokens, finished) events."""
+        events = []
+        for slot, st in enumerate(self._slots):
+            if st is None or n_new[slot] == 0:
+                continue
+            n = int(n_new[slot])
+            decoding = st.fed >= st.prompt.size   # feedback row (n == 1)
+            st.fed += n
+            self.kv.advance(slot, n)
+            if decoding or st.fed == st.prompt.size:
+                tok = int(sampled[slot])
+                st.emitted.append(tok)
+                st.next_token = tok
+                done = (len(st.emitted) >= st.budget
+                        or (eos_id is not None and tok == eos_id))
+                rid = st.rid
+                if done:
+                    self._finish(slot)
+                events.append((rid, [tok], done))
+        self.prefill_dispatches += 1
+        return events
+
+    # ---- decode chunks -----------------------------------------------------
+    # One host round-trip per token kills throughput: the engine runs a
+    # device-side fori_loop of up to plan_steps() decode steps (each slot
+    # feeding its last sampled token) and hands the sampled block back to
+    # observe_chunk.  (A per-token driver is just observe_chunk with a
+    # (1, num_slots) block.)
+
+    def chunk_arrays(self):
+        """Per-slot device state for one decode chunk: last-fed token and
+        active mask.  (Prompts are fed by prefill chunks — every active
+        slot here resumes from its last sample.)"""
+        K = self.kv.num_slots
+        out = {"last": np.zeros((K,), np.int32),
                "active": np.zeros((K,), np.int32)}
         for i, st in enumerate(self._slots):
             if st is None:
                 continue
-            out["prompt"][i, :st.prompt.size] = st.prompt
-            out["plen"][i] = st.prompt.size
-            out["fed"][i] = st.fed
             out["last"][i] = st.next_token
             out["active"][i] = 1
         return out
 
     def observe_chunk(self, sampled: np.ndarray,
-                      eos_id: Optional[int] = None) -> List[int]:
-        """Consume an (n, num_slots) block of sampled tokens (step-major);
-        returns rids that finished. Step t of slot i fed token ``fed + t``
-        and its sample is an emission once the prompt is consumed
-        (``fed + t >= len(prompt) - 1``)."""
+                      eos_id: Optional[int] = None
+                      ) -> List[Tuple[int, List[int], bool]]:
+        """Consume an (n, num_slots) block of decode samples (step-major);
+        returns (rid, new_tokens, finished) events.  Decode chunks only run
+        once every active slot is past its prompt (prefill chunks fed it
+        and recorded the first emission), so step t of slot i fed the
+        previous sample and ``sampled[t, i]`` is always an emission."""
         n = sampled.shape[0]
-        finished = []
+        events = []
         for slot, st in enumerate(self._slots):
             if st is None:
                 continue
+            assert st.fed >= st.prompt.size, \
+                f"slot {slot} entered a decode chunk mid-prefill"
+            new_toks: List[int] = []
             done = False
             for t in range(n):
-                fed_t = st.fed + t
-                if fed_t < st.prompt.size - 1:
-                    continue                 # still prefilling at this step
                 tok = int(sampled[t, slot])
                 st.emitted.append(tok)
+                new_toks.append(tok)
                 if (len(st.emitted) >= st.budget
                         or (eos_id is not None and tok == eos_id)):
                     done = True
                     break
             st.fed += n
-            for _ in range(n):
-                self.kv.advance(slot)
+            self.kv.advance(slot, n)
             if done:
-                self.results[st.rid] = np.asarray(st.emitted, np.int32)
-                self.kv.release(slot)
-                self._slots[slot] = None
-                finished.append(st.rid)
+                rid = st.rid
+                self._finish(slot)
+                events.append((rid, new_toks, True))
             else:
-                st.next_token = (int(st.prompt[st.fed])
-                                 if st.fed < st.prompt.size
-                                 else int(sampled[n - 1, slot]))
+                st.next_token = int(sampled[n - 1, slot])
+                events.append((st.rid, new_toks, False))
         self.steps += n
-        return finished
+        self.decode_dispatches += 1
+        return events

@@ -8,9 +8,10 @@ import pytest
 
 from conftest import tiny_dense, tiny_ssm
 from repro.core.lora import init_adapters
-from repro.kernels.ops import paged_gqa_attention
+from repro.kernels.ops import paged_gqa_attention, paged_prefill_gqa_attention
 from repro.kernels.paged_attention import paged_attention
-from repro.kernels.ref import paged_attention_ref
+from repro.kernels.paged_prefill import paged_prefill_attention
+from repro.kernels.ref import paged_attention_ref, paged_prefill_attention_ref
 from repro.models.api import get_model
 from repro.serving.engine import (Engine, MultiTenantEngine, Request,
                                   ServeConfig)
@@ -60,7 +61,62 @@ def test_paged_ops_wrapper_pads_head_dim():
 
 
 # ---------------------------------------------------------------------------
-# PagedKVCache block accounting
+# Chunked paged-prefill kernel vs the gather-materialising oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("H,Kv", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_prefill_matches_ref(H, Kv, dtype):
+    B, T, hd, NB, bs, MB = 4, 5, 32, 13, 4, 5
+    q = jnp.asarray(RNG.standard_normal((B, T, H, hd)), dtype)
+    kp = jnp.asarray(RNG.standard_normal((NB, bs, Kv, hd)), dtype)
+    vp = jnp.asarray(RNG.standard_normal((NB, bs, Kv, hd)), dtype)
+    bt = jnp.asarray(np.stack([RNG.permutation(np.arange(1, NB))[:MB]
+                               for _ in range(B)]), jnp.int32)
+    lens = jnp.asarray([0, 3, 7, 11], jnp.int32)   # ragged, incl. fresh slot
+    y = paged_prefill_attention(q, kp, vp, bt, lens)
+    yr = paged_prefill_attention_ref(q, kp, vp, bt, lens)
+    atol = 0.03 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=atol)
+    assert not np.isnan(np.asarray(y, np.float32)).any()
+
+
+def test_paged_prefill_ops_wrapper_scatters_and_pads():
+    """Model layout with a non-lane-aligned head dim: the wrapper scatters
+    the chunk's K/V through the block table (ragged n_new tails land in
+    scratch block 0) and matches the oracle over the updated pools."""
+    B, T, H, Kv, hd, NB, bs, MB = 3, 4, 4, 2, 24, 14, 4, 4
+    q = jnp.asarray(RNG.standard_normal((B, T, H, hd)), jnp.float32)
+    kn = jnp.asarray(RNG.standard_normal((B, T, Kv, hd)), jnp.float32)
+    vn = jnp.asarray(RNG.standard_normal((B, T, Kv, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((NB, bs, Kv, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((NB, bs, Kv, hd)), jnp.float32)
+    # rows own DISJOINT physical blocks (the allocator's invariant) — the
+    # scatter would otherwise cross-clobber rows
+    perm = RNG.permutation(np.arange(1, NB))[:B * MB].reshape(B, MB)
+    bt = jnp.asarray(perm, jnp.int32)
+    lens = jnp.asarray([0, 2, 5], jnp.int32)
+    n_new = jnp.asarray([4, 2, 0], jnp.int32)      # ragged chunk fill
+    o, kp2, vp2 = paged_prefill_gqa_attention(q, kn, vn, kp, vp, bt, lens,
+                                              n_new)
+    # valid chunk tokens landed at (lengths + t) through the table
+    for b, (l, n) in enumerate(zip([0, 2, 5], [4, 2, 0])):
+        for t in range(n):
+            p = l + t
+            np.testing.assert_array_equal(
+                np.asarray(kp2)[int(bt[b, p // bs]), p % bs],
+                np.asarray(kn)[b, t])
+    # row 2 fed nothing: none of its owned blocks changed
+    own = [int(b) for b in np.asarray(bt)[2, :2]]
+    np.testing.assert_array_equal(np.asarray(kp2)[own], np.asarray(kp)[own])
+    yr = paged_prefill_attention_ref(q, kp2, vp2, bt, lens)
+    assert o.shape == q.shape
+    np.testing.assert_allclose(np.asarray(o), np.asarray(yr), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCache block accounting (on-demand growth)
 # ---------------------------------------------------------------------------
 
 def test_kv_cache_block_accounting():
@@ -68,36 +124,100 @@ def test_kv_cache_block_accounting():
                       max_blocks_per_slot=3)
     assert kv.free_blocks == 5                     # block 0 is scratch
     assert kv.fits(12) and not kv.fits(13)         # 3 blocks * 4 tokens
-    kv.admit(0, 9)                                 # 3 blocks
+    kv.admit(0)                                    # claims slot, ZERO blocks
+    assert kv.free_blocks == 5
+    assert kv.ensure(0, 9)                         # grow to 3 blocks
     assert kv.free_blocks == 2
-    assert (kv.block_tables[0] > 0).all()          # scratch never handed out
-    assert kv.can_admit(8) and not kv.can_admit(9)
-    kv.admit(1, 8)
-    for _ in range(5):
-        kv.advance(0)
+    assert (kv.block_tables[0, :3] > 0).all()      # scratch never handed out
+    assert kv.ensure(0, 9)                         # idempotent: no growth
+    assert kv.free_blocks == 2
+    kv.admit(1)
+    assert kv.ensure(1, 8)                         # 2 blocks
+    assert not kv.ensure(1, 12)                    # pool dry: growth refused
+    assert kv.free_blocks == 0                     # ...and nothing allocated
+    kv.advance(0, 5)
     assert kv.lengths[0] == 5
+    kv.check_invariants()
     kv.release(0)
     assert kv.free_blocks == 3 and kv.lengths[0] == 0
     assert (kv.block_tables[0] == 0).all()
-    kv.admit(0, 12)                                # freed blocks reusable
-    assert kv.free_blocks == 0
+    assert kv.ensure(1, 12)                        # freed blocks reusable
+    kv.check_invariants()
 
 
-def test_scheduler_fcfs_blocks_on_pool_pressure():
+def test_kv_cache_free_list_is_fifo():
+    """Allocation pops the head (deque.popleft — O(1) on the per-chunk
+    path); release appends, so block reuse is FIFO and deterministic."""
+    kv = PagedKVCache(num_slots=2, block_size=2, num_blocks=6,
+                      max_blocks_per_slot=4)
+    kv.admit(0)
+    assert kv.ensure(0, 6)                         # pops 1, 2, 3 in order
+    assert list(kv.block_tables[0, :3]) == [1, 2, 3]
+    kv.admit(1)
+    assert kv.ensure(1, 2)
+    assert list(kv.block_tables[1, :1]) == [4]
+    kv.release(0)                                  # 1,2,3 append after 5
+    assert kv.ensure(1, 8)
+    assert list(kv.block_tables[1, :4]) == [4, 5, 1, 2]
+    kv.check_invariants()
+
+
+def test_scheduler_fcfs_admission_and_rejection():
     kv = PagedKVCache(num_slots=2, block_size=4, num_blocks=4,
                       max_blocks_per_slot=3)        # 3 free blocks total
     sched = Scheduler(kv)
-    sched.submit(0, "a", np.arange(4), 4)           # 2 blocks
-    sched.submit(1, "b", np.arange(4), 4)           # 2 blocks: must wait
+    sched.submit(0, "a", np.arange(9), 2)           # prompt needs 3 blocks
     assert [s for s, _ in sched.admit()] == [0]
-    assert sched.admit() == []                      # head blocked, FCFS
-    # drive request 0 to completion (one-step chunks of constant samples);
-    # its blocks free request 1's admission
-    while 0 not in sched.results:
-        sched.observe_chunk(np.full((1, kv.num_slots), 7, np.int32))
-    assert [s for s, _ in sched.admit()] == [0]     # freed slot reused
+    assert kv.ensure(0, 9)                          # slot 0 grows: pool dry
+    sched.submit(1, "b", np.arange(9), 2)
+    # head's prompt can't be covered by free blocks -> FCFS wait
+    assert sched.admit() == []
     with pytest.raises(ValueError):
         sched.submit(2, "c", np.arange(20), 4)      # span can never fit
+
+
+def test_scheduler_plan_steps_empty_returns_one():
+    """Regression: plan_steps with no active slot used to crash with
+    ``min() arg is an empty sequence``."""
+    kv = PagedKVCache(num_slots=2, block_size=4, num_blocks=4,
+                      max_blocks_per_slot=3)
+    sched = Scheduler(kv)
+    assert sched.plan_steps(8) == 1
+    sched.submit(0, "a", np.arange(4), 4)
+    assert sched.plan_steps(8) == 1                 # queued but not admitted
+
+
+def test_scheduler_preemption_requeues_prompt_plus_emitted():
+    """A preempted slot releases its blocks and requeues at the queue head
+    with prompt+emitted as the new prompt; nothing is lost."""
+    kv = PagedKVCache(num_slots=2, block_size=2, num_blocks=8,
+                      max_blocks_per_slot=6)
+    sched = Scheduler(kv)
+    sched.submit(0, "a", np.asarray([3, 1, 4]), 4)
+    sched.submit(1, "b", np.asarray([2, 7]), 4)
+    assert [s for s, _ in sched.admit()] == [0, 1]
+    assert sched.prepare_chunk(8, 8) == ("prefill", None)
+    arrs = sched.prefill_arrays(8)
+    np.testing.assert_array_equal(arrs["n_new"], [3, 2])
+    sched.observe_prefill(arrs["n_new"], np.asarray([10, 11]))
+    # decode one chunk of 2 steps, then preempt slot 1
+    assert sched.prepare_chunk(8, 2) == ("decode", 2)
+    sched.observe_chunk(np.asarray([[20, 21], [30, 31]], np.int32))
+    kv.check_invariants()
+    sched.preempt(1)
+    kv.check_invariants()
+    assert sched.preemptions == 1
+    rid, cid, prompt, budget, prior = sched._queue[0]
+    assert rid == 1 and cid == "b"
+    np.testing.assert_array_equal(prompt, [2, 7, 11, 21, 31])  # prompt+emitted
+    assert budget == 1 and prior == [11, 21, 31]
+    # resumed: prefill replays, then the final emission completes it
+    assert [s for s, _ in sched.admit()] == [1]
+    assert sched.prepare_chunk(8, 8) == ("prefill", None)
+    arrs = sched.prefill_arrays(8)
+    assert arrs["n_new"][1] == 5
+    sched.observe_prefill(arrs["n_new"], np.asarray([99, 40]))
+    np.testing.assert_array_equal(sched.results[1], [11, 21, 31, 40])
 
 
 # ---------------------------------------------------------------------------

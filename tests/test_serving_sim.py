@@ -1,0 +1,395 @@
+"""Randomized serving-simulation harness for the continuous-batching stack.
+
+Hand-written unit tests stop covering the scheduler's state space once
+on-demand block growth and preemption enter: admission order, chunk
+boundaries, pool pressure, EOS placement and preemption victims interact
+combinatorially.  This harness samples thousands of workloads (ragged
+prompts, mixed budgets, pool sizes down to near-starvation) and drives the
+REAL ``Scheduler`` + ``PagedKVCache`` through the exact engine loop
+(admit -> prepare_chunk -> dispatch -> observe), replacing only the device
+model with a deterministic host token function — so every schedule the
+real engine could produce is checked against a single-tenant greedy oracle
+token-for-token, with block-accounting invariants asserted after every
+chunk:
+
+  * free list + owned blocks always partition {1..num_blocks-1}
+  * no block owned twice; tables name owned blocks in position order
+  * lengths[slot] <= len(owned) * block_size
+  * per-slot context mirror matches lengths exactly
+
+Preemption conservation rides the same driver: a starved pool must emit
+exactly the same tokens as a full-residency pool (prompt+emitted requeue
+loses nothing), and a progress bound over the simulator rules out
+livelock.  A small randomized subset runs the REAL jitted engine
+(chunked paged prefill + decode on device) against the single-tenant
+``Engine`` oracle, including a forced-starvation pool.
+
+When ``hypothesis`` is installed the same driver runs under ``@given``
+with a bounded ``ci`` profile (fast on PRs) and an opt-in ``deep``
+profile (``HYPOTHESIS_PROFILE=deep``, scheduled CI) — a failing workload
+shrinks to a minimal prompt/budget/pool counterexample instead of a
+500-seed haystack.
+"""
+import dataclasses
+import os
+from typing import List, Optional, Tuple
+
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import PagedKVCache, blocks_needed
+from repro.serving.scheduler import Scheduler
+
+VOCAB = 50
+
+
+# ---------------------------------------------------------------------------
+# Deterministic host "model" + single-tenant greedy oracle
+# ---------------------------------------------------------------------------
+
+def _next_token(ctx: List[int]) -> int:
+    """Pure function of the fed context — stands in for greedy decoding."""
+    h = 0
+    for t in ctx:
+        h = (h * 31 + int(t) + 7) % 100003
+    return h % VOCAB
+
+
+def _oracle(prompt, budget: int, eos_id: Optional[int]) -> List[int]:
+    ctx = [int(t) for t in prompt]
+    out: List[int] = []
+    for _ in range(budget):
+        tok = _next_token(ctx)
+        out.append(tok)
+        ctx.append(tok)
+        if eos_id is not None and tok == eos_id:
+            break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Workloads
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Workload:
+    requests: List[Tuple[str, np.ndarray, int]]   # (client_id, prompt, budget)
+    num_slots: int
+    block_size: int
+    num_blocks: int                               # incl. scratch block 0
+    prefill_chunk: int
+    decode_cap: int
+    eos_id: Optional[int]
+
+    @property
+    def max_span(self) -> int:
+        return max(p.size + b for _, p, b in self.requests)
+
+
+def gen_workload(rng: np.random.Generator) -> Workload:
+    n_req = int(rng.integers(1, 9))
+    requests = []
+    for i in range(n_req):
+        plen = int(rng.integers(1, 21))
+        budget = int(rng.integers(1, 17))
+        prompt = rng.integers(0, VOCAB, plen).astype(np.int32)
+        requests.append((f"c{int(rng.integers(0, 3))}", prompt, budget))
+    block_size = int(rng.choice([2, 3, 4, 8]))
+    num_slots = int(rng.integers(1, 5))
+    mbps = blocks_needed(max(p.size + b for _, p, b in requests), block_size)
+    # pool from near-starvation (one request's span, preemption-heavy) up
+    # to full residency for every slot
+    extra = int(rng.integers(0, mbps * num_slots + 1))
+    num_blocks = 1 + mbps + extra
+    eos_id = int(rng.integers(0, VOCAB)) if rng.random() < 0.5 else None
+    return Workload(requests, num_slots, block_size, num_blocks,
+                    prefill_chunk=int(rng.integers(1, 9)),
+                    decode_cap=int(rng.integers(1, 9)), eos_id=eos_id)
+
+
+# ---------------------------------------------------------------------------
+# The simulator: the engine loop with a host model
+# ---------------------------------------------------------------------------
+
+def run_sim(w: Workload) -> Scheduler:
+    """Drive Scheduler+PagedKVCache exactly as ``generate_stream`` does and
+    verify oracle parity, streaming consistency and block invariants."""
+    mbps = blocks_needed(w.max_span, w.block_size)
+    kv = PagedKVCache(w.num_slots, w.block_size, w.num_blocks, mbps)
+    sched = Scheduler(kv)
+    for rid, (cid, prompt, budget) in enumerate(w.requests):
+        sched.submit(rid, cid, prompt, budget)
+
+    ctx = {s: [] for s in range(w.num_slots)}     # per-slot fed-token mirror
+    streamed = {rid: [] for rid in range(len(w.requests))}
+    finish_events = {rid: 0 for rid in range(len(w.requests))}
+    total_work = sum(p.size + b for _, p, b in w.requests)
+    budget_iters = 50 * total_work + 200          # livelock / progress bound
+    iters = 0
+    while sched.has_work:
+        iters += 1
+        assert iters <= budget_iters, \
+            f"progress bound exceeded ({iters} chunks): scheduler livelock"
+        for slot, _cid in sched.admit():
+            ctx[slot] = []
+        plan = sched.prepare_chunk(w.prefill_chunk, w.decode_cap)
+        kv.check_invariants()                      # after growth/preemption
+        assert plan is not None, "stalled with queued work"
+        K = w.num_slots
+        if plan[0] == "prefill":
+            arrs = sched.prefill_arrays(w.prefill_chunk)
+            sampled = np.zeros((K,), np.int32)
+            for s in range(K):
+                n = int(arrs["n_new"][s])
+                if n == 0:
+                    continue
+                ctx[s].extend(int(t) for t in arrs["tokens"][s, :n])
+                sampled[s] = _next_token(ctx[s])
+            events = sched.observe_prefill(arrs["n_new"], sampled,
+                                           eos_id=w.eos_id)
+        else:
+            n = plan[1]
+            arr = sched.chunk_arrays()
+            block = np.zeros((n, K), np.int32)
+            last = arr["last"].copy()
+            for t in range(n):
+                for s in range(K):
+                    if arr["active"][s]:
+                        ctx[s].append(int(last[s]))
+                        block[t, s] = _next_token(ctx[s])
+                        last[s] = block[t, s]
+            events = sched.observe_chunk(block, eos_id=w.eos_id)
+        kv.check_invariants()
+        for s in sched.active_slots:               # mirror == device lengths
+            assert kv.lengths[s] == len(ctx[s]), (s, kv.lengths[s], len(ctx[s]))
+        for rid, toks, finished in events:
+            streamed[rid].extend(toks)
+            finish_events[rid] += finished
+
+    for rid, (cid, prompt, budget) in enumerate(w.requests):
+        want = _oracle(prompt, budget, w.eos_id)
+        got = list(sched.results[rid])
+        assert got == want, (
+            f"rid {rid}: oracle parity broken\n got {got}\nwant {want}")
+        # streaming increments reassemble the result; exactly one finish
+        assert streamed[rid] == want
+        assert finish_events[rid] == 1
+    assert all(s is None for s in sched._slots)
+    assert kv.free_blocks == kv.num_blocks - 1     # everything released
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# 500+ seeded workloads (runs everywhere, no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+def test_simulation_500_randomized_workloads():
+    preemptions = 0
+    starved = 0
+    for seed in range(520):
+        rng = np.random.default_rng(seed)
+        w = gen_workload(rng)
+        if w.num_blocks - 1 < blocks_needed(w.max_span, w.block_size) * min(
+                w.num_slots, len(w.requests)):
+            starved += 1                           # pool below full residency
+        sched = run_sim(w)
+        preemptions += sched.preemptions
+    # the sample must actually exercise the interesting regimes
+    assert starved > 50, f"only {starved} starvation workloads sampled"
+    assert preemptions > 20, f"only {preemptions} preemptions exercised"
+
+
+def test_preemption_conserves_output_tokens():
+    """Starved pool (preemption-heavy) must emit exactly what a
+    full-residency pool (never preempts) emits, request for request."""
+    checked = 0
+    for seed in range(40):
+        rng = np.random.default_rng(1000 + seed)
+        w = gen_workload(rng)
+        if len(w.requests) < 2:
+            continue
+        mbps = blocks_needed(w.max_span, w.block_size)
+        roomy = dataclasses.replace(
+            w, num_blocks=1 + mbps * w.num_slots)
+        starved = dataclasses.replace(w, num_blocks=1 + mbps)
+        s_roomy = run_sim(roomy)
+        s_starved = run_sim(starved)
+        for rid in range(len(w.requests)):
+            np.testing.assert_array_equal(s_roomy.results[rid],
+                                          s_starved.results[rid])
+        checked += s_starved.preemptions
+    assert checked > 0, "starved pools never triggered preemption"
+
+
+def test_progress_bound_under_forced_thrash():
+    """Worst-case pool (exactly one request's span) with many long
+    requests: completes within the simulator's progress bound (run_sim
+    asserts it) and every preempted request still matches the oracle."""
+    prompts = [np.arange(i, i + 12, dtype=np.int32) % VOCAB
+               for i in range(6)]
+    w = Workload([("c0", p, 10) for p in prompts],
+                 num_slots=3, block_size=4,
+                 num_blocks=1 + blocks_needed(22, 4),
+                 prefill_chunk=4, decode_cap=4, eos_id=None)
+    sched = run_sim(w)
+    assert sched.preemptions > 0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: same driver, shrinking counterexamples, ci/deep profiles
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("ci", max_examples=60, deadline=None)
+    settings.register_profile("deep", max_examples=1500, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:                                # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def workloads(draw):
+        n_req = draw(st.integers(1, 6))
+        requests = []
+        for i in range(n_req):
+            prompt = np.asarray(
+                draw(st.lists(st.integers(0, VOCAB - 1), min_size=1,
+                              max_size=14)), np.int32)
+            requests.append((f"c{i % 3}", prompt, draw(st.integers(1, 10))))
+        block_size = draw(st.sampled_from([2, 3, 4]))
+        num_slots = draw(st.integers(1, 4))
+        mbps = blocks_needed(max(p.size + b for _, p, b in requests),
+                             block_size)
+        extra = draw(st.integers(0, mbps * num_slots))
+        num_blocks = 1 + mbps + extra
+        eos = draw(st.one_of(st.none(), st.integers(0, VOCAB - 1)))
+        return Workload(requests, num_slots, block_size, num_blocks,
+                        prefill_chunk=draw(st.integers(1, 6)),
+                        decode_cap=draw(st.integers(1, 6)), eos_id=eos)
+
+    @given(workloads())
+    def test_simulation_hypothesis(w):
+        run_sim(w)
+
+
+# ---------------------------------------------------------------------------
+# Real-engine randomized spot checks (device chunked prefill + decode)
+# ---------------------------------------------------------------------------
+
+def _real_engine_setup():
+    import jax
+    from conftest import tiny_dense
+    from repro.core.lora import init_adapters
+    from repro.models.api import get_model
+    from repro.serving.engine import MultiTenantEngine
+    from repro.serving.registry import AdapterRegistry
+
+    cfg = tiny_dense()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ads = {}
+    for i in range(2):
+        ad = init_adapters(jax.random.PRNGKey(i + 1), cfg)
+        bump = jax.random.PRNGKey(i + 99)
+        ads[f"c{i}"] = jax.tree.map(
+            lambda l: l + 0.02 * jax.random.normal(bump, l.shape), ad)
+    reg = AdapterRegistry(cfg, capacity=4)
+    for cid, ad in ads.items():
+        reg.register(cid, ad)
+    return cfg, model, params, ads, MultiTenantEngine(model, cfg, params, reg)
+
+
+@pytest.fixture(scope="module")
+def real_engine():
+    return _real_engine_setup()
+
+
+def _real_workload(cfg, rng, n_req):
+    """Random ragged requests pinned to one (span, shape) envelope so every
+    seed reuses the same compiled prefill/decode programs."""
+    from repro.serving.engine import Request
+    reqs = [Request(f"c{rng.integers(0, 2)}",
+                    (np.arange(12, dtype=np.int32) * 3 + 1) % cfg.vocab_size,
+                    max_new_tokens=6)]             # span anchor: 12 + 6
+    for _ in range(n_req - 1):
+        plen = int(rng.integers(1, 13))
+        budget = int(rng.integers(1, 7))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        reqs.append(Request(f"c{rng.integers(0, 2)}", prompt,
+                            max_new_tokens=budget))
+    return reqs
+
+
+def _single_tenant_ref(model, cfg, params, ad, prompt, budget):
+    import jax.numpy as jnp
+    from repro.serving.engine import Engine, ServeConfig
+    sc = ServeConfig(batch_size=1, max_new_tokens=budget, cache_len=64)
+    return np.asarray(Engine(model, cfg, params, ad).generate(
+        jnp.asarray(np.asarray(prompt, np.int32))[None], sc))[0]
+
+
+def test_real_engine_randomized_oracle_parity(real_engine):
+    """Chunked paged prefill + decode through the jitted engine must match
+    single-tenant greedy decoding token-for-token on random ragged
+    mixed-client workloads."""
+    from repro.serving.engine import ServeConfig
+    cfg, model, params, ads, mt = real_engine
+    sc = ServeConfig(batch_size=2, max_new_tokens=6, block_size=4,
+                     num_blocks=24, prefill_chunk=4)
+    for seed in (0, 1, 2, 3):
+        rng = np.random.default_rng(seed)
+        reqs = _real_workload(cfg, rng, n_req=4)
+        outs = mt.generate(reqs, sc)
+        assert mt.last_stats["prefill_dispatches"] > 0
+        for r, o in zip(reqs, outs):
+            ref = _single_tenant_ref(model, cfg, params, ads[r.client_id],
+                                     r.prompt, r.max_new_tokens)
+            np.testing.assert_array_equal(o, ref)
+
+
+def test_real_engine_starved_pool_preempts_and_matches(real_engine):
+    """Forced pool starvation on the real engine: preemption fires, and
+    preempted-then-resumed requests emit exactly the tokens of an
+    unpreempted single-tenant run."""
+    from repro.serving.engine import ServeConfig
+    cfg, model, params, ads, mt = real_engine
+    rng = np.random.default_rng(7)
+    reqs = _real_workload(cfg, rng, n_req=5)
+    # span anchor 18 -> 5 blocks of 4; 3 slots want 15, pool holds 7
+    sc = ServeConfig(batch_size=3, max_new_tokens=6, block_size=4,
+                     num_blocks=8, prefill_chunk=4)
+    outs = mt.generate(reqs, sc)
+    assert mt.last_stats["preemptions"] > 0
+    for r, o in zip(reqs, outs):
+        ref = _single_tenant_ref(model, cfg, params, ads[r.client_id],
+                                 r.prompt, r.max_new_tokens)
+        np.testing.assert_array_equal(o, ref)
+
+
+def test_real_engine_stream_yields_incrementally(real_engine):
+    """generate_stream yields (rid, tokens, finished) increments that
+    reassemble exactly into generate()'s results, with tokens visible
+    across multiple chunks (not one burst at drain)."""
+    from repro.serving.engine import Request, ServeConfig
+    cfg, model, params, ads, mt = real_engine
+    prompt = (np.arange(12, dtype=np.int32) * 3 + 1) % cfg.vocab_size
+    reqs = [Request("c0", prompt, max_new_tokens=6),
+            Request("c1", prompt[:5], max_new_tokens=6),
+            Request("c0", prompt[:8], max_new_tokens=4)]
+    sc = ServeConfig(batch_size=2, max_new_tokens=6, block_size=4,
+                     num_blocks=24, prefill_chunk=4, scan_chunk=2)
+    got = {i: [] for i in range(len(reqs))}
+    finishes = []
+    n_events = 0
+    for rid, toks, finished in mt.generate_stream(reqs, sc):
+        got[rid].extend(toks)
+        n_events += 1
+        if finished:
+            finishes.append(rid)
+    assert n_events > len(reqs)                    # incremental, not one burst
+    assert sorted(finishes) == [0, 1, 2]
+    outs = mt.generate(reqs, sc)
+    for i, o in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(got[i], np.int32), o)
