@@ -1,0 +1,88 @@
+"""Fail CI when a benchmarked serving metric regresses past tolerance.
+
+The bench-gate CI job runs ``benchmarks/multitenant_bench.py --smoke``
+(which merges a ``smoke`` throughput section into ``BENCH_serving.json``)
+and then this script, which compares the fresh number against the
+committed baseline:
+
+    python scripts/check_bench_regression.py \
+        --current BENCH_serving.json \
+        --baseline benchmarks/baselines/serving_smoke.json
+
+Exit 1 when ``current < baseline * (1 - max_regression)``.  Improvements
+never fail (ratchet the baseline with ``--update`` when a PR makes the
+smoke workload legitimately faster — or slower, with justification in the
+PR).  ``BENCH_MAX_REGRESSION`` overrides the tolerance without a code
+change (shared CI runners are noisier than a quiet dev box).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def dig(record: dict, dotted: str):
+    cur = record
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(f"key {dotted!r} not found (missing {part!r})")
+        cur = cur[part]
+    return cur
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_serving.json",
+                    help="bench record produced by the current run")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/serving_smoke.json",
+                    help="committed baseline record")
+    ap.add_argument("--key", default="smoke.tok_per_s",
+                    help="dotted path to the gated metric (higher = better)")
+    ap.add_argument("--max-regression", type=float,
+                    default=float(os.environ.get("BENCH_MAX_REGRESSION",
+                                                 "0.25")),
+                    help="allowed fractional drop (default 0.25 = 25%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline with the current value")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = dig(json.load(f), args.key)
+
+    if args.update:
+        nested: dict = {"note": "smoke-gate baseline; refresh with "
+                                "scripts/check_bench_regression.py --update"}
+        cur = nested
+        parts = args.key.split(".")
+        for part in parts[:-1]:
+            cur = cur.setdefault(part, {})
+        cur[parts[-1]] = current
+        os.makedirs(os.path.dirname(args.baseline) or ".", exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(nested, f, indent=2)
+            f.write("\n")
+        print(f"baseline updated: {args.key} = {current:.1f}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = dig(json.load(f), args.key)
+
+    floor = baseline * (1.0 - args.max_regression)
+    ratio = current / baseline if baseline else float("inf")
+    verdict = "OK" if current >= floor else "REGRESSION"
+    print(f"{args.key}: current={current:.1f} baseline={baseline:.1f} "
+          f"({ratio:.2f}x, floor={floor:.1f} at "
+          f"-{args.max_regression:.0%}) -> {verdict}")
+    if current < floor:
+        print("bench gate failed: smoke throughput regressed past "
+              "tolerance; if intentional, refresh the baseline with "
+              "--update and justify in the PR", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -52,7 +52,16 @@ def paged_scatter(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     slots) are redirected to scratch block 0 — this is the ONE place the
     scatter convention lives; the jnp attention oracle
     (``models/layers.py`` paged branch) and the kernel wrapper
-    (``kernels/ops.py``) both go through it.  Returns (k_pool, v_pool)."""
+    (``kernels/ops.py``) both go through it.  Returns (k_pool, v_pool).
+
+    Shared/private discipline (prefix caching): writes land only at
+    positions ``>= lengths[b]``, and the allocator guarantees every block
+    past a slot's sealed prefix is PRIVATE (refcount 1) while shared
+    (refcounted / content-indexed) blocks are always full and sit below
+    ``lengths[b]`` — so this scatter can never touch a block another slot
+    (or the cross-call cache) is reading, with no copy-on-write needed.
+    Scratch block 0 is never allocated or cached, so ragged-tail redirects
+    stay harmless too."""
     B, S = k.shape[0], k.shape[1]
     bs_blk = k_pool.shape[1]
     rows = jnp.arange(B, dtype=jnp.int32)

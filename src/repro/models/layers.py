@@ -285,7 +285,12 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
       tokens are scattered to positions ``lengths[b] + t`` through the
       table (with the 3-tuple form, rows ``t >= n_new[b]`` are redirected
       to scratch block 0 — host-side chunk raggedness), and each query
-      attends ``[0, lengths[b] + t]``.  Attention is computed one chunk
+      attends ``[0, lengths[b] + t]``.  Under prefix caching a table row
+      may name blocks SHARED with other slots (refcounted, sealed full by
+      a previous owner): they are read-only by construction — writes start
+      at ``lengths[b]``, which always lies in a private block — and the
+      gather treats them identically, so a cache-hit slot is bitwise-equal
+      to one that prefilled the same positions itself.  Attention is computed one chunk
       position at a time so a multi-token prefill chunk stays BITWISE equal
       to feeding the same tokens one decode step each (the probs·V matmul
       is not chunk-size-invariant on CPU).  The jnp gather below is the

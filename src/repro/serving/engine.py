@@ -51,8 +51,21 @@ class ServeConfig:
     pad_id: int = 0
     block_size: int = 16             # paged-cache block size (continuous)
     num_blocks: Optional[int] = None  # pool size; None => full residency
+    max_blocks_per_slot: Optional[int] = None  # block-table width; None =>
+    #                                  longest span (or the whole pool when
+    #                                  prefix caching with a pinned pool)
     scan_chunk: int = 32             # max device steps between admissions
     prefill_chunk: int = 16          # prompt tokens per prefill dispatch
+    prefix_cache: bool = False       # content-addressed shared blocks:
+    #                                  shared prompt prefixes (and preempted
+    #                                  requests' replays) skip re-prefill,
+    #                                  within AND across generate calls.
+    #                                  Warm-vs-cold BITWISE equality holds
+    #                                  for greedy decoding (temperature 0);
+    #                                  with temperature > 0 samples stay
+    #                                  valid but draw a different rng
+    #                                  stream (fewer dispatches = fewer
+    #                                  rng splits), so runs don't replay.
 
 
 @dataclasses.dataclass
@@ -218,6 +231,51 @@ class MultiTenantEngine(_EngineBase):
         super().__init__(model, cfg)
         self.params, self.registry = params, registry
         self.last_stats: Optional[dict] = None   # set when a stream drains
+        # cross-call prefix-cache state: (pool key, PagedKVCache, device
+        # cache) persisted at stream drain so the NEXT generate call's
+        # admission can match blocks sealed by this one.  Retained until a
+        # prefix_cache stream with a different pool geometry replaces it or
+        # release_prefix_cache() drops it — a deliberate warm cache, which
+        # means the device pools stay resident across unrelated calls.
+        self._warm: Optional[Tuple[tuple, PagedKVCache, Any]] = None
+
+    def release_prefix_cache(self) -> None:
+        """Drop the warm prefix-cache pool (host allocator + device K/V
+        blocks).  The next ``prefix_cache=True`` stream starts cold; call
+        this when a tenant mix moves on and the retained pool's device
+        memory is worth more than future prefix hits."""
+        self._warm = None
+
+    def _paged_pool(self, num_slots: int, num_blocks: int, blocks_per: int,
+                    sc: ServeConfig) -> Tuple[PagedKVCache, Any, bool]:
+        """A (host allocator, device cache, reused) triple for one stream.
+        With ``sc.prefix_cache``, reuse the pair persisted by the last
+        drained stream when the pool geometry matches — sealed blocks (and
+        their device K/V) survive, so shared prompt prefixes across calls
+        skip prefill.  A geometry change or a stream abandoned mid-flight
+        drops the warm state and starts cold (``last_stats
+        ['prefix_pool_reused']`` says which happened)."""
+        key = (num_slots, sc.block_size, num_blocks, blocks_per)
+        if sc.prefix_cache:
+            warm, self._warm = self._warm, None   # taken; restored at drain
+            if warm is not None and warm[0] == key and warm[1].idle:
+                return warm[1], warm[2], True
+        kv = PagedKVCache(num_slots, sc.block_size, num_blocks, blocks_per,
+                          prefix_cache=sc.prefix_cache)
+        cache = self.model.init_paged_decode_cache(num_slots, num_blocks,
+                                                   sc.block_size)
+        if sc.prefix_cache:
+            # recurrent SSM state is per-slot and dense — it cannot be
+            # reconstructed from cached K/V blocks, so a prefix hit would
+            # silently skip the state updates for the matched positions
+            for entry in cache["blocks"].values():
+                extra = set(entry) - {"k_pool", "v_pool"}
+                if extra:
+                    raise ValueError(
+                        "prefix_cache=True needs an attention-only model: "
+                        f"recurrent per-slot state {sorted(extra)} cannot "
+                        "be block-cached")
+        return kv, cache, False
 
     # -- continuous batching (the serving path) ------------------------------
     def generate_stream(self, requests: Sequence[Request], sc: ServeConfig
@@ -242,17 +300,33 @@ class MultiTenantEngine(_EngineBase):
                    for r in requests]
         budgets = [sc.max_new_tokens if r.max_new_tokens is None
                    else r.max_new_tokens for r in requests]
-        num_slots = max(1, min(sc.batch_size, len(requests)))
         max_span = max(p.size + b for p, b in zip(prompts, budgets))
-        blocks_per = blocks_needed(max_span, sc.block_size)
-        num_blocks = sc.num_blocks or (1 + num_slots * blocks_per)
-        kv = PagedKVCache(num_slots, sc.block_size, num_blocks, blocks_per)
+        if sc.prefix_cache and sc.num_blocks is not None:
+            # STABLE pool geometry: cross-call warm reuse must not depend
+            # on this batch's request count or longest span (a batch-derived
+            # key would silently drop the cache whenever traffic varies) —
+            # slots track batch_size and the table spans the whole pool
+            # unless pinned tighter.  Extra masked gather lanes are exact
+            # zeros, so the wider table stays bitwise-equal.
+            num_slots = max(1, sc.batch_size)
+            num_blocks = sc.num_blocks
+            blocks_per = sc.max_blocks_per_slot or (num_blocks - 1)
+        else:
+            num_slots = max(1, min(sc.batch_size, len(requests)))
+            blocks_per = (sc.max_blocks_per_slot
+                          or blocks_needed(max_span, sc.block_size))
+            num_blocks = sc.num_blocks or (1 + num_slots * blocks_per)
+        kv, cache, reused = self._paged_pool(num_slots, num_blocks,
+                                             blocks_per, sc)
+        evicted0 = kv.evicted_cached   # pool-lifetime counter; report delta
         sched = Scheduler(kv)
         for rid, (r, p, b) in enumerate(zip(requests, prompts, budgets)):
-            sched.submit(rid, r.client_id, p, b)
+            # cached K/V depends on the adapter: scope hits by client AND
+            # by the registry's version of its weights (re-registration
+            # invalidates without any explicit flush)
+            scope = (r.client_id, self.registry.version(r.client_id))
+            sched.submit(rid, r.client_id, p, b, scope=scope)
 
-        cache = self.model.init_paged_decode_cache(num_slots, num_blocks,
-                                                   sc.block_size)
         bank = self.registry.bank()
         ids = np.zeros((num_slots,), np.int32)
         rng = jax.random.PRNGKey(sc.seed)
@@ -296,7 +370,17 @@ class MultiTenantEngine(_EngineBase):
         self.last_stats = {"prefill_dispatches": sched.prefill_dispatches,
                            "decode_dispatches": sched.decode_dispatches,
                            "decode_steps": sched.steps,
-                           "preemptions": sched.preemptions}
+                           "preemptions": sched.preemptions,
+                           "prompt_tokens": sched.prompt_tokens,
+                           "prefix_hit_tokens": sched.prefix_hit_tokens,
+                           "prefix_hit_rate": (sched.prefix_hit_tokens
+                                               / max(1, sched.prompt_tokens)),
+                           "prefix_cached_blocks": kv.cached_blocks,
+                           "prefix_evictions": kv.evicted_cached - evicted0,
+                           "prefix_pool_reused": reused}
+        if sc.prefix_cache:
+            key = (num_slots, sc.block_size, num_blocks, blocks_per)
+            self._warm = (key, kv, cache)
 
     def generate(self, requests: Sequence[Request],
                  sc: ServeConfig) -> List[np.ndarray]:

@@ -1,4 +1,4 @@
-"""Paged KV cache: host-side block accounting over shared device pools.
+"""Paged KV cache: a content-addressed, refcounted block pool.
 
 The serving path replaces the monolithic per-batch ``(B, cache_len)`` cache
 tree (``models/model.py::init_decode_cache``) with fixed-size K/V *blocks*
@@ -13,24 +13,50 @@ layers have O(1) recurrent state and simply keep a dense per-slot row
 Blocks are allocated **on demand** (vLLM style): admission claims a slot
 with zero blocks, and the scheduler calls :meth:`PagedKVCache.ensure`
 before each device chunk to grow every active slot's table to cover the
-positions the chunk will write.  A failed ``ensure`` (empty free list) is
-the scheduler's preemption trigger — it releases a victim's blocks and
+positions the chunk will write.  A failed ``ensure`` (nothing allocatable)
+is the scheduler's preemption trigger — it releases a victim's blocks and
 requeues the victim with its prompt+emitted tokens as the new prompt, so
 the pool admits far deeper queues than full-span reservation while no work
-is ever lost.  The free list is a ``deque`` (``popleft`` allocation is on
-the per-chunk host path); release appends, so block reuse is FIFO.
+is ever lost.
+
+**Prefix caching** (``prefix_cache=True``) turns the pool content-addressed
+and refcounted: every *sealed* block (a block the owning slot has written
+full) gets a chain digest of ``(parent digest, block's token ids)`` rooted
+at the slot's *scope* (the engine uses ``(client_id, adapter version)`` —
+K/V depends on the adapter, so blocks never leak across clients or across
+re-registered weights).  A ``digest -> block`` index lets :meth:`admit`
+match the longest cached prefix of a new prompt and map those blocks into
+the slot's table with ``refcount += 1`` — their prefill is skipped entirely
+(the scheduler starts ``fed`` past the hit).  The match is capped at
+``len(prompt) - 1`` tokens so at least one prompt token is always prefilled
+(the first sampled logit needs a live forward pass).
+
+Refcount lifecycle: a fresh block is private (``refcount == 1``) and is the
+ONLY kind of block ever written — the tail a slot is still filling is
+private until sealed, and sealed blocks are full, so sharing needs no
+copy-on-write.  :meth:`release` (finish or preemption) decrements; at zero
+an *indexed* block parks in an LRU cached-free pool — its device content
+intact, ready to be re-matched (a preempted request re-admitted with
+``prompt + emitted`` re-matches its own sealed blocks and resumes with
+near-zero re-prefill) — while unindexed blocks return to the plain FIFO
+free list.  Allocation prefers the free list and only then evicts the
+least-recently-released cached block (dropping its index entry), so a warm
+cache degrades gracefully under pool pressure and preemption's progress
+bound is unchanged: everything cached-free is still allocatable.
 
 This class is pure host bookkeeping: the device cache pytree stays
 functional and flows through the jitted steps; the tables are uploaded per
 chunk (a few hundred int32s).  Physical block 0 is reserved as a scratch
 target so *inactive* slots (table rows all-zero, length 0) and ragged
 prefill-chunk tails scatter their garbage writes somewhere harmless
-instead of corrupting a live request's block.
+instead of corrupting a live request's block — block 0 is never allocated,
+never sealed, never shared.
 """
 from __future__ import annotations
 
-from collections import deque
-from typing import List, Tuple
+import hashlib
+from collections import OrderedDict, deque
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,109 +67,324 @@ def blocks_needed(n_tokens: int, block_size: int) -> int:
     return -(-max(n_tokens, 1) // block_size)
 
 
+def _root_digest(scope: Any) -> bytes:
+    return hashlib.sha256(b"scope:" + repr(scope).encode()).digest()
+
+
+def _chain_digest(parent: bytes, tokens: Sequence[int]) -> bytes:
+    data = np.asarray(tokens, np.int32).tobytes()
+    return hashlib.sha256(parent + data).digest()
+
+
 class PagedKVCache:
     """Block allocator + block tables for ``num_slots`` serving slots.
 
     ``num_blocks`` counts physical blocks *including* the reserved scratch
     block 0; ``max_blocks_per_slot`` fixes the block-table width (and so the
     longest admissible context: ``max_blocks_per_slot * block_size``).
+    With ``prefix_cache=True`` sealed blocks are content-addressed and
+    shared across slots/calls (see module docstring); refcounting is always
+    on — without the flag every block simply stays at refcount 1.
     """
 
     def __init__(self, num_slots: int, block_size: int, num_blocks: int,
-                 max_blocks_per_slot: int):
+                 max_blocks_per_slot: int, prefix_cache: bool = False):
         if num_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is scratch)")
         self.num_slots = num_slots
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.max_blocks_per_slot = max_blocks_per_slot
+        self.prefix_cache = prefix_cache
         self.block_tables = np.zeros((num_slots, max_blocks_per_slot),
                                      np.int32)
         self.lengths = np.zeros((num_slots,), np.int32)
         self._free: "deque[int]" = deque(range(1, num_blocks))
+        # refcount-0 blocks whose content is still indexed, least-recently
+        # released first (the eviction end) — the AdapterRegistry LRU
+        # discipline applied to blocks instead of adapters.
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
+        self._refcount = np.zeros((num_blocks,), np.int64)
         self._owned: List[List[int]] = [[] for _ in range(num_slots)]
+        self._occupied: List[bool] = [False] * num_slots
+        # content addressing: digest -> block, plus per-block reverse maps
+        # (kept ONLY for indexed blocks; cleared on eviction/reuse)
+        self._index: dict = {}
+        self._block_hash: dict = {}
+        self._block_tokens: dict = {}
+        # per-slot hashing state: scope, running chain digest (None = sealing
+        # disabled for this slot), sealed-block count, unsealed tail tokens
+        self._scope: List[Any] = [None] * num_slots
+        self._chain: List[Optional[bytes]] = [None] * num_slots
+        self._nseal: List[int] = [0] * num_slots
+        self._pending: List[List[int]] = [[] for _ in range(num_slots)]
+        self.evicted_cached = 0    # pool-lifetime cached-block evictions
 
     # ---- capacity ---------------------------------------------------------
     @property
     def free_blocks(self) -> int:
         return len(self._free)
 
+    @property
+    def cached_blocks(self) -> int:
+        """Refcount-0 blocks retained for prefix re-matching (allocatable)."""
+        return len(self._cached)
+
+    @property
+    def allocatable_blocks(self) -> int:
+        return len(self._free) + len(self._cached)
+
     def fits(self, n_tokens: int) -> bool:
         """Can a request spanning ``n_tokens`` EVER be admitted (even with
-        every other slot preempted)?"""
+        every other slot preempted and the whole cache evicted)?"""
         n = blocks_needed(n_tokens, self.block_size)
         return n <= min(self.max_blocks_per_slot, self.num_blocks - 1)
 
     def can_admit(self, n_tokens: int) -> bool:
-        """Are there free blocks to cover ``n_tokens`` positions right now?
-        (An admission heuristic — blocks are NOT reserved until
-        :meth:`ensure` allocates them chunk by chunk.)"""
+        """Are there allocatable blocks to cover ``n_tokens`` positions right
+        now?  (An admission heuristic — blocks are NOT reserved until
+        :meth:`ensure` allocates them chunk by chunk; cached-free blocks
+        count because growth may evict them.)"""
         return (self.fits(n_tokens)
-                and blocks_needed(n_tokens, self.block_size) <= self.free_blocks)
+                and blocks_needed(n_tokens, self.block_size)
+                <= self.allocatable_blocks)
+
+    # ---- allocation -------------------------------------------------------
+    def _drop_index(self, block: int) -> None:
+        digest = self._block_hash.pop(block, None)
+        if digest is not None:
+            self._index.pop(digest, None)
+        self._block_tokens.pop(block, None)
+
+    def _alloc(self) -> int:
+        """One fresh private block: free list first, else evict the
+        least-recently-released cached block (its index entry dies with it)."""
+        if self._free:
+            return self._free.popleft()
+        block, _ = self._cached.popitem(last=False)
+        self._drop_index(block)
+        self.evicted_cached += 1
+        return block
+
+    # ---- prefix matching --------------------------------------------------
+    def match_prefix(self, scope: Any, tokens: Sequence[int]
+                     ) -> Tuple[List[int], bytes]:
+        """Longest cached prefix of ``tokens`` under ``scope``: walks full
+        blocks, chaining digests, and stops at the first index miss.  The
+        match is capped at ``len(tokens) - 1`` so at least one token is left
+        to prefill.  Returns ``(blocks, chain digest after the match)``."""
+        chain = _root_digest(scope)
+        hits: List[int] = []
+        if not self.prefix_cache:
+            return hits, chain
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        full = (int(tokens.size) - 1) // self.block_size
+        for i in range(min(full, self.max_blocks_per_slot)):
+            blk_toks = tuple(int(t) for t in
+                             tokens[i * self.block_size:
+                                    (i + 1) * self.block_size])
+            digest = _chain_digest(chain, blk_toks)
+            block = self._index.get(digest)
+            if block is None:
+                break
+            assert self._block_tokens[block] == blk_toks, \
+                "prefix index corrupt: digest matches different tokens"
+            hits.append(block)
+            chain = digest
+        return hits, chain
 
     # ---- slot lifecycle ---------------------------------------------------
-    def admit(self, slot: int) -> None:
-        """Claim ``slot`` with zero blocks; :meth:`ensure` grows it."""
-        assert not self._owned[slot], f"slot {slot} already occupied"
+    def admit(self, slot: int, scope: Any = None,
+              tokens: Optional[Sequence[int]] = None) -> int:
+        """Claim ``slot`` with zero private blocks; :meth:`ensure` grows it.
+
+        With prefix caching, ``tokens`` (the request's prompt) is matched
+        against the cache under ``scope`` and every hit block is mapped
+        into the slot's table with ``refcount += 1`` — the slot starts with
+        ``lengths[slot]`` already covering the hit, and the scheduler skips
+        prefilling those positions.  Returns the number of cached tokens
+        (0 without a hit or with caching disabled)."""
+        if self._occupied[slot]:
+            raise ValueError(f"slot {slot} already occupied")
+        self._occupied[slot] = True
         self.block_tables[slot] = 0
         self.lengths[slot] = 0
+        self._owned[slot] = []
+        self._pending[slot] = []
+        self._nseal[slot] = 0
+        self._scope[slot] = scope
+        self._chain[slot] = _root_digest(scope) if self.prefix_cache else None
+        if self.prefix_cache and tokens is not None:
+            hits, chain = self.match_prefix(scope, tokens)
+            for i, block in enumerate(hits):
+                self._refcount[block] += 1
+                self._cached.pop(block, None)      # 0 -> 1: leaves the pool
+                self.block_tables[slot, i] = block
+                self._owned[slot].append(block)
+            self._nseal[slot] = len(hits)
+            self._chain[slot] = chain
+            self.lengths[slot] = len(hits) * self.block_size
+        return int(self.lengths[slot])
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot`` to own blocks covering ``n_tokens`` positions.
 
-        Returns False (allocating nothing) when the free list cannot cover
+        Growth only ever appends fresh PRIVATE blocks (prefix hits happen at
+        admission; every block past the sealed prefix is refcount-1, so the
+        scatter path never writes shared content).  Returns False
+        (allocating nothing) when free + cached-free blocks cannot cover
         the growth — the scheduler's cue to preempt a victim and retry."""
+        if not self._occupied[slot]:
+            raise ValueError(f"slot {slot} not occupied")
         need = blocks_needed(n_tokens, self.block_size)
         assert need <= self.max_blocks_per_slot, (need, n_tokens)
         add = need - len(self._owned[slot])
         if add <= 0:
             return True
-        if add > len(self._free):
+        if add > self.allocatable_blocks:
             return False
         for _ in range(add):
-            b = self._free.popleft()
+            b = self._alloc()
+            self._refcount[b] = 1
             self.block_tables[slot, len(self._owned[slot])] = b
             self._owned[slot].append(b)
         return True
 
-    def advance(self, slot: int, n: int = 1) -> None:
-        """``n`` tokens were written at positions ``lengths[slot]``..."""
-        self.lengths[slot] += n
-        assert self.lengths[slot] <= len(self._owned[slot]) * self.block_size, \
-            f"slot {slot} advanced past its owned blocks"
+    def _seal(self, slot: int) -> None:
+        """The oldest unsealed block of ``slot`` is now full: chain its
+        digest and index it (first writer wins; duplicate content keeps the
+        original block as the canonical copy)."""
+        block = self._owned[slot][self._nseal[slot]]
+        toks = tuple(self._pending[slot][:self.block_size])
+        del self._pending[slot][:self.block_size]
+        digest = _chain_digest(self._chain[slot], toks)
+        self._chain[slot] = digest
+        self._nseal[slot] += 1
+        if digest not in self._index:
+            self._index[digest] = block
+            self._block_hash[block] = digest
+            self._block_tokens[block] = toks
+
+    def advance(self, slot: int, n: int = 1,
+                tokens: Optional[Sequence[int]] = None) -> None:
+        """``n`` tokens were written at positions ``lengths[slot]``...
+
+        ``tokens`` (the written ids, length ``n``) feeds the sealing chain:
+        each block the write fills becomes content-addressed and shareable.
+        Passing ``tokens=None`` permanently disables sealing for this slot
+        incarnation (unhashable writes must never be served as a prefix)."""
+        if not self._occupied[slot]:
+            raise ValueError(f"slot {slot} not occupied")
+        new_len = int(self.lengths[slot]) + n
+        if new_len > len(self._owned[slot]) * self.block_size:
+            raise ValueError(
+                f"slot {slot} advanced past its owned blocks "
+                f"({new_len} > {len(self._owned[slot])} * {self.block_size})")
+        self.lengths[slot] = new_len
+        if self._chain[slot] is None:
+            return
+        if tokens is None:
+            self._chain[slot] = None
+            self._pending[slot] = []
+            return
+        if len(tokens) != n:
+            raise ValueError(f"advance(n={n}) got {len(tokens)} tokens")
+        self._pending[slot].extend(int(t) for t in tokens)
+        while len(self._pending[slot]) >= self.block_size:
+            self._seal(slot)
 
     def release(self, slot: int) -> None:
-        """Return a finished/preempted slot's blocks to the free list."""
-        self._free.extend(self._owned[slot])
+        """Drop a finished/preempted slot's references.  Blocks reaching
+        refcount 0 park in the cached-free LRU if indexed (content retained
+        for future prefix hits; deepest blocks are evicted first within one
+        release), else return to the FIFO free list."""
+        if not self._occupied[slot]:
+            raise ValueError(f"slot {slot} not occupied (double release?)")
+        owned = self._owned[slot]
+        for b in owned:
+            self._refcount[b] -= 1
+        for b in owned:                       # FIFO free list, table order
+            if self._refcount[b] == 0 and b not in self._block_hash:
+                self._free.append(b)
+        for b in reversed(owned):             # tail blocks evict first
+            if self._refcount[b] == 0 and b in self._block_hash:
+                self._cached[b] = None
         self._owned[slot] = []
+        self._occupied[slot] = False
+        self._pending[slot] = []
+        self._nseal[slot] = 0
+        self._chain[slot] = None
+        self._scope[slot] = None
         self.block_tables[slot] = 0
         self.lengths[slot] = 0
 
     # ---- invariants -------------------------------------------------------
     def check_invariants(self) -> None:
-        """Block accounting must hold after every scheduler transition:
-        free list + owned blocks partition {1..num_blocks-1}, no block is
-        owned twice, tables name owned blocks in position order, and no
-        slot's length exceeds its owned span."""
-        owned_all = [b for blocks in self._owned for b in blocks]
-        assert len(set(owned_all)) == len(owned_all), "block owned twice"
-        both = sorted(owned_all + list(self._free))
-        assert both == list(range(1, self.num_blocks)), \
-            "free+owned must partition {1..num_blocks-1}"
+        """Refcount conservation must hold after every scheduler transition:
+
+        * every block's refcount equals the number of slot-table references
+          to it (shared blocks may appear in several tables);
+        * each of {1..num_blocks-1} is in exactly one state: referenced
+          (refcount > 0, in no free pool), cached-free (refcount 0, indexed,
+          content retained), or free (refcount 0, unindexed);
+        * no shared or cached block is ever on the free list;
+        * the index and per-block reverse maps agree;
+        * tables name owned blocks in position order; lengths stay within
+          the owned span; sealed+pending accounting matches lengths.
+        """
+        refs = np.zeros((self.num_blocks,), np.int64)
+        for blocks in self._owned:
+            for b in blocks:
+                refs[b] += 1
+        assert (refs == self._refcount).all(), \
+            "refcount conservation broken (sum of table refs != refcount)"
+        free_list = list(self._free)
+        free_set = set(free_list)
+        assert len(free_set) == len(free_list), "free list duplicates"
+        cached = set(self._cached)
+        assert not (free_set & cached), "block both free and cached-free"
+        for b in range(1, self.num_blocks):
+            states = (int(refs[b] > 0) + int(b in cached)
+                      + int(b in free_set))
+            assert states == 1, \
+                f"block {b} in {states} states (refs={refs[b]})"
+        for b in free_list:
+            assert b not in self._block_hash, \
+                f"indexed block {b} on the plain free list"
+        for b in cached:
+            assert b in self._block_hash, f"cached-free block {b} unindexed"
+        for digest, b in self._index.items():
+            assert self._block_hash.get(b) == digest, \
+                f"index/digest mismatch for block {b}"
+            assert b in self._block_tokens, f"indexed block {b} lost tokens"
         for slot, blocks in enumerate(self._owned):
+            if blocks:
+                assert self._occupied[slot], \
+                    f"unoccupied slot {slot} owns blocks"
             assert self.lengths[slot] <= len(blocks) * self.block_size
             assert list(self.block_tables[slot, :len(blocks)]) == blocks
             assert (self.block_tables[slot, len(blocks):] == 0).all()
+            assert self._nseal[slot] <= len(blocks)
+            if self._chain[slot] is not None:
+                assert (self._nseal[slot] * self.block_size
+                        + len(self._pending[slot]) == self.lengths[slot]), \
+                    f"slot {slot} sealing accounting broken"
 
     # ---- device views -----------------------------------------------------
     def device_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return (jnp.asarray(self.block_tables), jnp.asarray(self.lengths))
 
+    @property
+    def idle(self) -> bool:
+        """No slot occupied — safe to hand the pool to a new stream."""
+        return not any(self._occupied)
+
 
 def reset_slot(cache, slot: int):
     """Zero one slot's dense recurrent state (SSM rows) in a paged decode
     cache pytree.  K/V pool blocks need no reset — the per-row length mask
-    excludes never-written positions."""
+    excludes never-written positions, and prefix-cached blocks must keep
+    their content across owners."""
     def _zero(leaf_key, leaf):
         if leaf_key in ("k_pool", "v_pool"):
             return leaf

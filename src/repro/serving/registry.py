@@ -49,6 +49,7 @@ class AdapterRegistry:
                                 l.dtype), template)
         self._lru: "OrderedDict[Any, int]" = OrderedDict()  # client -> slot
         self._free: List[int] = list(range(capacity))
+        self._versions: Dict[Any, int] = {}  # bumped on every register()
 
     # ---- bookkeeping ------------------------------------------------------
     def __contains__(self, client_id) -> bool:
@@ -81,6 +82,7 @@ class AdapterRegistry:
             self._bank, adapters)
         self._lru[client_id] = slot
         self._lru.move_to_end(client_id)
+        self._versions[client_id] = self._versions.get(client_id, 0) + 1
         return slot
 
     def register_dual(self, client_id, personalized: Params, global_: Params,
@@ -103,6 +105,14 @@ class AdapterRegistry:
                            f"(resident: {self.resident})")
         self._lru.move_to_end(client_id)
         return self._lru[client_id]
+
+    def version(self, client_id) -> int:
+        """Monotone per-client weight version, bumped on every
+        :meth:`register`.  The serving engine folds it into the
+        prefix-cache hash scope so cached K/V computed under old adapter
+        weights can never be served after a re-registration (0 for clients
+        that were never registered)."""
+        return self._versions.get(client_id, 0)
 
     def bank(self) -> Params:
         """The stacked adapter tree (leaves (n_periods, C, d_in, r))."""

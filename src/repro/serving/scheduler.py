@@ -3,8 +3,10 @@
 Sits between a request queue and the paged prefill/decode steps.  Each
 serving slot tracks one in-flight request's lifecycle:
 
-    queued -> admitted (slot claimed, zero blocks, SSM state reset)
-           -> prefilling (whole prompt CHUNKS fed per prefill dispatch)
+    queued -> admitted (slot claimed, zero private blocks, SSM state reset;
+              with prefix caching, the prompt's longest cached prefix is
+              mapped in refcounted and skipped — ``fed`` starts past it)
+           -> prefilling (remaining prompt CHUNKS fed per prefill dispatch)
            -> decoding  (sampled tokens emitted and fed back, chunked)
            -> finished  (budget exhausted or EOS) -> slot + blocks freed
         or -> preempted (blocks released; requeued at the queue head with
@@ -48,7 +50,8 @@ class _SlotState:
     #                               emitted before a preemption (replayed)
     budget: int                   # tokens still to emit this incarnation
     next_token: int               # token the next decode step feeds
-    fed: int = 0                  # tokens already fed (prompt + emitted)
+    fed: int = 0                  # tokens already fed (prompt + emitted);
+    #                               starts PAST a matched cached prefix
     emitted: List[int] = dataclasses.field(default_factory=list)
     prior: List[int] = dataclasses.field(default_factory=list)
     #                               tokens emitted before preemption(s)
@@ -64,13 +67,21 @@ class Scheduler:
             deque()
         self._slots: List[Optional[_SlotState]] = [None] * kv.num_slots
         self.results: Dict[int, np.ndarray] = {}
+        self._scopes: Dict[int, Any] = {}   # rid -> prefix-cache hash scope
         self.steps = 0                      # decode steps driven
         self.prefill_dispatches = 0         # prefill chunks dispatched
         self.decode_dispatches = 0          # decode chunks dispatched
         self.preemptions = 0
+        self.prompt_tokens = 0              # prompt tokens admitted (incl.
+        #                                     preemption replays)
+        self.prefix_hit_tokens = 0          # of those, served from cache
 
     # ---- intake -----------------------------------------------------------
-    def submit(self, rid: int, client_id: Any, prompt, budget: int) -> None:
+    def submit(self, rid: int, client_id: Any, prompt, budget: int,
+               scope: Any = None) -> None:
+        """``scope`` isolates the request's prefix-cache hash chain (the
+        engine passes ``(client_id, adapter version)`` — cached K/V depends
+        on the adapter); ``None`` falls back to ``client_id``."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError(f"request {rid}: empty prompt")
@@ -82,6 +93,7 @@ class Scheduler:
                 f"request {rid}: span {span} exceeds cache capacity "
                 f"({self.kv.max_blocks_per_slot} blocks of "
                 f"{self.kv.block_size})")
+        self._scopes[rid] = client_id if scope is None else scope
         self._queue.append((rid, client_id, prompt, budget, []))
 
     # ---- state ------------------------------------------------------------
@@ -104,7 +116,12 @@ class Scheduler:
         ``(slot, client_id)`` pairs (the engine resets SSM state and
         resolves the adapter slot for each).  Admission claims a slot with
         zero blocks — the head waits (FCFS) while the free list can't cover
-        its prompt, and growth past the prompt relies on preemption."""
+        its prompt, and growth past the prompt relies on preemption.
+
+        With prefix caching, admission matches the prompt's longest cached
+        prefix under the request's scope and starts ``fed`` past the hit —
+        those positions are never re-prefilled (a preempted request
+        re-admitted with prompt+emitted re-matches its own sealed blocks)."""
         admitted = []
         for slot in range(self.kv.num_slots):
             if self._slots[slot] is not None or not self._queue:
@@ -113,10 +130,13 @@ class Scheduler:
             if not self.kv.can_admit(int(prompt.size)):
                 break                        # FCFS: wait for blocks to free
             self._queue.popleft()
-            self.kv.admit(slot)
+            n_hit = self.kv.admit(slot, scope=self._scopes[rid],
+                                  tokens=prompt)
             self._slots[slot] = _SlotState(rid, cid, prompt, budget,
                                            next_token=int(prompt[0]),
-                                           prior=prior)
+                                           fed=n_hit, prior=prior)
+            self.prompt_tokens += int(prompt.size)
+            self.prefix_hit_tokens += n_hit
             admitted.append((slot, cid))
         return admitted
 
@@ -128,7 +148,9 @@ class Scheduler:
         preempted rid."""
         st = self._slots[slot]
         assert st is not None, f"slot {slot} not active"
-        new_prompt = np.concatenate(
+        # zero-emitted edge: requeue the original array untouched (an empty
+        # concatenand must not copy or silently re-derive the dtype)
+        new_prompt = st.prompt if not st.emitted else np.concatenate(
             [st.prompt, np.asarray(st.emitted, np.int32)])
         self._queue.appendleft((st.rid, st.client_id, new_prompt,
                                 st.budget - len(st.emitted),
@@ -240,8 +262,10 @@ class Scheduler:
                 continue
             n = int(n_new[slot])
             decoding = st.fed >= st.prompt.size   # feedback row (n == 1)
+            written = ([st.next_token] if decoding
+                       else [int(t) for t in st.prompt[st.fed:st.fed + n]])
             st.fed += n
-            self.kv.advance(slot, n)
+            self.kv.advance(slot, n, tokens=written)
             if decoding or st.fed == st.prompt.size:
                 tok = int(sampled[slot])
                 st.emitted.append(tok)
@@ -291,6 +315,9 @@ class Scheduler:
                 continue
             assert st.fed >= st.prompt.size, \
                 f"slot {slot} entered a decode chunk mid-prefill"
+            # step 0 fed (and wrote) next_token; step t>0 fed sampled[t-1]
+            written = [st.next_token] + [int(sampled[t, slot])
+                                         for t in range(n - 1)]
             new_toks: List[int] = []
             done = False
             for t in range(n):
@@ -302,7 +329,7 @@ class Scheduler:
                     done = True
                     break
             st.fed += n
-            self.kv.advance(slot, n)
+            self.kv.advance(slot, n, tokens=written)
             if done:
                 rid = st.rid
                 self._finish(slot)

@@ -1,0 +1,499 @@
+"""Cross-call prefix caching: content-addressed refcounted blocks.
+
+Covers the block pool's hash-chain sealing and longest-prefix matching,
+the refcount lifecycle (shared blocks across slots, cached-free LRU with
+eviction under pressure), the refcount-aware invariant checker and the
+negative paths it must catch — and, at the engine level, the acceptance
+bar: shared-prefix workloads through ``MultiTenantEngine.generate`` /
+``generate_stream`` with ``prefix_cache=True`` are bitwise-equal to the
+cold path, hits show up in ``last_stats``, and the flagship
+preemption-requeue path re-matches its own sealed blocks with near-zero
+re-prefill.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import PagedKVCache, blocks_needed
+from repro.serving.scheduler import Scheduler
+
+
+def _drive(kv, sched, prefill_chunk=16, decode_cap=8):
+    """The engine loop with a trivial host model (constant samples)."""
+    while sched.has_work:
+        sched.admit()
+        plan = sched.prepare_chunk(prefill_chunk, decode_cap)
+        kv.check_invariants()
+        assert plan is not None
+        if plan[0] == "prefill":
+            arrs = sched.prefill_arrays(prefill_chunk)
+            sched.observe_prefill(
+                arrs["n_new"], np.full((kv.num_slots,), 42, np.int32))
+        else:
+            sched.observe_chunk(
+                np.full((plan[1], kv.num_slots), 7, np.int32))
+        kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Block-pool mechanics: sealing, matching, refcounts, eviction
+# ---------------------------------------------------------------------------
+
+def test_seal_and_rematch_same_scope():
+    prompt = np.arange(10, dtype=np.int32)
+    kv = PagedKVCache(2, 4, 16, 8, prefix_cache=True)
+    s = Scheduler(kv)
+    s.submit(0, "a", prompt, 3, scope=("a", 1))
+    _drive(kv, s)
+    assert kv.idle and kv.cached_blocks > 0
+    s2 = Scheduler(kv)
+    s2.submit(1, "a", prompt, 3, scope=("a", 1))
+    s2.admit()
+    # 10-token prompt, block 4: two FULL blocks (8 tokens) re-match; the
+    # match never covers the whole prompt (>= 1 token must prefill)
+    assert s2._slots[0].fed == 8
+    assert s2.prefix_hit_tokens == 8
+    assert int(kv.lengths[0]) == 8
+    kv.check_invariants()
+    _drive(kv, s2)
+    assert list(s2.results[1]) == list(s.results[0])
+
+
+def test_scope_isolates_clients_and_versions():
+    prompt = np.arange(10, dtype=np.int32)
+    kv = PagedKVCache(2, 4, 32, 8, prefix_cache=True)
+    s = Scheduler(kv)
+    s.submit(0, "a", prompt, 3, scope=("a", 1))
+    _drive(kv, s)
+    for scope in (("b", 1), ("a", 2)):     # other client / bumped version
+        s2 = Scheduler(kv)
+        s2.submit(1, "a", prompt, 3, scope=scope)
+        s2.admit()
+        assert s2._slots[0].fed == 0, f"leak across scope {scope}"
+        _drive(kv, s2)
+    kv.check_invariants()
+
+
+def test_match_capped_below_full_prompt():
+    """A prompt that is an exact multiple of the block size must still
+    leave its last block unmatched — the first sampled logit needs at
+    least one live prefill token."""
+    prompt = np.arange(8, dtype=np.int32)          # exactly 2 blocks of 4
+    kv = PagedKVCache(1, 4, 16, 8, prefix_cache=True)
+    s = Scheduler(kv)
+    s.submit(0, "a", prompt, 2, scope="s")
+    _drive(kv, s)
+    s2 = Scheduler(kv)
+    s2.submit(1, "a", prompt, 2, scope="s")
+    s2.admit()
+    assert s2._slots[0].fed == 4                   # only the first block
+    _drive(kv, s2)
+    assert list(s2.results[1]) == list(s.results[0])
+
+
+def test_shared_blocks_are_refcounted_across_live_slots():
+    prompt = np.arange(10, dtype=np.int32)
+    kv = PagedKVCache(2, 4, 32, 8, prefix_cache=True)
+    s = Scheduler(kv)
+    s.submit(0, "a", prompt, 3, scope="s")
+    _drive(kv, s)
+    s2 = Scheduler(kv)
+    s2.submit(0, "a", prompt, 6, scope="s")
+    s2.submit(1, "a", prompt, 6, scope="s")
+    s2.admit()
+    # both slots matched the SAME two sealed blocks
+    assert s2._slots[0].fed == 8 and s2._slots[1].fed == 8
+    np.testing.assert_array_equal(kv.block_tables[0, :2],
+                                  kv.block_tables[1, :2])
+    shared = [int(b) for b in kv.block_tables[0, :2]]
+    assert all(kv._refcount[b] == 2 for b in shared)
+    kv.check_invariants()
+    _drive(kv, s2)
+    assert all(kv._refcount[b] == 0 for b in shared)   # released, retained
+    assert kv.cached_blocks > 0
+    kv.check_invariants()
+
+
+def test_lru_eviction_under_pool_pressure():
+    """A pool too small for two scopes' chains evicts the least-recently
+    released cached blocks (index entries die with them) instead of
+    refusing to allocate."""
+    prompt = np.arange(10, dtype=np.int32)
+    kv = PagedKVCache(1, 4, 4, 3, prefix_cache=True)   # 3 usable blocks
+    a = Scheduler(kv)
+    a.submit(0, "x", prompt, 2, scope="x")
+    _drive(kv, a)
+    assert kv.cached_blocks == 2                   # 2 sealed, 1 was partial
+    b = Scheduler(kv)
+    b.submit(0, "y", prompt, 2, scope="y")
+    _drive(kv, b)
+    assert kv.evicted_cached >= 2                  # x's chain was evicted
+    c = Scheduler(kv)
+    c.submit(0, "x", prompt, 2, scope="x")
+    c.admit()
+    assert c._slots[0].fed == 0                    # x's prefix is gone
+    _drive(kv, c)
+    kv.check_invariants()
+
+
+def test_free_list_reuse_stays_fifo_without_prefix_cache():
+    """prefix_cache=False keeps the PR-3 behaviour exactly: nothing is
+    indexed, released blocks go straight to the FIFO free list."""
+    prompt = np.arange(10, dtype=np.int32)
+    kv = PagedKVCache(1, 4, 8, 4)
+    s = Scheduler(kv)
+    s.submit(0, "a", prompt, 3, scope="s")
+    _drive(kv, s)
+    assert kv.cached_blocks == 0
+    assert kv.free_blocks == kv.num_blocks - 1
+    s2 = Scheduler(kv)
+    s2.submit(1, "a", prompt, 3, scope="s")
+    s2.admit()
+    assert s2._slots[0].fed == 0
+    _drive(kv, s2)
+
+
+def test_unhashable_writes_never_enter_the_index():
+    """advance() without tokens permanently disables sealing for the slot
+    incarnation — content the pool cannot name must never be matched."""
+    kv = PagedKVCache(1, 4, 16, 8, prefix_cache=True)
+    kv.admit(0, scope="s", tokens=np.arange(10, dtype=np.int32))
+    assert kv.ensure(0, 10)
+    kv.advance(0, 4, tokens=list(range(4)))        # sealed: 1 block
+    kv.advance(0, 4)                               # tokens unknown: disable
+    kv.advance(0, 2, tokens=[8, 9])                # ignored, chain is dead
+    assert kv.cached_blocks == 0 and len(kv._index) == 1
+    kv.check_invariants()
+    kv.release(0)
+    # only the one sealed block is retained; the rest went to the free list
+    assert kv.cached_blocks == 1
+    assert kv.free_blocks == kv.num_blocks - 2
+    kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Negative paths: the pool must refuse, and the checker must catch
+# ---------------------------------------------------------------------------
+
+def test_double_release_raises():
+    kv = PagedKVCache(2, 4, 8, 4)
+    kv.admit(0)
+    kv.release(0)
+    with pytest.raises(ValueError, match="double release"):
+        kv.release(0)
+
+
+def test_admit_occupied_slot_raises():
+    kv = PagedKVCache(2, 4, 8, 4)
+    kv.admit(0)
+    with pytest.raises(ValueError, match="occupied"):
+        kv.admit(0)
+    kv.admit(1)                                    # other slots unaffected
+
+
+def test_advance_past_ensured_blocks_raises():
+    kv = PagedKVCache(1, 4, 8, 4)
+    kv.admit(0)
+    assert kv.ensure(0, 6)                         # 2 blocks = 8 positions
+    kv.advance(0, 8)
+    with pytest.raises(ValueError, match="advanced past"):
+        kv.advance(0, 1)
+
+
+def test_advance_unoccupied_slot_raises():
+    kv = PagedKVCache(1, 4, 8, 4)
+    with pytest.raises(ValueError, match="not occupied"):
+        kv.advance(0, 1)
+
+
+def test_invariants_catch_corrupted_free_list():
+    kv = PagedKVCache(2, 4, 8, 4)
+    kv.admit(0)
+    assert kv.ensure(0, 6)
+    owned = kv._owned[0][0]
+    kv._free.append(owned)                         # hand-corrupt: owned+free
+    with pytest.raises(AssertionError):
+        kv.check_invariants()
+
+
+def test_invariants_catch_refcount_drift():
+    kv = PagedKVCache(2, 4, 8, 4, prefix_cache=True)
+    kv.admit(0, scope="s")
+    assert kv.ensure(0, 6)
+    kv._refcount[kv._owned[0][0]] += 1             # phantom reference
+    with pytest.raises(AssertionError, match="refcount conservation"):
+        kv.check_invariants()
+
+
+def test_invariants_catch_cached_block_on_free_list():
+    prompt = np.arange(10, dtype=np.int32)
+    kv = PagedKVCache(1, 4, 8, 4, prefix_cache=True)
+    s = Scheduler(kv)
+    s.submit(0, "a", prompt, 2, scope="s")
+    _drive(kv, s)
+    assert kv.cached_blocks > 0
+    kv._free.append(next(iter(kv._cached)))        # shared/cached leaked
+    with pytest.raises(AssertionError):
+        kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler regressions
+# ---------------------------------------------------------------------------
+
+def test_preempt_with_zero_emitted_requeues_original_prompt():
+    """Regression (satellite): preempting a slot before its first emission
+    must requeue the ORIGINAL prompt array — right dtype, right tokens, no
+    empty-concatenation artifacts."""
+    kv = PagedKVCache(2, 4, 16, 4)
+    sched = Scheduler(kv)
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+    sched.submit(0, "a", prompt, 4)
+    sched.admit()
+    assert sched.prepare_chunk(2, 8) == ("prefill", None)   # mid-prefill
+    arrs = sched.prefill_arrays(2)
+    sched.observe_prefill(arrs["n_new"], np.asarray([99, 0]))
+    assert sched._slots[0].emitted == []
+    slot_prompt = sched._slots[0].prompt
+    sched.preempt(0)
+    rid, cid, requeued, budget, prior = sched._queue[0]
+    assert rid == 0 and budget == 4 and prior == []
+    assert requeued.dtype == np.int32
+    np.testing.assert_array_equal(requeued, prompt)
+    assert requeued is slot_prompt                 # untouched, not copied
+    kv.check_invariants()
+    # resumes cleanly and still completes
+    _drive(kv, sched)
+    assert len(sched.results[0]) == 4
+
+
+def test_preempted_request_rematches_its_own_blocks():
+    """The flagship path: a preempted request re-admitted with
+    prompt+emitted re-matches the blocks it sealed before preemption —
+    near-zero re-prefill instead of a full replay."""
+    prompt = np.arange(12, dtype=np.int32)
+    kv = PagedKVCache(1, 4, 16, 8, prefix_cache=True)
+    sched = Scheduler(kv)
+    sched.submit(0, "a", prompt, 6, scope="s")
+    sched.admit()
+    while sched.prefill_pending:
+        sched.prepare_chunk(4, 8)
+        arrs = sched.prefill_arrays(4)
+        sched.observe_prefill(arrs["n_new"],
+                              np.full((1,), 21, np.int32))
+    sched.prepare_chunk(4, 2)
+    sched.observe_chunk(np.asarray([[22], [23]], np.int32))
+    kv.check_invariants()
+    sched.preempt(0)                               # 14 tokens written
+    kv.check_invariants()
+    assert kv.cached_blocks == 3                   # 12 of them sealed
+    sched.admit()                                  # replays prompt+emitted
+    st = sched._slots[0]
+    assert st.prompt.size == 15                    # 12 prompt + 3 emitted
+    assert st.fed == 12                            # sealed blocks re-matched
+    assert sched.prefix_hit_tokens == 12
+    _drive(kv, sched)
+    assert len(sched.results[0]) == 6              # budget met, nothing lost
+    kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Real engine: warm-vs-cold bitwise parity on shared-prefix workloads
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine():
+    import jax
+    from conftest import tiny_dense
+    from repro.core.lora import init_adapters
+    from repro.models.api import get_model
+    from repro.serving.engine import MultiTenantEngine
+    from repro.serving.registry import AdapterRegistry
+
+    cfg = tiny_dense()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reg = AdapterRegistry(cfg, capacity=4)
+    for i in range(2):
+        ad = init_adapters(jax.random.PRNGKey(i + 1), cfg)
+        bump = jax.random.PRNGKey(i + 99)
+        reg.register(f"c{i}", jax.tree.map(
+            lambda l: l + 0.02 * jax.random.normal(bump, l.shape), ad))
+    return cfg, model, params, reg, MultiTenantEngine(model, cfg, params, reg)
+
+
+def _shared_prefix_requests(cfg):
+    """Four requests sharing a 12-token prefix (per-client system prompt)."""
+    from repro.serving.engine import Request
+    pre = (np.arange(12, dtype=np.int32) * 3 + 1) % cfg.vocab_size
+    mk = lambda tail: np.concatenate([pre, np.asarray(tail, np.int32)])
+    return [Request("c0", mk([5, 9]), max_new_tokens=4),
+            Request("c0", mk([2]), max_new_tokens=4),
+            Request("c1", mk([7, 7, 7]), max_new_tokens=4),
+            Request("c0", pre[:9], max_new_tokens=3)]
+
+
+def test_engine_warm_bitmatches_cold_and_hits_across_calls(engine):
+    """Acceptance: cached vs cold engine on a shared-prefix workload must
+    bit-match; the warm call reports a >0 hit rate and fewer prefill
+    dispatches than the cold call."""
+    from repro.serving.engine import ServeConfig
+    cfg, model, params, reg, mt = engine
+    reqs = _shared_prefix_requests(cfg)
+    sc_cold = ServeConfig(batch_size=2, max_new_tokens=4, block_size=4,
+                          num_blocks=24, prefill_chunk=4)
+    sc_warm = dataclasses.replace(sc_cold, prefix_cache=True)
+    mt.release_prefix_cache()                      # isolate from other tests
+    cold = mt.generate(reqs, sc_cold)
+    st_cold = dict(mt.last_stats)
+    assert st_cold["prefix_hit_tokens"] == 0
+    warm1 = mt.generate(reqs, sc_warm)             # intra-call sharing
+    st1 = dict(mt.last_stats)
+    warm2 = mt.generate(reqs, sc_warm)             # cross-call re-match
+    st2 = dict(mt.last_stats)
+    for a, b, c in zip(cold, warm1, warm2):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+    assert st1["prefix_hit_tokens"] > 0            # requests share a prefix
+    assert st2["prefix_hit_tokens"] > st1["prefix_hit_tokens"]
+    assert st2["prefix_hit_rate"] > 0.5            # whole prompts re-match
+    assert st2["prefill_dispatches"] < st_cold["prefill_dispatches"]
+
+
+def test_engine_warm_pool_survives_varying_batches(engine):
+    """Regression: with a pinned pool (``sc.num_blocks``), the warm cache
+    must survive calls whose request count and longest span differ — real
+    traffic never repeats a batch shape, and a batch-derived pool key would
+    silently drop the cache every call."""
+    from repro.serving.engine import Request, ServeConfig
+    cfg, model, params, reg, mt = engine
+    pre = (np.arange(12, dtype=np.int32) * 3 + 1) % cfg.vocab_size
+    mk = lambda tail: np.concatenate([pre, np.asarray(tail, np.int32)])
+    sc = ServeConfig(batch_size=2, max_new_tokens=4, block_size=4,
+                     num_blocks=24, prefill_chunk=4, prefix_cache=True)
+    mt.release_prefix_cache()
+    mt.generate([Request("c0", mk([5, 9]), max_new_tokens=4),
+                 Request("c0", mk([2]), max_new_tokens=4),
+                 Request("c1", mk([7]), max_new_tokens=4)], sc)
+    assert mt.last_stats["prefix_pool_reused"] is False
+    # fewer requests AND a longer span than call 1 — shape changes, pool
+    # geometry (and therefore the sealed prefix blocks) must not
+    out = mt.generate(
+        [Request("c0", mk([8, 8, 8, 8, 8, 8]), max_new_tokens=6)], sc)
+    st = mt.last_stats
+    assert st["prefix_pool_reused"] is True
+    assert st["prefix_hit_tokens"] >= 12           # the shared prefix hit
+    from conftest import tiny_dense  # noqa: F401  (fixture already built)
+    ref = _shared_prefix_oracle(engine, "c0", mk([8, 8, 8, 8, 8, 8]), 6)
+    np.testing.assert_array_equal(out[0], ref)
+    mt.release_prefix_cache()
+
+
+def _shared_prefix_oracle(engine, cid, prompt, budget):
+    import jax.numpy as jnp
+    from repro.core.lora import init_adapters  # noqa: F401
+    from repro.serving.engine import Engine, ServeConfig
+    cfg, model, params, reg, mt = engine
+    import jax
+    ad = init_adapters(jax.random.PRNGKey(int(cid[1:]) + 1), cfg)
+    bump = jax.random.PRNGKey(int(cid[1:]) + 99)
+    ad = jax.tree.map(lambda l: l + 0.02 * jax.random.normal(bump, l.shape),
+                      ad)
+    sc = ServeConfig(batch_size=1, max_new_tokens=budget, cache_len=64)
+    return np.asarray(Engine(model, cfg, params, ad).generate(
+        jnp.asarray(np.asarray(prompt, np.int32))[None], sc))[0]
+
+
+def test_engine_stream_warm_bitmatches_cold(engine):
+    from repro.serving.engine import ServeConfig
+    cfg, model, params, reg, mt = engine
+    reqs = _shared_prefix_requests(cfg)
+    sc_cold = ServeConfig(batch_size=2, max_new_tokens=4, block_size=4,
+                          num_blocks=24, prefill_chunk=4)
+    sc_warm = dataclasses.replace(sc_cold, prefix_cache=True)
+    mt.release_prefix_cache()                      # isolate from other tests
+
+    def collect(sc):
+        got = {i: [] for i in range(len(reqs))}
+        for rid, toks, _ in mt.generate_stream(reqs, sc):
+            got[rid].extend(toks)
+        return got
+
+    cold = collect(sc_cold)
+    _ = collect(sc_warm)
+    warm = collect(sc_warm)
+    assert mt.last_stats["prefix_hit_rate"] > 0.5
+    for rid in cold:
+        np.testing.assert_array_equal(np.asarray(cold[rid], np.int32),
+                                      np.asarray(warm[rid], np.int32))
+
+
+def test_engine_preempted_request_resumes_with_near_zero_reprefill(engine):
+    """Flagship: under forced pool starvation WITH prefix caching, a
+    preempted request re-admitted with prompt+emitted re-matches its own
+    sealed blocks — outputs stay bitwise-equal to the uncached starved run
+    while replayed prompt tokens are served from cache."""
+    from repro.serving.engine import Request, ServeConfig
+    cfg, model, params, reg, mt = engine
+    pre = (np.arange(12, dtype=np.int32) * 3 + 1) % cfg.vocab_size
+    reqs = [Request("c0", pre, max_new_tokens=6),
+            Request("c1", pre[:10], max_new_tokens=6),
+            Request("c0", pre[:7], max_new_tokens=5),
+            Request("c1", pre[:11], max_new_tokens=4),
+            Request("c0", pre[:9], max_new_tokens=6)]
+    # span anchor 18 -> 5 blocks of 4; 3 slots want 15, pool holds 7
+    sc_cold = ServeConfig(batch_size=3, max_new_tokens=6, block_size=4,
+                          num_blocks=8, prefill_chunk=4)
+    sc_warm = dataclasses.replace(sc_cold, prefix_cache=True)
+    mt.release_prefix_cache()
+    cold = mt.generate(reqs, sc_cold)
+    st_cold = dict(mt.last_stats)
+    assert st_cold["preemptions"] > 0, "workload must force preemption"
+    warm = mt.generate(reqs, sc_warm)
+    st_warm = dict(mt.last_stats)
+    for a, b in zip(cold, warm):
+        np.testing.assert_array_equal(a, b)
+    assert st_warm["preemptions"] > 0
+    assert st_warm["prefix_hit_tokens"] > 0        # replays re-matched
+    # preemption replays inflate prompt_tokens; cached hits must absorb a
+    # real share of that re-prefill work
+    assert st_warm["prefill_dispatches"] <= st_cold["prefill_dispatches"]
+
+
+def test_engine_rejects_prefix_cache_on_recurrent_models():
+    import jax
+    from conftest import tiny_ssm
+    from repro.core.lora import init_adapters
+    from repro.models.api import get_model
+    from repro.serving.engine import (MultiTenantEngine, Request,
+                                      ServeConfig)
+    from repro.serving.registry import AdapterRegistry
+
+    cfg = tiny_ssm()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reg = AdapterRegistry(cfg, capacity=2)
+    reg.register("c0", init_adapters(jax.random.PRNGKey(1), cfg))
+    mt = MultiTenantEngine(model, cfg, params, reg)
+    sc = ServeConfig(batch_size=1, max_new_tokens=2, block_size=4,
+                     prefix_cache=True)
+    with pytest.raises(ValueError, match="attention-only"):
+        mt.generate([Request("c0", np.arange(5, dtype=np.int32))], sc)
+
+
+def test_registry_version_bumps_invalidate_scope(engine):
+    """Re-registering a client's adapter bumps its version; the engine's
+    hash scope folds the version in, so stale K/V can never be matched."""
+    import jax
+    from repro.core.lora import init_adapters
+    from repro.serving.registry import AdapterRegistry
+    cfg = engine[0]
+    reg = AdapterRegistry(cfg, capacity=2)
+    assert reg.version("c0") == 0                  # never registered
+    reg.register("c0", init_adapters(jax.random.PRNGKey(50), cfg))
+    assert reg.version("c0") == 1
+    reg.register("c0", init_adapters(jax.random.PRNGKey(51), cfg))
+    assert reg.version("c0") == 2                  # refresh invalidates
+    reg.evict("c0")
+    assert reg.version("c0") == 2                  # eviction keeps history

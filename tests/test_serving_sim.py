@@ -80,6 +80,7 @@ class Workload:
     prefill_chunk: int
     decode_cap: int
     eos_id: Optional[int]
+    prefix_cache: bool = False                    # content-addressed blocks
 
     @property
     def max_span(self) -> int:
@@ -113,12 +114,16 @@ def gen_workload(rng: np.random.Generator) -> Workload:
 
 def run_sim(w: Workload) -> Scheduler:
     """Drive Scheduler+PagedKVCache exactly as ``generate_stream`` does and
-    verify oracle parity, streaming consistency and block invariants."""
+    verify oracle parity, streaming consistency and block invariants.
+    With ``w.prefix_cache`` the pool is content-addressed: admissions may
+    skip past a matched prefix, whose cached token ids are verified against
+    the prompt before being trusted as fed context."""
     mbps = blocks_needed(w.max_span, w.block_size)
-    kv = PagedKVCache(w.num_slots, w.block_size, w.num_blocks, mbps)
+    kv = PagedKVCache(w.num_slots, w.block_size, w.num_blocks, mbps,
+                      prefix_cache=w.prefix_cache)
     sched = Scheduler(kv)
     for rid, (cid, prompt, budget) in enumerate(w.requests):
-        sched.submit(rid, cid, prompt, budget)
+        sched.submit(rid, cid, prompt, budget, scope=cid)
 
     ctx = {s: [] for s in range(w.num_slots)}     # per-slot fed-token mirror
     streamed = {rid: [] for rid in range(len(w.requests))}
@@ -131,7 +136,15 @@ def run_sim(w: Workload) -> Scheduler:
         assert iters <= budget_iters, \
             f"progress bound exceeded ({iters} chunks): scheduler livelock"
         for slot, _cid in sched.admit():
-            ctx[slot] = []
+            st = sched._slots[slot]
+            # a prefix hit seeds the context with the matched prompt span;
+            # the cached blocks must name EXACTLY those tokens
+            ctx[slot] = [int(t) for t in st.prompt[:st.fed]]
+            if st.fed:
+                cached = [t for b in kv._owned[slot][:kv._nseal[slot]]
+                          for t in kv._block_tokens[b]]
+                assert cached == ctx[slot], \
+                    f"slot {slot} matched wrong tokens: {cached} != {ctx[slot]}"
         plan = sched.prepare_chunk(w.prefill_chunk, w.decode_cap)
         kv.check_invariants()                      # after growth/preemption
         assert plan is not None, "stalled with queued work"
@@ -175,7 +188,10 @@ def run_sim(w: Workload) -> Scheduler:
         assert streamed[rid] == want
         assert finish_events[rid] == 1
     assert all(s is None for s in sched._slots)
-    assert kv.free_blocks == kv.num_blocks - 1     # everything released
+    # everything released: cached-free blocks stay retained (allocatable)
+    assert kv.free_blocks + kv.cached_blocks == kv.num_blocks - 1
+    if not w.prefix_cache:
+        assert kv.cached_blocks == 0
     return sched
 
 
@@ -219,6 +235,74 @@ def test_preemption_conserves_output_tokens():
                                           s_starved.results[rid])
         checked += s_starved.preemptions
     assert checked > 0, "starved pools never triggered preemption"
+
+
+def gen_shared_prefix_workload(rng: np.random.Generator) -> Workload:
+    """The prefix-cache profile: per-client system prompts — every request
+    is ``client_prefix[:k] + fresh suffix`` — over a content-addressed pool
+    so admissions re-match blocks sealed by earlier requests (and by their
+    own preempted incarnations)."""
+    prefixes = {f"c{i}": rng.integers(0, VOCAB, 16).astype(np.int32)
+                for i in range(2)}
+    n_req = int(rng.integers(2, 9))
+    requests = []
+    for _ in range(n_req):
+        cid = f"c{int(rng.integers(0, 2))}"
+        k = int(rng.integers(4, 17))
+        suffix = rng.integers(0, VOCAB, int(rng.integers(1, 6)))
+        prompt = np.concatenate([prefixes[cid][:k],
+                                 suffix]).astype(np.int32)
+        requests.append((cid, prompt, int(rng.integers(1, 13))))
+    block_size = int(rng.choice([2, 3, 4]))
+    num_slots = int(rng.integers(1, 5))
+    mbps = blocks_needed(max(p.size + b for _, p, b in requests), block_size)
+    extra = int(rng.integers(0, mbps * num_slots + 1))
+    eos_id = int(rng.integers(0, VOCAB)) if rng.random() < 0.3 else None
+    return Workload(requests, num_slots, block_size, 1 + mbps + extra,
+                    prefill_chunk=int(rng.integers(1, 9)),
+                    decode_cap=int(rng.integers(1, 9)), eos_id=eos_id,
+                    prefix_cache=True)
+
+
+def test_shared_prefix_simulation_sweep():
+    """200 seeded shared-prefix workloads over the content-addressed pool:
+    oracle parity and refcount invariants hold chunk by chunk, and the
+    profile actually exercises hits, sharing and preemption re-matching."""
+    hit_tokens = 0
+    preemptions = 0
+    for seed in range(200):
+        rng = np.random.default_rng(5000 + seed)
+        w = gen_shared_prefix_workload(rng)
+        sched = run_sim(w)
+        hit_tokens += sched.prefix_hit_tokens
+        preemptions += sched.preemptions
+    assert hit_tokens > 500, f"only {hit_tokens} cached tokens served"
+    assert preemptions > 10, f"only {preemptions} preemptions exercised"
+
+
+def test_preempted_requests_rematch_under_starvation():
+    """Starved shared-prefix pools: preempted requests replay prompt+emitted
+    and must re-match their own sealed blocks (hits strictly above the
+    no-preemption admission hits), with results equal to a roomy pool."""
+    rematch_hits = 0
+    for seed in range(30):
+        rng = np.random.default_rng(9000 + seed)
+        w = gen_shared_prefix_workload(rng)
+        if len(w.requests) < 2:
+            continue
+        mbps = blocks_needed(w.max_span, w.block_size)
+        roomy = dataclasses.replace(w, num_blocks=1 + mbps * w.num_slots)
+        starved = dataclasses.replace(w, num_blocks=1 + mbps)
+        s_roomy = run_sim(roomy)
+        s_starved = run_sim(starved)
+        for rid in range(len(w.requests)):
+            np.testing.assert_array_equal(s_roomy.results[rid],
+                                          s_starved.results[rid])
+        if s_starved.preemptions:
+            rematch_hits += max(0, s_starved.prefix_hit_tokens
+                                - s_roomy.prefix_hit_tokens)
+    assert rematch_hits > 0, \
+        "preemption replays never re-matched their sealed blocks"
 
 
 def test_progress_bound_under_forced_thrash():
@@ -267,7 +351,8 @@ if HAVE_HYPOTHESIS:
         eos = draw(st.one_of(st.none(), st.integers(0, VOCAB - 1)))
         return Workload(requests, num_slots, block_size, num_blocks,
                         prefill_chunk=draw(st.integers(1, 6)),
-                        decode_cap=draw(st.integers(1, 6)), eos_id=eos)
+                        decode_cap=draw(st.integers(1, 6)), eos_id=eos,
+                        prefix_cache=draw(st.booleans()))
 
     @given(workloads())
     def test_simulation_hypothesis(w):
@@ -366,6 +451,33 @@ def test_real_engine_starved_pool_preempts_and_matches(real_engine):
         ref = _single_tenant_ref(model, cfg, params, ads[r.client_id],
                                  r.prompt, r.max_new_tokens)
         np.testing.assert_array_equal(o, ref)
+
+
+def test_real_engine_shared_prefix_profile_reports_hit_rate(real_engine):
+    """The shared-prefix profile through the REAL jitted engine: warm runs
+    report a >0 prefix hit rate in last_stats and stay token-identical to
+    the single-tenant oracle."""
+    import dataclasses as dc
+    from repro.serving.engine import Request, ServeConfig
+    cfg, model, params, ads, mt = real_engine
+    pre = (np.arange(12, dtype=np.int32) * 3 + 1) % cfg.vocab_size
+    reqs = [Request("c0", pre, max_new_tokens=6),
+            Request("c0", np.concatenate([pre[:10],
+                                          np.asarray([3, 4], np.int32)]),
+                    max_new_tokens=5),
+            Request("c1", pre[:11], max_new_tokens=4)]
+    sc = ServeConfig(batch_size=2, max_new_tokens=6, block_size=4,
+                     num_blocks=24, prefill_chunk=4, prefix_cache=True)
+    mt.release_prefix_cache()
+    mt.generate(reqs, sc)                          # seeds the cache
+    outs = mt.generate(reqs, sc)                   # warm pass
+    assert mt.last_stats["prefix_hit_rate"] > 0
+    assert mt.last_stats["prefix_hit_tokens"] > 0
+    for r, o in zip(reqs, outs):
+        ref = _single_tenant_ref(model, cfg, params, ads[r.client_id],
+                                 r.prompt, r.max_new_tokens)
+        np.testing.assert_array_equal(o, ref)
+    mt.release_prefix_cache()                      # don't leak warm state
 
 
 def test_real_engine_stream_yields_incrementally(real_engine):
