@@ -23,6 +23,10 @@ warmup call; CPU interpret-mode numbers — the wins are architectural):
     (``ServeConfig.prefix_cache``) — bitwise-equal outputs, prompt tokens
     served from cached blocks instead of re-prefilled.  Appends a
     ``prefix_cache`` section (hit rates, prefill-compute reduction).
+  * sla (also default): a contended priority-mix stream under
+    ``sched_policy="sla"`` vs ``"fcfs"`` — identical greedy outputs, the
+    interactive class finishing earlier under priority admission.  Appends
+    an ``sla`` section (latency win, per-class wait stats).
   * smoke gate (also default): a fixed small continuous workload's tok/s,
     recorded as the ``smoke`` section — CI's
     ``scripts/check_bench_regression.py`` fails the PR when it regresses
@@ -382,6 +386,82 @@ def prefix_cache_section(json_path: str, smoke: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# SLA scheduling: interactive-class latency under priority admission vs FCFS
+# ---------------------------------------------------------------------------
+
+def sla_section(json_path: str, smoke: bool = False):
+    """A contended stream (batch requests queued ahead of late-arriving
+    interactive ones, fewer slots than requests) served under
+    ``sched_policy="sla"`` vs ``"fcfs"``.  Outputs must be identical
+    (greedy decoding is schedule-invariant — the parity the serving tests
+    pin down); the win is interactive-class completion latency, measured
+    in stream events (logical time, immune to CPU jitter) and wall time."""
+    model, params, ads, mt = _setup(2)
+
+    def _p(n, s):
+        return (np.arange(n, dtype=np.int32) * 5 + s) % CFG.vocab_size
+
+    n_batch = 4 if smoke else 8
+    reqs = [Request(f"c{i % 2}", _p(10, i), max_new_tokens=10,
+                    priority="batch") for i in range(n_batch)]
+    # interactive requests arrive LAST in submission order — under FCFS
+    # they wait out the whole batch backlog
+    reqs += [Request(f"c{i % 2}", _p(6, 50 + i), max_new_tokens=4,
+                     priority="interactive") for i in range(3)]
+    inter = [rid for rid, r in enumerate(reqs) if r.priority == "interactive"]
+    sc = ServeConfig(batch_size=2, max_new_tokens=10, block_size=8,
+                     prefill_chunk=8)
+
+    def run(policy):
+        finish, outs, t = {}, {i: [] for i in range(len(reqs))}, 0
+        stream = mt.generate_stream(
+            reqs, dataclasses.replace(sc, sched_policy=policy))
+        for rid, toks, fin in stream:
+            t += 1
+            outs[rid].extend(toks)
+            if fin:
+                finish[rid] = t
+        return finish, outs, dict(mt.last_stats)
+
+    fin_sla, out_sla, st_sla = run("sla")
+    fin_fcfs, out_fcfs, st_fcfs = run("fcfs")
+    for i in range(len(reqs)):                 # parity before trusting stats
+        np.testing.assert_array_equal(np.asarray(out_sla[i], np.int32),
+                                      np.asarray(out_fcfs[i], np.int32))
+
+    lat_sla = float(np.mean([fin_sla[r] for r in inter]))
+    lat_fcfs = float(np.mean([fin_fcfs[r] for r in inter]))
+    win = lat_fcfs / lat_sla
+    print(row("sla_interactive_finish_events", 0.0, f"{lat_sla:.1f}"))
+    print(row("fcfs_interactive_finish_events", 0.0, f"{lat_fcfs:.1f}"))
+    print(row("sla_interactive_latency_win", 0.0, f"{win:.2f}x"))
+    assert win > 1.0, \
+        f"priority admission must cut interactive latency (got {win:.2f}x)"
+    if smoke:
+        print(row("sla_smoke_parity", 0.0, "ok"))
+        return
+
+    _, us_sla = timed(lambda: mt.generate(reqs, sc))
+    _, us_fcfs = timed(lambda: mt.generate(
+        reqs, dataclasses.replace(sc, sched_policy="fcfs")))
+    _merge_json(json_path, {"sla": {
+        "workload": {"batch_requests": n_batch, "interactive_requests": 3,
+                     "slots": sc.batch_size, "budget_batch": 10,
+                     "budget_interactive": 4},
+        "interactive_mean_finish_events": {"sla": lat_sla, "fcfs": lat_fcfs},
+        "interactive_latency_win": win,
+        "classes_sla": st_sla["classes"],
+        "classes_fcfs": st_fcfs["classes"],
+        "us_per_call": {"sla": us_sla, "fcfs": us_fcfs},
+        "note": "identical greedy outputs; win = priority-queue admission "
+                "with aging (serving/scheduler.py) letting interactive "
+                "requests jump the batch backlog; latency in stream events "
+                "(logical time) to dodge CPU jitter",
+    }})
+    print(f"# wrote {json_path} (sla section)")
+
+
+# ---------------------------------------------------------------------------
 # Smoke throughput floor: the number scripts/check_bench_regression.py gates
 # ---------------------------------------------------------------------------
 
@@ -466,12 +546,14 @@ def main(argv=None):
         ragged_section(args.json, smoke=True)
         prefill_section(args.json, smoke=True)
         prefix_cache_section(args.json, smoke=True)
+        sla_section(args.json, smoke=True)
         smoke_gate_section(args.json)
         return
     fixed_shape_sections()
     ragged_section(args.json)
     prefill_section(args.json)
     prefix_cache_section(args.json)
+    sla_section(args.json)
     smoke_gate_section(args.json)
 
 

@@ -1,0 +1,123 @@
+"""Link-check the docs spine: README.md + docs/*.md.
+
+Validates every relative markdown link ``[text](target)``:
+
+* the target file exists (resolved against the linking file's directory;
+  absolute/external schemes — http(s), mailto — are skipped);
+* a ``#anchor`` (own-file or cross-file) matches a heading in the target,
+  using GitHub's slug rules (lowercase, drop punctuation, spaces to
+  hyphens, ``-N`` suffixes for duplicates).
+
+Exit code 0 when clean, 1 with one line per broken link otherwise — the
+CI docs job runs this so the pointer map can't rot silently:
+
+    python scripts/check_docs_links.py [--root .]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str, seen: dict) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code ticks, lowercase,
+    drop everything but word chars/spaces/hyphens, spaces -> hyphens,
+    duplicate headings get -1, -2, ... suffixes."""
+    # strip code ticks and asterisk emphasis; literal underscores survive
+    # (GitHub keeps them — they are word chars)
+    text = re.sub(r"[`*]", "", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # linked headings
+    slug = re.sub(r"[^\w\- ]", "", text.lower(), flags=re.UNICODE)
+    slug = slug.replace(" ", "-")
+    n = seen.get(slug, 0)
+    seen[slug] = n + 1
+    return slug if n == 0 else f"{slug}-{n}"
+
+
+def anchors_of(path: str) -> set:
+    seen: dict = {}
+    out = set()
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = HEADING_RE.match(line)
+            if m:
+                out.add(github_slug(m.group(2), seen))
+    return out
+
+
+def links_of(path: str):
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                yield lineno, m.group(1)
+
+
+def check(root: str) -> list:
+    files = sorted(
+        glob.glob(os.path.join(root, "README.md"))
+        + glob.glob(os.path.join(root, "docs", "*.md")))
+    errors = []
+    anchor_cache: dict = {}
+    for src in files:
+        for lineno, target in links_of(src):
+            if target.startswith(EXTERNAL):
+                continue
+            path_part, _, anchor = target.partition("#")
+            if path_part:
+                dest = os.path.normpath(
+                    os.path.join(os.path.dirname(src), path_part))
+                if not os.path.exists(dest):
+                    errors.append(f"{src}:{lineno}: broken link -> {target}")
+                    continue
+            else:
+                dest = src                      # own-file anchor
+            if anchor:
+                if not dest.endswith(".md") or os.path.isdir(dest):
+                    continue                    # anchors into non-md: skip
+                if dest not in anchor_cache:
+                    anchor_cache[dest] = anchors_of(dest)
+                if anchor not in anchor_cache[dest]:
+                    errors.append(
+                        f"{src}:{lineno}: missing anchor #{anchor} "
+                        f"in {dest}")
+    if not files:
+        errors.append(f"no markdown files found under {root!r}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".")
+    args = ap.parse_args(argv)
+    errors = check(args.root)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_files = len(glob.glob(os.path.join(args.root, "README.md"))
+                  + glob.glob(os.path.join(args.root, "docs", "*.md")))
+    if not errors:
+        print(f"docs link-check OK ({n_files} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,8 +26,9 @@ WEIGHTS = {
     "tests/test_models.py": 190,
     "tests/test_arch_smoke.py": 140,
     "tests/test_baselines.py": 99,
-    "tests/test_serving_sim.py": 82,
+    "tests/test_serving_sim.py": 95,
     "tests/test_continuous.py": 73,
+    "tests/test_sched_policy.py": 40,
     "tests/test_multitenant.py": 37,
     "tests/test_fdlora.py": 33,
     "tests/test_distributed.py": 29,
@@ -37,6 +38,7 @@ WEIGHTS = {
     "tests/test_launch.py": 4,
     "tests/test_property.py": 4,
     "tests/test_ci_shard.py": 4,
+    "tests/test_docs.py": 3,
 }
 DEFAULT_WEIGHT = 30
 

@@ -66,6 +66,22 @@ def main(argv=None):
                          "blocks — shared prompt prefixes skip re-prefill "
                          "within and across calls (runs the stream twice "
                          "to show the warm-cache hit rate)")
+    ap.add_argument("--sched-policy", default="sla",
+                    choices=["sla", "fcfs"],
+                    help="continuous mode: 'sla' = priority-class admission "
+                         "with aging + prefix-aware preemption victims; "
+                         "'fcfs' = legacy arrival order + newest-first")
+    ap.add_argument("--priority-mix", default="",
+                    help="continuous mode: comma list of classes "
+                         "(interactive,batch,background) cycled over the "
+                         "request stream, e.g. 'batch,batch,interactive'; "
+                         "empty = all batch")
+    ap.add_argument("--paged-backend", default="jnp",
+                    choices=["jnp", "pallas"],
+                    help="continuous mode: paged-attention implementation — "
+                         "'jnp' gather oracle (CPU default) or 'pallas' "
+                         "kernels (interpret-mode on CPU; identical greedy "
+                         "tokens)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -105,9 +121,14 @@ def main(argv=None):
             sc.block_size = args.block_size
             sc.prefill_chunk = args.prefill_chunk
             sc.prefix_cache = args.prefix_cache
+            sc.sched_policy = args.sched_policy
+            sc.paged_backend = args.paged_backend
+            mix = [c.strip() for c in args.priority_mix.split(",")
+                   if c.strip()]
             reqs = [Request(f"client{i % args.tenants}",
                             prompt[: 8 + (5 * i) % (len(prompt) - 7)],
-                            max_new_tokens=4 + (7 * i) % args.new_tokens)
+                            max_new_tokens=4 + (7 * i) % args.new_tokens,
+                            priority=mix[i % len(mix)] if mix else "batch")
                     for i in range(n_req)]
             t0 = time.time()
             if args.stream:
@@ -130,7 +151,13 @@ def main(argv=None):
                   f"{dt:.2f}s ({total/dt:.1f} tok/s incl. compile); "
                   f"{stats['prefill_dispatches']} prefill + "
                   f"{stats['decode_dispatches']} decode dispatches, "
-                  f"{stats['preemptions']} preemptions")
+                  f"{stats['preemptions']} preemptions "
+                  f"[{stats['sched_policy']}, backend={sc.paged_backend}]")
+            for cname, cs in stats["classes"].items():
+                print(f"  class {cname}: {cs['admitted']} admitted, "
+                      f"queue wait p50 {cs['wait_p50']:.0f} / "
+                      f"p99 {cs['wait_p99']:.0f} rounds, "
+                      f"{cs['preemptions']} preemptions")
             if args.prefix_cache:
                 print(f"  prefix cache (cold call): "
                       f"{stats['prefix_hit_tokens']}/"

@@ -78,20 +78,24 @@ class Model:
                      adapters: Optional[Params] = None,
                      lora_scale: float = 1.0,
                      adapter_ids: Optional[jnp.ndarray] = None,
-                     block_tables: Optional[jnp.ndarray] = None):
+                     block_tables: Optional[jnp.ndarray] = None,
+                     paged_backend: Optional[str] = None):
         """Chunked paged prefill: tokens (B, T) with n_new (B,) valid per
         row, scattered through block_tables at per-row offsets pos (B,).
+        ``paged_backend`` overrides ``cfg.paged_backend`` ("jnp" | "pallas").
         Returns (logits (B, T, V), cache)."""
         if self.cfg.is_encdec:
             raise NotImplementedError("paged prefill is decoder-family only")
         return dec.prefill_step(params, cache, tokens, pos, n_new, self.cfg,
                                 adapters, lora_scale, adapter_ids=adapter_ids,
-                                block_tables=block_tables)
+                                block_tables=block_tables,
+                                paged_backend=paged_backend)
 
     def decode_step(self, params: Params, cache: Params, tokens, pos,
                     adapters: Optional[Params] = None, lora_scale: float = 1.0,
                     adapter_ids: Optional[jnp.ndarray] = None,
-                    block_tables: Optional[jnp.ndarray] = None):
+                    block_tables: Optional[jnp.ndarray] = None,
+                    paged_backend: Optional[str] = None):
         if self.cfg.is_encdec:
             if adapter_ids is not None or block_tables is not None:
                 raise NotImplementedError("multi-tenant banked adapters and "
@@ -101,7 +105,8 @@ class Model:
                                       adapters, lora_scale)
         return dec.decode_step(params, cache, tokens, pos, self.cfg,
                                adapters, lora_scale, adapter_ids=adapter_ids,
-                               block_tables=block_tables)
+                               block_tables=block_tables,
+                               paged_backend=paged_backend)
 
 
 def get_model(cfg) -> Model:

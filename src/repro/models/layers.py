@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels import ops as kernel_ops
 from repro.kernels.paged_prefill import paged_scatter
 
 Params = Dict[str, Any]
@@ -262,6 +263,41 @@ def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg,
     return out.reshape(B, Sq, H * hd)
 
 
+def _paged_attention_pallas(params, q, k, v, x, cfg, kv_cache, block_tables,
+                            lengths, n_new, dn, la):
+    """The paged branch routed through the Pallas kernels
+    (``cfg.paged_backend == "pallas"``; ``ServeConfig.paged_backend``
+    threads it per stream).  Same scatter convention, same masks, same
+    outputs up to online-softmax accumulation order as the jnp gather
+    below — greedy token streams are bitwise-equal (tested), logits
+    allclose.  ``cfg.pallas_interpret=False`` compiles the kernels on TPU.
+
+    Decode steps (2-tuple ``paged``, S == 1) go through
+    ``ops.paged_gqa_attention`` — the kernel's exclusive ``lengths`` is the
+    post-scatter count, hence the +1; prefill chunks (3-tuple, ragged
+    ``n_new``) through ``ops.paged_prefill_gqa_attention`` which owns the
+    scatter."""
+    B, S, H, hd = q.shape
+    if cfg.sliding_window > 0 or cfg.attn_logit_softcap > 0:
+        raise NotImplementedError(
+            "paged_backend='pallas' supports full attention only (no "
+            "sliding window / logit softcap); use paged_backend='jnp'")
+    interp = cfg.pallas_interpret
+    if n_new is None and S == 1:
+        kp, vp = paged_scatter(kv_cache["k_pool"], kv_cache["v_pool"], k, v,
+                               block_tables, lengths, None)
+        o = kernel_ops.paged_gqa_attention(
+            q, kp, vp, block_tables, lengths + 1, interpret=interp)
+    else:
+        nn = (n_new if n_new is not None
+              else jnp.full((B,), S, dtype=jnp.int32))
+        o, kp, vp = kernel_ops.paged_prefill_gqa_attention(
+            q, k, v, kv_cache["k_pool"], kv_cache["v_pool"], block_tables,
+            lengths, nn, interpret=interp)
+    out = dn(o.astype(x.dtype).reshape(B, S, H * hd), params["wo"], la("wo"))
+    return out, {"k_pool": kp, "v_pool": vp}
+
+
 def multihead_attention(params: Params, x: jnp.ndarray, cfg,
                         positions: jnp.ndarray,
                         adapters: Optional[Params] = None,
@@ -328,6 +364,11 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
         else:
             block_tables, lengths = paged             # (B, MB) i32, (B,) i32
             n_new = None
+        if cfg.paged_backend == "pallas":
+            out, new_cache = _paged_attention_pallas(
+                params, q, k, v, x, cfg, kv_cache, block_tables, lengths,
+                n_new, dn, la)
+            return out, new_cache
         bs_blk = kv_cache["k_pool"].shape[1]
         pos = (lengths[:, None].astype(jnp.int32)
                + jnp.arange(S, dtype=jnp.int32)[None, :])  # write positions

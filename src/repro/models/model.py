@@ -261,11 +261,24 @@ def paged_decode_cache_specs(cfg) -> Params:
     return specs
 
 
+def _resolve_backend(cfg, paged_backend: Optional[str]):
+    """Per-call override of ``cfg.paged_backend`` (the serving engine
+    threads ``ServeConfig.paged_backend`` here; ``None`` keeps the config
+    default).  Config replacement keeps the flag on ``cfg`` — the one
+    object the attention layer already reads."""
+    if paged_backend is None or paged_backend == cfg.paged_backend:
+        return cfg
+    if paged_backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown paged_backend {paged_backend!r}")
+    return cfg.with_overrides(paged_backend=paged_backend)
+
+
 def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
                 pos: jnp.ndarray, cfg,
                 adapters: Optional[Params] = None, lora_scale: float = 1.0,
                 adapter_ids: Optional[jnp.ndarray] = None,
-                block_tables: Optional[jnp.ndarray] = None
+                block_tables: Optional[jnp.ndarray] = None,
+                paged_backend: Optional[str] = None
                 ) -> Tuple[jnp.ndarray, Params]:
     """One decode step. tokens: (B, 1) int32; pos: scalar int32 (tokens
     already in the cache). ``adapter_ids``: (B,) int32 client slots for
@@ -273,7 +286,10 @@ def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
 
     Continuous batching: pass ``block_tables`` (B, MB) int32 and a *per-row*
     ``pos`` (B,) int32 of ragged context lengths; the cache must come from
-    :func:`init_paged_decode_cache`. Returns (logits (B, 1, V), new cache)."""
+    :func:`init_paged_decode_cache`. ``paged_backend`` overrides
+    ``cfg.paged_backend`` ("jnp" gather oracle | "pallas" kernels).
+    Returns (logits (B, 1, V), new cache)."""
+    cfg = _resolve_backend(cfg, paged_backend)
     if block_tables is not None:
         pos = pos.astype(jnp.int32)                  # (B,) ragged lengths
         positions = pos[:, None]                     # (B, S=1) for RoPE
@@ -290,7 +306,8 @@ def prefill_step(params: Params, cache: Params, tokens: jnp.ndarray,
                  pos: jnp.ndarray, n_new: jnp.ndarray, cfg,
                  adapters: Optional[Params] = None, lora_scale: float = 1.0,
                  adapter_ids: Optional[jnp.ndarray] = None,
-                 block_tables: Optional[jnp.ndarray] = None
+                 block_tables: Optional[jnp.ndarray] = None,
+                 paged_backend: Optional[str] = None
                  ) -> Tuple[jnp.ndarray, Params]:
     """Chunked paged prefill: one dispatch consumes a whole prompt chunk.
 
@@ -305,6 +322,7 @@ def prefill_step(params: Params, cache: Params, tokens: jnp.ndarray,
 
     Returns (logits (B, T, V), new cache) — the serving engine samples each
     row's logits at its last valid position to seed decoding."""
+    cfg = _resolve_backend(cfg, paged_backend)
     if block_tables is None:
         raise ValueError("prefill_step requires block_tables (paged cache)")
     T = tokens.shape[1]

@@ -35,7 +35,7 @@ import numpy as np
 from repro.core.lora import lora_scale
 from repro.serving.kv_cache import PagedKVCache, blocks_needed, reset_slot
 from repro.serving.registry import AdapterRegistry
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import PRIORITY_CLASSES, Scheduler
 
 Params = Any
 
@@ -66,6 +66,17 @@ class ServeConfig:
     #                                  valid but draw a different rng
     #                                  stream (fewer dispatches = fewer
     #                                  rng splits), so runs don't replay.
+    sched_policy: str = "sla"        # "sla": priority-class admission with
+    #                                  aging + scored preemption victims
+    #                                  (prefix-aware); "fcfs": legacy
+    #                                  arrival order + newest-first victims
+    sched_aging: int = 16            # admission rounds queued per one-class
+    #                                  promotion under "sla" (0 disables)
+    paged_backend: str = "jnp"       # paged-attention impl for the
+    #                                  continuous path: "jnp" gather oracle
+    #                                  (CPU default) | "pallas" kernels
+    #                                  (interpret-mode on CPU; on TPU also
+    #                                  set cfg.pallas_interpret=False)
 
 
 @dataclasses.dataclass
@@ -73,10 +84,16 @@ class Request:
     """One generation request. ``prompt``: (S,) int32 — ragged lengths are
     fine under ``MultiTenantEngine.generate`` (continuous batching); the
     fixed path (``generate_fixed``) still needs every prompt to share S.
-    ``max_new_tokens`` overrides ``ServeConfig.max_new_tokens`` per request."""
+    ``max_new_tokens`` overrides ``ServeConfig.max_new_tokens`` per request.
+    ``priority`` names a scheduling class (``interactive`` | ``batch`` |
+    ``background``) and ``deadline`` (any comparable number, e.g. a unix
+    timestamp) breaks admission ties earliest-first within a class — both
+    only matter under ``ServeConfig.sched_policy="sla"``."""
     client_id: Any
     prompt: Any
     max_new_tokens: Optional[int] = None
+    priority: str = "batch"
+    deadline: Optional[float] = None
 
 
 class _EngineBase:
@@ -88,8 +105,9 @@ class _EngineBase:
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
         self._decode_chunk = jax.jit(self._decode_chunk_impl,
-                                     static_argnames=("chunk_cap",))
-        self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
+                                     static_argnames=("chunk_cap", "backend"))
+        self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
+                                      static_argnames=("backend",))
 
     # -- steps ---------------------------------------------------------------
     def _prefill_impl(self, params, adapters, ids, cache, tokens):
@@ -119,13 +137,14 @@ class _EngineBase:
 
     def _decode_chunk_impl(self, params, adapters, ids, cache, last, active,
                            lengths, block_tables, n_steps, rng, temperature,
-                           chunk_cap):
+                           chunk_cap, backend=None):
         """Up to ``n_steps`` (dynamic, <= static ``chunk_cap``) decode steps
         fully on device: each slot feeds its last sampled token — one
         dispatch per chunk instead of per token.  (Prompts are fed by
         ``_prefill_chunk``; every active slot here is past its prompt.)
-        Returns the (chunk_cap, K) sampled block (rows >= n_steps are
-        garbage; the scheduler slices)."""
+        ``backend`` (static) selects the paged-attention impl
+        (``ServeConfig.paged_backend``).  Returns the (chunk_cap, K)
+        sampled block (rows >= n_steps are garbage; the scheduler slices)."""
         K = ids.shape[0]
 
         def body(t, carry):
@@ -134,7 +153,7 @@ class _EngineBase:
             logits, cache = self.model.decode_step(
                 params, cache, last[:, None], lengths, adapters=adapters,
                 lora_scale=self.scale, adapter_ids=ids,
-                block_tables=block_tables)
+                block_tables=block_tables, paged_backend=backend)
             nxt = self._sample(logits, sub, temperature)
             out = out.at[t].set(nxt)
             return (cache, nxt, lengths + active, rng, out)
@@ -146,7 +165,8 @@ class _EngineBase:
         return out, cache
 
     def _prefill_chunk_impl(self, params, adapters, ids, cache, tokens,
-                            lengths, n_new, block_tables, rng, temperature):
+                            lengths, n_new, block_tables, rng, temperature,
+                            backend=None):
         """One chunked-prefill dispatch: scatter+attend ``tokens`` (K, T)
         — ``n_new[k]`` valid per row — through the paged cache, and sample
         each row's logits at its LAST valid position (the first emitted
@@ -155,7 +175,7 @@ class _EngineBase:
         logits, cache = self.model.prefill_step(
             params, cache, tokens, lengths, n_new, adapters=adapters,
             lora_scale=self.scale, adapter_ids=ids,
-            block_tables=block_tables)
+            block_tables=block_tables, paged_backend=backend)
         K, T, _ = logits.shape
         rows = jnp.arange(K, dtype=jnp.int32)
         lg = logits[rows, jnp.clip(n_new - 1, 0, T - 1)]       # (K, V)
@@ -289,11 +309,16 @@ class MultiTenantEngine(_EngineBase):
         (``sc.prefill_chunk`` tokens per dispatch through the paged
         scatter+attend path) instead of one decode step per token; blocks
         are allocated on demand at chunk boundaries, and when the pool runs
-        dry the newest active request is preempted (requeued with
-        prompt+emitted as its new prompt — no tokens are lost or
-        re-yielded).  ``rid`` is the request's index in ``requests``.
-        After the stream drains, ``self.last_stats`` records dispatch and
-        preemption counters for the run."""
+        dry a victim is preempted (requeued with prompt+emitted as its new
+        prompt — no tokens are lost or re-yielded): under
+        ``sc.sched_policy="sla"`` the victim comes from the lowest
+        priority class present, newest-first unless a candidate's
+        cached/co-owned prefix makes preempting it strictly cheaper (see
+        ``serving/scheduler.py::sla_victim``); under ``"fcfs"`` the
+        newest active request goes, as before.
+        ``rid`` is the request's index in ``requests``.  After the stream
+        drains, ``self.last_stats`` records dispatch and preemption
+        counters plus per-class queue-wait percentiles for the run."""
         if not requests:
             raise ValueError("empty request batch")
         prompts = [np.asarray(r.prompt, np.int32).reshape(-1)
@@ -319,13 +344,15 @@ class MultiTenantEngine(_EngineBase):
         kv, cache, reused = self._paged_pool(num_slots, num_blocks,
                                              blocks_per, sc)
         evicted0 = kv.evicted_cached   # pool-lifetime counter; report delta
-        sched = Scheduler(kv)
+        sched = Scheduler(kv, policy=sc.sched_policy,
+                          aging_ticks=sc.sched_aging)
         for rid, (r, p, b) in enumerate(zip(requests, prompts, budgets)):
             # cached K/V depends on the adapter: scope hits by client AND
             # by the registry's version of its weights (re-registration
             # invalidates without any explicit flush)
             scope = (r.client_id, self.registry.version(r.client_id))
-            sched.submit(rid, r.client_id, p, b, scope=scope)
+            sched.submit(rid, r.client_id, p, b, scope=scope,
+                         priority=r.priority, deadline=r.deadline)
 
         bank = self.registry.bank()
         ids = np.zeros((num_slots,), np.int32)
@@ -352,7 +379,8 @@ class MultiTenantEngine(_EngineBase):
                 sampled, cache = self._prefill_chunk(
                     self.params, bank, jnp.asarray(ids), cache,
                     jnp.asarray(arrs["tokens"]), lens,
-                    jnp.asarray(arrs["n_new"]), bt, sub, sc.temperature)
+                    jnp.asarray(arrs["n_new"]), bt, sub, sc.temperature,
+                    backend=sc.paged_backend)
                 events = sched.observe_prefill(arrs["n_new"],
                                                np.asarray(sampled),
                                                eos_id=sc.eos_id)
@@ -363,10 +391,20 @@ class MultiTenantEngine(_EngineBase):
                     self.params, bank, jnp.asarray(ids), cache,
                     jnp.asarray(st["last"]), jnp.asarray(st["active"]),
                     lens, bt, jnp.int32(n), sub, sc.temperature,
-                    chunk_cap=cap)
+                    chunk_cap=cap, backend=sc.paged_backend)
                 events = sched.observe_chunk(np.asarray(out)[:n],
                                              eos_id=sc.eos_id)
             yield from events
+        classes = {}
+        for cname in PRIORITY_CLASSES:
+            waits = sched.wait_ticks.get(cname, [])
+            if not waits and cname not in sched.preemptions_by_class:
+                continue                     # class unused this stream
+            classes[cname] = {
+                "admitted": len(waits),
+                "wait_p50": float(np.percentile(waits, 50)) if waits else 0.0,
+                "wait_p99": float(np.percentile(waits, 99)) if waits else 0.0,
+                "preemptions": sched.preemptions_by_class.get(cname, 0)}
         self.last_stats = {"prefill_dispatches": sched.prefill_dispatches,
                            "decode_dispatches": sched.decode_dispatches,
                            "decode_steps": sched.steps,
@@ -377,7 +415,13 @@ class MultiTenantEngine(_EngineBase):
                                                / max(1, sched.prompt_tokens)),
                            "prefix_cached_blocks": kv.cached_blocks,
                            "prefix_evictions": kv.evicted_cached - evicted0,
-                           "prefix_pool_reused": reused}
+                           "prefix_pool_reused": reused,
+                           "sched_policy": sc.sched_policy,
+                           # queue waits in admission rounds (ticks), by class
+                           "classes": classes,
+                           "victim_sealed_fraction_mean": (
+                               float(np.mean(sched.victim_sealed_fractions))
+                               if sched.victim_sealed_fractions else 0.0)}
         if sc.prefix_cache:
             key = (num_slots, sc.block_size, num_blocks, blocks_per)
             self._warm = (key, kv, cache)

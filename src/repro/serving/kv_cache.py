@@ -293,6 +293,52 @@ class PagedKVCache:
         while len(self._pending[slot]) >= self.block_size:
             self._seal(slot)
 
+    def sealed_fraction(self, slot: int) -> float:
+        """Fraction of ``slot``'s owned blocks that are sealed (content-
+        addressed — matched at admission or filled and indexed since).
+        On release these park re-matchable in the cached-free pool (until
+        pool pressure evicts them).  0.0 for empty slots and for pools
+        without ``prefix_cache``."""
+        if not self._occupied[slot] or not self._owned[slot]:
+            return 0.0
+        return self._nseal[slot] / len(self._owned[slot])
+
+    def sealed_tokens(self, slot: int) -> int:
+        """Leading context tokens of ``slot`` living in SEALED blocks.
+        On release these park content-addressed (cached-free LRU) and
+        re-match at the request's re-admission — near-free preemption —
+        unless pool pressure evicts them in between."""
+        return self._nseal[slot] * self.block_size
+
+    def shared_prefix_tokens(self, slot: int) -> int:
+        """Tokens in ``slot``'s leading run of sealed blocks that are CO-
+        OWNED by another slot (``refcount >= 2``).  These survive this
+        slot's release for sure — the co-owner keeps them referenced, out
+        of eviction's reach — so a preempted request re-matches at least
+        this prefix at re-admission.  (Merely cached-parked blocks don't
+        count: the pool pressure that forces a preemption is exactly what
+        evicts them.)  The scheduler's SLA victim policy reads
+        ``lengths[slot] - shared_prefix_tokens(slot)`` as the re-prefill
+        cost of preempting this slot."""
+        run = 0
+        for i, b in enumerate(self._owned[slot]):
+            if i >= self._nseal[slot] or self._refcount[b] < 2:
+                break
+            run += 1
+        return run * self.block_size
+
+    def owned_blocks(self, slot: int) -> int:
+        """Blocks currently backing ``slot``'s table (shared hits included)."""
+        return len(self._owned[slot])
+
+    def releasable_blocks(self, slot: int) -> int:
+        """How many of ``slot``'s blocks become ALLOCATABLE if it releases
+        now — its refcount-1 blocks (freed or cached-parked, both
+        allocatable).  Co-owned blocks (refcount >= 2) stay referenced and
+        yield nothing; a preemption victim is only worth preempting for the
+        blocks this counts."""
+        return sum(1 for b in self._owned[slot] if self._refcount[b] == 1)
+
     def release(self, slot: int) -> None:
         """Drop a finished/preempted slot's references.  Blocks reaching
         refcount 0 park in the cached-free LRU if indexed (content retained

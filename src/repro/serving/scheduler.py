@@ -9,22 +9,46 @@ serving slot tracks one in-flight request's lifecycle:
            -> prefilling (remaining prompt CHUNKS fed per prefill dispatch)
            -> decoding  (sampled tokens emitted and fed back, chunked)
            -> finished  (budget exhausted or EOS) -> slot + blocks freed
-        or -> preempted (blocks released; requeued at the queue head with
-              prompt+emitted as the new prompt, so no work is lost)
+        or -> preempted (blocks released; requeued with prompt+emitted as
+              the new prompt, so no work is lost)
 
 Blocks are allocated on demand: :meth:`prepare_chunk` plans the next device
 chunk (a prefill chunk while any active slot still has prompt tokens
 pending, else a decode chunk) and grows every active slot's block table to
 cover exactly the positions that chunk will write — oldest request first.
-When the pool runs dry mid-growth, the NEWEST active request (highest rid)
-is preempted and planning restarts; the oldest active request is therefore
-never preempted by a younger one and always completes, which bounds
-progress (no livelock) as long as every request's full span fits the pool
-alone (checked at submit).
+When the pool runs dry mid-growth a victim is preempted and planning
+restarts.
+
+**Scheduling policy** (``policy=``): requests carry a *priority class*
+(:data:`PRIORITY_CLASSES`: ``interactive`` < ``batch`` < ``background``)
+and an optional deadline.
+
+* ``"sla"`` (default) — admission is a priority queue: candidates order by
+  ``(effective class, deadline, arrival)`` where the effective class is
+  AGED one level towards ``interactive`` every ``aging_ticks`` admission
+  rounds spent queued, so a starved ``background`` request climbs to the
+  top class in bounded time and then blocks younger admissions until it
+  fits (no starvation).  Preemption victims come from the LOWEST priority
+  class among the candidates; inside it the legacy newest-first pick is
+  kept unless a candidate is structurally cheaper in the worst case —
+  its guaranteed re-prefill cost (context minus the prefix co-owned by
+  another live slot, which survives any eviction and re-matches at
+  re-admission) undercuts the newest's by at least a block and its
+  release covers the pool's shortfall (see :func:`sla_victim`).  The
+  progress bound is preserved: the oldest runnable request in the top
+  priority class among the active slots is never preempted, so it always
+  completes (no livelock) as long as every request's full span fits the
+  pool alone (checked at submit).
+* ``"fcfs"`` — the legacy behaviour: arrival-order admission (priorities
+  ignored) and newest-request-first victims.
+
+A custom victim policy (``victim_policy=``) receives the non-protected
+:class:`VictimInfo` candidates and returns the slot to preempt.
 
 The engine drives the loop in chunks:  ``admit()`` between chunks pulls
-queued requests into freed slots (FCFS — the head waits while free blocks
-can't cover its prompt), ``prepare_chunk()`` plans + grows + preempts,
+queued requests into freed slots (the best candidate waits while free
+blocks can't cover its prompt — no bypass, which is what makes aging a
+starvation bound), ``prepare_chunk()`` plans + grows + preempts,
 ``prefill_arrays()``/``chunk_arrays()`` snapshot per-slot state for the
 device dispatch, and ``observe_prefill()``/``observe_chunk()`` consume the
 sampled results, returning ``(rid, new_tokens, finished)`` events the
@@ -34,12 +58,104 @@ drains.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serving.kv_cache import PagedKVCache
+from repro.serving.kv_cache import PagedKVCache, blocks_needed
+
+# priority classes, most to least urgent (lower level = more urgent)
+PRIORITY_CLASSES: Dict[str, int] = {
+    "interactive": 0, "batch": 1, "background": 2}
+_LEVEL_NAMES = {v: k for k, v in PRIORITY_CLASSES.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class VictimInfo:
+    """One preemption candidate, as seen by a victim policy."""
+    slot: int
+    rid: int
+    seq: int                      # arrival order (stable across preemptions)
+    level: int                    # priority class level (0 = interactive)
+    emitted: int                  # tokens emitted this incarnation
+    context_len: int              # K/V positions written (kv.lengths[slot])
+    block_size: int
+    sealed_tokens: int            # leading context in SEALED blocks: these
+    #                               park content-addressed on release and
+    #                               re-match at re-admission (unless pool
+    #                               pressure evicts them first)
+    sealed_fraction: float        # of owned blocks, sealed/content-indexed
+    shared_prefix_tokens: int     # of sealed_tokens, the prefix co-owned by
+    #                               another slot — survives release for sure
+    releasable_blocks: int        # blocks a release makes allocatable
+    #                               (refcount-1; co-owned blocks yield 0)
+    prompt_len: int
+    fed: int
+
+    @property
+    def _cap(self) -> int:
+        """Most tokens the replay can possibly re-match: its last full
+        block boundary (admission matching leaves at least one token live,
+        see ``PagedKVCache.match_prefix``)."""
+        replay = self.prompt_len + self.emitted
+        return ((replay - 1) // self.block_size) * self.block_size
+
+    @property
+    def reprefill_cost(self) -> int:
+        """Optimistic re-prefill estimate: context minus the whole sealed
+        prefix (assumes parked blocks survive until re-admission — usually
+        true under mild pressure).  Always < 2 blocks, so it cannot tell
+        victims apart; kept for stats and custom policies."""
+        return self.context_len - min(self.sealed_tokens, self._cap)
+
+    @property
+    def guaranteed_cost(self) -> int:
+        """Pessimistic (worst-case) re-prefill: context minus only the
+        prefix CO-OWNED by another active slot — those blocks stay
+        referenced through the preemption, immune to eviction, so the
+        replay re-matches them no matter how hard the pool thrashes.
+        Unlike the optimistic estimate this separates victims structurally:
+        ~0 for a request riding a live shared prefix, the full context for
+        a unique one."""
+        return self.context_len - min(self.shared_prefix_tokens, self._cap)
+
+
+def sla_victim(cands: List[VictimInfo], short: int = 1) -> int:
+    """Default victim policy: prefer the lowest-priority class; inside it,
+    keep the legacy newest-first choice (LIFO concentrates preemption
+    churn on one young request — empirically hard to beat) UNLESS a
+    candidate is structurally cheaper in the WORST case: its guaranteed
+    re-prefill cost (counting only blocks co-owned by another live slot,
+    which survive any eviction pressure) undercuts the newest's by at
+    least a block, and its release alone covers the ``short`` blocks the
+    pool is missing (a deviation that still forces a second preemption
+    pays twice).  Then take the cheapest such candidate (newest on ties).
+    With nothing cached/co-owned no candidate qualifies and this IS
+    newest-first."""
+    lvl = max(c.level for c in cands)
+    pool = [c for c in cands if c.level == lvl]
+    newest = max(pool, key=lambda c: c.seq)
+    cheap = [c for c in pool if c.releasable_blocks >= max(1, short)
+             and c.guaranteed_cost + c.block_size <= newest.guaranteed_cost]
+    if not cheap:
+        return newest.slot
+    return min(cheap, key=lambda c: (c.guaranteed_cost, -c.seq)).slot
+
+
+def newest_victim(cands: List[VictimInfo]) -> int:
+    """Legacy victim policy: preempt the newest request."""
+    return max(cands, key=lambda c: c.seq).slot
+
+
+@dataclasses.dataclass
+class _ReqMeta:
+    level: int
+    deadline: Optional[float]     # admission-priority tie-break (EDF); None
+    #                               sorts after any deadlined peer in class
+    seq: int                      # arrival order, preserved across preempts
+    enqueue_tick: int             # (re)entered the queue at this tick
 
 
 @dataclasses.dataclass
@@ -58,35 +174,66 @@ class _SlotState:
 
 
 class Scheduler:
-    """FCFS admission over ``kv.num_slots`` slots; results keyed by rid."""
+    """Priority admission over ``kv.num_slots`` slots; results keyed by rid.
 
-    def __init__(self, kv: PagedKVCache):
+    ``policy``: ``"sla"`` (priority classes + aging + scored victims) or
+    ``"fcfs"`` (legacy arrival order + newest-first victims).
+    ``aging_ticks``: admission rounds queued per one-class promotion under
+    ``"sla"`` (0 disables aging).  ``victim_policy``: optional callable
+    ``List[VictimInfo] -> slot`` replacing the default victim scoring
+    (candidates already exclude the protected oldest top-class request).
+    """
+
+    def __init__(self, kv: PagedKVCache, policy: str = "sla",
+                 aging_ticks: int = 16,
+                 victim_policy: Optional[
+                     Callable[[List[VictimInfo]], int]] = None):
+        if policy not in ("sla", "fcfs"):
+            raise ValueError(f"unknown sched policy {policy!r}")
         self.kv = kv
+        self.policy = policy
+        self.aging_ticks = aging_ticks
+        self.victim_policy = victim_policy
         # queue entries: (rid, client_id, prompt, budget, prior_emitted)
         self._queue: "deque[Tuple[int, Any, np.ndarray, int, List[int]]]" = \
             deque()
         self._slots: List[Optional[_SlotState]] = [None] * kv.num_slots
         self.results: Dict[int, np.ndarray] = {}
         self._scopes: Dict[int, Any] = {}   # rid -> prefix-cache hash scope
+        self._meta: Dict[int, _ReqMeta] = {}  # rid -> priority bookkeeping
+        self._seq = 0                       # arrival counter
+        self.ticks = 0                      # admission rounds (aging clock)
         self.steps = 0                      # decode steps driven
         self.prefill_dispatches = 0         # prefill chunks dispatched
         self.decode_dispatches = 0          # decode chunks dispatched
         self.preemptions = 0
+        self.preemptions_by_class: Dict[str, int] = {}
+        self.victim_sealed_fractions: List[float] = []
+        self.wait_ticks: Dict[str, List[int]] = {}  # class -> per-admission
+        #                                     queue waits (incl. re-admits)
         self.prompt_tokens = 0              # prompt tokens admitted (incl.
         #                                     preemption replays)
         self.prefix_hit_tokens = 0          # of those, served from cache
 
     # ---- intake -----------------------------------------------------------
     def submit(self, rid: int, client_id: Any, prompt, budget: int,
-               scope: Any = None) -> None:
+               scope: Any = None, priority: str = "batch",
+               deadline: Optional[float] = None) -> None:
         """``scope`` isolates the request's prefix-cache hash chain (the
         engine passes ``(client_id, adapter version)`` — cached K/V depends
-        on the adapter); ``None`` falls back to ``client_id``."""
+        on the adapter); ``None`` falls back to ``client_id``.
+        ``priority`` names a :data:`PRIORITY_CLASSES` entry; ``deadline``
+        (optional, any comparable number — the engine passes it through
+        untouched) breaks admission ties earliest-first within a class,
+        deadline-less requests sorting last."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError(f"request {rid}: empty prompt")
         if budget < 1:
             raise ValueError(f"request {rid}: budget must be >= 1")
+        if priority not in PRIORITY_CLASSES:
+            raise ValueError(f"request {rid}: unknown priority {priority!r} "
+                             f"(have {sorted(PRIORITY_CLASSES)})")
         span = int(prompt.size) + budget
         if not self.kv.fits(span):
             raise ValueError(
@@ -94,7 +241,30 @@ class Scheduler:
                 f"({self.kv.max_blocks_per_slot} blocks of "
                 f"{self.kv.block_size})")
         self._scopes[rid] = client_id if scope is None else scope
+        self._meta[rid] = _ReqMeta(PRIORITY_CLASSES[priority], deadline,
+                                   self._seq, self.ticks)
+        self._seq += 1
         self._queue.append((rid, client_id, prompt, budget, []))
+
+    # ---- priority ordering -------------------------------------------------
+    def effective_level(self, rid: int) -> int:
+        """The request's class level after aging: one level more urgent per
+        ``aging_ticks`` admission rounds spent queued (clamped at the top
+        class).  This is the starvation bound — any request reaches level 0
+        within ``level * aging_ticks`` rounds and then admits before every
+        younger level-0 request."""
+        m = self._meta[rid]
+        if self.policy != "sla" or self.aging_ticks <= 0:
+            return m.level
+        return max(0, m.level - (self.ticks - m.enqueue_tick)
+                   // self.aging_ticks)
+
+    def _admit_key(self, rid: int):
+        m = self._meta[rid]
+        if self.policy == "fcfs":
+            return (m.seq,)
+        return (self.effective_level(rid),
+                m.deadline if m.deadline is not None else math.inf, m.seq)
 
     # ---- state ------------------------------------------------------------
     @property
@@ -112,29 +282,38 @@ class Scheduler:
 
     # ---- lifecycle --------------------------------------------------------
     def admit(self) -> List[Tuple[int, Any]]:
-        """Fill freed slots from the queue head; returns newly admitted
-        ``(slot, client_id)`` pairs (the engine resets SSM state and
-        resolves the adapter slot for each).  Admission claims a slot with
-        zero blocks — the head waits (FCFS) while the free list can't cover
-        its prompt, and growth past the prompt relies on preemption.
+        """Fill freed slots from the queue in admission-priority order;
+        returns newly admitted ``(slot, client_id)`` pairs (the engine
+        resets SSM state and resolves the adapter slot for each).
+        Admission claims a slot with zero blocks — the BEST candidate waits
+        while the free list can't cover its prompt (no lower-priority
+        bypass: combined with aging this is the starvation bound), and
+        growth past the prompt relies on preemption.  Each call advances
+        the aging clock one tick.
 
         With prefix caching, admission matches the prompt's longest cached
         prefix under the request's scope and starts ``fed`` past the hit —
         those positions are never re-prefilled (a preempted request
         re-admitted with prompt+emitted re-matches its own sealed blocks)."""
+        self.ticks += 1
         admitted = []
-        for slot in range(self.kv.num_slots):
-            if self._slots[slot] is not None or not self._queue:
-                continue
-            rid, cid, prompt, budget, prior = self._queue[0]
+        free = [s for s, st in enumerate(self._slots) if st is None]
+        while free and self._queue:
+            idx = min(range(len(self._queue)),
+                      key=lambda i: self._admit_key(self._queue[i][0]))
+            rid, cid, prompt, budget, prior = self._queue[idx]
             if not self.kv.can_admit(int(prompt.size)):
-                break                        # FCFS: wait for blocks to free
-            self._queue.popleft()
+                break                        # best candidate waits; no bypass
+            del self._queue[idx]
+            slot = free.pop(0)
             n_hit = self.kv.admit(slot, scope=self._scopes[rid],
                                   tokens=prompt)
             self._slots[slot] = _SlotState(rid, cid, prompt, budget,
                                            next_token=int(prompt[0]),
                                            fed=n_hit, prior=prior)
+            m = self._meta[rid]
+            self.wait_ticks.setdefault(_LEVEL_NAMES[m.level], []).append(
+                self.ticks - m.enqueue_tick)
             self.prompt_tokens += int(prompt.size)
             self.prefix_hit_tokens += n_hit
             admitted.append((slot, cid))
@@ -144,10 +323,17 @@ class Scheduler:
         """Release ``slot``'s blocks and requeue its request at the queue
         head with prompt+emitted as the new prompt (emitted-so-far moves to
         ``prior``), so the resumed incarnation replays its context and
-        continues from the exact same state — no work is lost.  Returns the
-        preempted rid."""
+        continues from the exact same state — no work is lost.  The request
+        keeps its arrival ``seq`` (it stays ahead of younger peers in its
+        class); its aging clock restarts.  Returns the preempted rid."""
         st = self._slots[slot]
         assert st is not None, f"slot {slot} not active"
+        m = self._meta[st.rid]
+        self.victim_sealed_fractions.append(self.kv.sealed_fraction(slot))
+        cname = _LEVEL_NAMES[m.level]
+        self.preemptions_by_class[cname] = \
+            self.preemptions_by_class.get(cname, 0) + 1
+        m.enqueue_tick = self.ticks
         # zero-emitted edge: requeue the original array untouched (an empty
         # concatenand must not copy or silently re-derive the dtype)
         new_prompt = st.prompt if not st.emitted else np.concatenate(
@@ -178,13 +364,52 @@ class Scheduler:
             return 1
         return max(1, min(min(remaining), cap))
 
+    def _pick_victim(self, grower: int, short: int = 1) -> int:
+        """The slot to preempt when growing ``grower`` found the pool dry
+        (``short`` = blocks the pool is missing for the grower's target).
+
+        ``"fcfs"``: the newest active request (legacy).  ``"sla"``: the
+        oldest active request of the top priority class present is
+        PROTECTED (progress bound — it always completes); the remaining
+        candidates go to ``victim_policy`` (default :func:`sla_victim`,
+        which also sees ``short``; custom policies get the candidate list
+        only).  When the grower is the only candidate it is returned (the
+        caller's self-preempt / single-request paths handle it)."""
+        active = [(st, s) for s, st in enumerate(self._slots)
+                  if st is not None]
+        if self.policy == "fcfs":
+            return max(active, key=lambda p: self._meta[p[0].rid].seq)[1]
+        top = min(self._meta[st.rid].level for st, _ in active)
+        protected = min((p for p in active
+                         if self._meta[p[0].rid].level == top),
+                        key=lambda p: self._meta[p[0].rid].seq)[1]
+        cands = [VictimInfo(slot=s, rid=st.rid,
+                            seq=self._meta[st.rid].seq,
+                            level=self._meta[st.rid].level,
+                            emitted=len(st.emitted),
+                            context_len=int(self.kv.lengths[s]),
+                            block_size=self.kv.block_size,
+                            sealed_tokens=self.kv.sealed_tokens(s),
+                            sealed_fraction=self.kv.sealed_fraction(s),
+                            shared_prefix_tokens=
+                            self.kv.shared_prefix_tokens(s),
+                            releasable_blocks=self.kv.releasable_blocks(s),
+                            prompt_len=int(st.prompt.size), fed=st.fed)
+                 for st, s in active if s != protected]
+        if not cands:
+            return protected             # grower alone; caller raises/replans
+        if self.victim_policy is not None:
+            return self.victim_policy(cands)
+        return sla_victim(cands, short=short)
+
     def prepare_chunk(self, prefill_chunk: int, decode_cap: int):
         """Plan the next device chunk under on-demand block growth.
 
         Grows each active slot (oldest rid first) to cover the positions
-        the chunk will write; when the pool runs dry, preempts the newest
-        active request and replans.  Returns ``("prefill", None)`` or
-        ``("decode", n_steps)``, or None when no slot is active."""
+        the chunk will write; when the pool runs dry, preempts a victim
+        (see :meth:`_pick_victim`) and replans.  Returns
+        ``("prefill", None)`` or ``("decode", n_steps)``, or None when no
+        slot is active."""
         while True:
             active = sorted((st.rid, slot)
                             for slot, st in enumerate(self._slots)
@@ -210,9 +435,10 @@ class Scheduler:
                 if self._slots[slot] is None:
                     continue                 # preempted earlier in this pass
                 while not self.kv.ensure(slot, targets[slot]):
-                    victim = max((st.rid, s)
-                                 for s, st in enumerate(self._slots)
-                                 if st is not None)[1]
+                    need = (blocks_needed(targets[slot], self.kv.block_size)
+                            - self.kv.owned_blocks(slot))
+                    victim = self._pick_victim(
+                        slot, short=need - self.kv.allocatable_blocks)
                     if victim == slot and len(self.active_slots) == 1:
                         raise RuntimeError(
                             "pool cannot hold a single request's span "

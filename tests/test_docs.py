@@ -1,0 +1,56 @@
+"""The docs spine stays healthy: link checker clean on the repo, and the
+checker itself catches rot (missing files, missing anchors)."""
+import importlib.util
+import os
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs_links", os.path.join(ROOT, "scripts",
+                                         "check_docs_links.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_repo_docs_links_are_clean(checker):
+    assert checker.check(ROOT) == []
+
+
+def test_required_docs_exist():
+    for p in ("README.md", "docs/architecture.md", "docs/kernels.md",
+              "docs/serving.md"):
+        assert os.path.exists(os.path.join(ROOT, p)), p
+
+
+def test_checker_flags_broken_link_and_anchor(checker, tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(
+        "# Hi\n[ok](docs/a.md) [gone](docs/missing.md) "
+        "[bad](docs/a.md#nope) [good](docs/a.md#real-section)\n")
+    (tmp_path / "docs" / "a.md").write_text("# Real section\n")
+    errors = checker.check(str(tmp_path))
+    assert len(errors) == 2
+    assert any("missing.md" in e for e in errors)
+    assert any("#nope" in e for e in errors)
+
+
+def test_checker_skips_external_and_code_fences(checker, tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(
+        "# Hi\n[x](https://example.com/nope)\n"
+        "```\n[not a link](fake.md)\n```\n")
+    assert checker.check(str(tmp_path)) == []
+
+
+def test_github_slug_rules(checker):
+    seen = {}
+    assert checker.github_slug("Kernel contract — `a/b_c.py`", seen) \
+        == "kernel-contract--ab_cpy"
+    assert checker.github_slug("Dup", seen) == "dup"
+    assert checker.github_slug("Dup", seen) == "dup-1"

@@ -1,0 +1,340 @@
+"""Scheduling-policy edges + the Pallas paged-backend flag.
+
+Covers the SLA subsystem's corner cases (tie-breaking inside a class,
+aging promoting a starved background request, deadline ordering,
+zero-cached victim fallback to newest-first, the protected progress
+bound) directly against the real ``Scheduler`` + ``PagedKVCache``, and
+the ``ServeConfig.paged_backend="pallas"`` route through the real jitted
+engine — greedy token streams must be BITWISE equal to the jnp oracle
+path on ragged mixed-client batches, preemption included.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import PagedKVCache, blocks_needed
+from repro.serving.scheduler import (PRIORITY_CLASSES, Scheduler,
+                                     VictimInfo, newest_victim, sla_victim)
+
+VOCAB = 50
+
+
+def _prompt(n, seed=0):
+    return (np.arange(n, dtype=np.int32) * 3 + seed) % VOCAB
+
+
+def _drain_prefill(sched, width=32):
+    """Feed every active slot its whole remaining prompt (one chunk)."""
+    plan = sched.prepare_chunk(width, 4)
+    assert plan[0] == "prefill"
+    arrs = sched.prefill_arrays(width)
+    sampled = np.arange(sched.kv.num_slots, dtype=np.int32) + 30
+    return sched.observe_prefill(arrs["n_new"], sampled)
+
+
+# ---------------------------------------------------------------------------
+# Admission ordering: classes, aging, deadlines, in-class ties
+# ---------------------------------------------------------------------------
+
+def _admission_order(sched, kv, prefill_chunk=8, decode_cap=4):
+    """Drive the real scheduler loop with a trivial host model; return the
+    rid admission order."""
+    order = []
+    while sched.has_work:
+        for slot, _ in sched.admit():
+            order.append(sched._slots[slot].rid)
+        plan = sched.prepare_chunk(prefill_chunk, decode_cap)
+        assert plan is not None
+        K = kv.num_slots
+        if plan[0] == "prefill":
+            arrs = sched.prefill_arrays(prefill_chunk)
+            sched.observe_prefill(arrs["n_new"],
+                                  np.full((K,), 7, np.int32))
+        else:
+            sched.observe_chunk(np.full((plan[1], K), 7, np.int32))
+    return order
+
+
+def _make(num_slots=1, block_size=4, num_blocks=32, mbps=8, **kw):
+    kv = PagedKVCache(num_slots, block_size, num_blocks, mbps,
+                      prefix_cache=kw.pop("prefix_cache", False))
+    return kv, Scheduler(kv, **kw)
+
+
+def test_classes_order_admission():
+    """interactive < batch < background, regardless of submit order."""
+    kv, sched = _make()
+    sched.submit(0, "c", _prompt(4), 2, priority="background")
+    sched.submit(1, "c", _prompt(4), 2, priority="batch")
+    sched.submit(2, "c", _prompt(4), 2, priority="interactive")
+    assert _admission_order(sched, kv) == [2, 1, 0]
+
+
+def test_tie_break_inside_class_is_arrival_order():
+    kv, sched = _make()
+    for rid in range(4):
+        sched.submit(rid, "c", _prompt(3, rid), 2, priority="batch")
+    assert _admission_order(sched, kv) == [0, 1, 2, 3]
+
+
+def test_deadlines_order_inside_class_deadline_less_last():
+    """EDF inside a class; deadline-less requests sort after any deadlined
+    peer but still run (and classes still dominate deadlines)."""
+    kv, sched = _make()
+    sched.submit(0, "c", _prompt(3), 2, priority="batch")             # no ddl
+    sched.submit(1, "c", _prompt(3), 2, priority="batch", deadline=90)
+    sched.submit(2, "c", _prompt(3), 2, priority="batch", deadline=10)
+    sched.submit(3, "c", _prompt(3), 2, priority="background",
+                 deadline=1)                       # class beats deadline
+    assert _admission_order(sched, kv) == [2, 1, 0, 3]
+
+
+def test_aging_promotes_starved_background():
+    """One slot, a background request behind a stream of interactives:
+    with aging it overtakes the interactive tail once promoted; with
+    aging disabled it is admitted dead last."""
+    def order(aging):
+        kv, sched = _make(aging_ticks=aging)
+        sched.submit(0, "c", _prompt(4), 2, priority="background")
+        for rid in range(1, 9):
+            sched.submit(rid, "c", _prompt(4), 2, priority="interactive")
+        return _admission_order(sched, kv)
+
+    assert order(0)[-1] == 0                       # no aging: starved to last
+    aged = order(2)                                # promoted after 4 ticks
+    assert aged[-1] != 0 and aged.index(0) < 6
+    # the starvation bound itself: effective level hits 0 within
+    # level * aging_ticks rounds
+    kv, sched = _make(aging_ticks=2)
+    sched.submit(0, "c", _prompt(4), 2, priority="background")
+    assert sched.effective_level(0) == PRIORITY_CLASSES["background"]
+    sched.ticks += 2 * PRIORITY_CLASSES["background"]
+    assert sched.effective_level(0) == 0
+
+
+def test_fcfs_policy_ignores_priorities():
+    kv, sched = _make(policy="fcfs")
+    sched.submit(0, "c", _prompt(4), 2, priority="background")
+    sched.submit(1, "c", _prompt(4), 2, priority="interactive")
+    assert _admission_order(sched, kv) == [0, 1]
+
+
+def test_unknown_priority_rejected():
+    kv, sched = _make()
+    with pytest.raises(ValueError, match="unknown priority"):
+        sched.submit(0, "c", _prompt(4), 2, priority="urgent")
+    with pytest.raises(ValueError, match="unknown sched policy"):
+        Scheduler(kv, policy="lifo")
+
+
+# ---------------------------------------------------------------------------
+# Victim selection: fallback, protection, pluggability
+# ---------------------------------------------------------------------------
+
+def test_zero_cached_victims_fall_back_to_newest_first():
+    """Without prefix caching nothing is sealed/co-owned, so no candidate
+    passes the guaranteed-cost guard and the SLA pick IS newest-first."""
+    kv, sched = _make(num_slots=3, num_blocks=16, mbps=8)
+    for rid in range(3):
+        sched.submit(rid, "c", _prompt(8, rid), 4, priority="batch")
+    sched.admit()
+    _drain_prefill(sched)
+    assert sched._pick_victim(0) == 2              # newest seq, slot 2
+    # and equal-progress candidates under scoring tie-break to newest too
+    infos = [VictimInfo(slot=s, rid=s, seq=s, level=1, emitted=0,
+                        context_len=8, block_size=4, sealed_tokens=0,
+                        sealed_fraction=0.0, shared_prefix_tokens=0,
+                        releasable_blocks=2, prompt_len=8, fed=8)
+             for s in (1, 2)]
+    assert sla_victim(infos) == 2
+    assert newest_victim(infos) == 2
+
+
+def test_oldest_top_class_request_is_never_preempted():
+    """The progress bound: the oldest active request of the top class
+    present is protected from every pick."""
+    kv, sched = _make(num_slots=3, num_blocks=16, mbps=8)
+    sched.submit(0, "c", _prompt(8), 4, priority="batch")
+    sched.submit(1, "c", _prompt(8, 1), 4, priority="interactive")
+    sched.submit(2, "c", _prompt(8, 2), 4, priority="interactive")
+    sched.admit()           # priority admission: slots = [rid1, rid2, rid0]
+    slot_of = {st.rid: s for s, st in enumerate(sched._slots)}
+    assert [sched._slots[s].rid for s in range(3)] == [1, 2, 0]
+    _drain_prefill(sched)
+    # top class among actives is interactive; its oldest is rid 1
+    for grower in range(3):
+        assert sched._pick_victim(grower) != slot_of[1]
+    # lower classes are preferred victims over a newer interactive
+    assert sched._pick_victim(slot_of[1]) == slot_of[0]
+
+
+def test_custom_victim_policy_is_used():
+    picked = []
+
+    def leftmost(cands):
+        picked.append(tuple(c.slot for c in cands))
+        return min(cands, key=lambda c: c.slot).slot
+
+    kv, sched = _make(num_slots=3, num_blocks=16, mbps=8,
+                      victim_policy=leftmost)
+    for rid in range(3):
+        sched.submit(rid, "c", _prompt(8, rid), 4)
+    sched.admit()
+    _drain_prefill(sched)
+    assert sched._pick_victim(2) == 1              # slot 0 protected
+    assert picked == [(1, 2)]
+
+
+def test_preempted_request_keeps_seq_and_restarts_aging():
+    kv, sched = _make(num_slots=2, num_blocks=16, mbps=8)
+    sched.submit(0, "c", _prompt(8), 4)
+    sched.submit(1, "c", _prompt(8, 1), 4)
+    sched.admit()
+    _drain_prefill(sched)
+    sched.ticks += 5
+    sched.preempt(1)
+    m = sched._meta[1]
+    assert m.seq == 1 and m.enqueue_tick == sched.ticks
+    assert sched.preemptions_by_class == {"batch": 1}
+    assert len(sched.victim_sealed_fractions) == 1
+
+
+def test_wait_stats_recorded_per_class():
+    kv, sched = _make()
+    sched.submit(0, "c", _prompt(4), 2, priority="interactive")
+    sched.submit(1, "c", _prompt(4), 2, priority="background")
+    _admission_order(sched, kv)
+    assert len(sched.wait_ticks["interactive"]) == 1
+    assert len(sched.wait_ticks["background"]) == 1
+    assert (sched.wait_ticks["interactive"][0]
+            <= sched.wait_ticks["background"][0])
+
+
+# ---------------------------------------------------------------------------
+# paged_backend="pallas": the kernels behind the flag, bitwise greedy parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def f32_engine():
+    import jax
+    from conftest import tiny_dense
+    from repro.core.lora import init_adapters
+    from repro.models.api import get_model
+    from repro.serving.engine import MultiTenantEngine
+    from repro.serving.registry import AdapterRegistry
+
+    cfg = tiny_dense(dtype="float32", param_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reg = AdapterRegistry(cfg, capacity=2)
+    for i in range(2):
+        reg.register(f"c{i}", init_adapters(jax.random.PRNGKey(i + 1), cfg))
+    return cfg, MultiTenantEngine(model, cfg, params, reg)
+
+
+def _ragged_requests(cfg, n=4):
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(5)
+    reqs = [Request("c0", _prompt(12) % cfg.vocab_size, max_new_tokens=6)]
+    for i in range(n - 1):
+        plen = int(rng.integers(2, 13))
+        reqs.append(Request(f"c{i % 2}",
+                            rng.integers(0, cfg.vocab_size, plen)
+                            .astype(np.int32),
+                            max_new_tokens=int(rng.integers(2, 7))))
+    return reqs
+
+
+def test_pallas_backend_bitwise_greedy_parity_ragged(f32_engine):
+    """paged_backend="pallas" (interpret mode on CPU) must emit the exact
+    greedy token streams of the jnp oracle path on a ragged mixed-client
+    batch — the TPU switch cannot change outputs."""
+    from repro.serving.engine import ServeConfig
+    cfg, mt = f32_engine
+    sc = ServeConfig(batch_size=2, max_new_tokens=6, block_size=4,
+                     num_blocks=24, prefill_chunk=4)
+    reqs = _ragged_requests(cfg)
+    out_jnp = mt.generate(reqs, sc)
+    out_pal = mt.generate(reqs,
+                          dataclasses.replace(sc, paged_backend="pallas"))
+    for a, b in zip(out_jnp, out_pal):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pallas_backend_parity_under_preemption(f32_engine):
+    """The flag holds through the starved-pool path too: growth,
+    preemption, replay — all through the Pallas kernels."""
+    from repro.serving.engine import ServeConfig
+    cfg, mt = f32_engine
+    reqs = _ragged_requests(cfg, n=5)
+    sc = ServeConfig(batch_size=3, max_new_tokens=6, block_size=4,
+                     num_blocks=8, prefill_chunk=4)
+    out_jnp = mt.generate(reqs, sc)
+    assert mt.last_stats["preemptions"] > 0
+    out_pal = mt.generate(reqs,
+                          dataclasses.replace(sc, paged_backend="pallas"))
+    assert mt.last_stats["preemptions"] > 0
+    for a, b in zip(out_jnp, out_pal):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pallas_backend_rejects_unsupported_attention():
+    """Sliding-window / softcap archs must fail loudly, not silently
+    diverge, when routed through the kernels."""
+    import jax
+    from conftest import tiny_dense
+    from repro.models.api import get_model
+
+    cfg = tiny_dense(dtype="float32", param_dtype="float32",
+                     sliding_window=8, paged_backend="pallas")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_paged_decode_cache(2, 8, 4)
+    bt = np.zeros((2, 4), np.int32)
+    bt[0, 0] = 1
+    bt[1, 0] = 2
+    with pytest.raises(NotImplementedError, match="full attention only"):
+        model.decode_step(params, cache,
+                          np.zeros((2, 1), np.int32),
+                          np.zeros((2,), np.int32),
+                          block_tables=np.asarray(bt))
+
+
+def test_invalid_paged_backend_rejected(f32_engine):
+    cfg, mt = f32_engine
+    with pytest.raises(ValueError, match="unknown paged_backend"):
+        mt.model.decode_step(None, None, None, None, paged_backend="cuda")
+
+
+def test_engine_priority_classes_reorder_and_report(f32_engine):
+    """End-to-end: the interactive request submitted LAST runs first on a
+    contended 1-slot engine (everything queues at t0, and priority
+    admission outranks arrival), and last_stats reports per-class waits;
+    fcfs keeps submission order."""
+    from repro.serving.engine import Request, ServeConfig
+    cfg, mt = f32_engine
+    prompt = _prompt(8) % cfg.vocab_size
+    reqs = [Request("c0", prompt, max_new_tokens=4, priority="batch"),
+            Request("c1", prompt[:6], max_new_tokens=4, priority="batch"),
+            Request("c0", prompt[:5], max_new_tokens=4,
+                    priority="interactive")]
+    sc = ServeConfig(batch_size=1, max_new_tokens=4, block_size=4,
+                     num_blocks=24, prefill_chunk=4)
+
+    def finish_order(sc):
+        order = []
+        for rid, _toks, fin in mt.generate_stream(reqs, sc):
+            if fin:
+                order.append(rid)
+        return order
+
+    assert finish_order(sc) == [2, 0, 1]           # interactive jumps queue
+    st = mt.last_stats
+    assert st["sched_policy"] == "sla"
+    assert st["classes"]["interactive"]["admitted"] == 1
+    assert st["classes"]["batch"]["admitted"] == 2
+    assert (st["classes"]["interactive"]["wait_p50"]
+            <= st["classes"]["batch"]["wait_p99"])
+    assert finish_order(
+        dataclasses.replace(sc, sched_policy="fcfs")) == [0, 1, 2]
