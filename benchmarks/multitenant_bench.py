@@ -27,6 +27,12 @@ warmup call; CPU interpret-mode numbers — the wins are architectural):
     ``sched_policy="sla"`` vs ``"fcfs"`` — identical greedy outputs, the
     interactive class finishing earlier under priority admission.  Appends
     an ``sla`` section (latency win, per-class wait stats).
+  * spec (also default): a decode-bound repetitive stream with
+    ``spec_decode`` on vs off — BITWISE-equal outputs, >=1.5x tok/s from
+    prompt-lookup drafts verified through the chunked paged prefill path.
+    Appends a ``spec`` section (speedup, acceptance, dispatch counts);
+    ``--gate-only`` also times it for the
+    ``benchmarks/baselines/serving_spec.json`` CI gate.
   * smoke gate (also default): a fixed small continuous workload's tok/s,
     recorded as the ``smoke`` section — CI's
     ``scripts/check_bench_regression.py`` fails the PR when it regresses
@@ -84,21 +90,21 @@ def _merge_json(json_path: str, updates: dict) -> None:
         f.write("\n")
 
 
-def _adapters(seed: int):
-    ad = init_adapters(jax.random.PRNGKey(seed), CFG)
+def _adapters(seed: int, cfg=CFG):
+    ad = init_adapters(jax.random.PRNGKey(seed), cfg)
     bump = jax.random.PRNGKey(seed + 1000)
     return jax.tree.map(
         lambda l: l + 0.02 * jax.random.normal(bump, l.shape), ad)
 
 
-def _setup(n_adapters: int):
-    model = get_model(CFG)
+def _setup(n_adapters: int, cfg=CFG):
+    model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    ads = {f"c{i}": _adapters(i + 1) for i in range(n_adapters)}
-    registry = AdapterRegistry(CFG, capacity=max(n_adapters, 2))
+    ads = {f"c{i}": _adapters(i + 1, cfg) for i in range(n_adapters)}
+    registry = AdapterRegistry(cfg, capacity=max(n_adapters, 2))
     for cid, ad in ads.items():
         registry.register(cid, ad)
-    return model, params, ads, MultiTenantEngine(model, CFG, params, registry)
+    return model, params, ads, MultiTenantEngine(model, cfg, params, registry)
 
 
 # ---------------------------------------------------------------------------
@@ -462,6 +468,123 @@ def sla_section(json_path: str, smoke: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# Speculative decoding: decode-bound repetitive stream, spec vs plain greedy
+# ---------------------------------------------------------------------------
+
+def _spec_workload(mt, sc, n_req: int = 6):
+    """Decode-bound repetitive stream: prompt seeds whose greedy
+    continuation settles into a cycle on the bench model, each extended by
+    its own first 16 greedy tokens — the timed region then starts inside
+    the repetitive regime and the prompt already contains the runs the
+    prompt-lookup drafter matches against (continuing a repetitive
+    document: the workload speculation targets)."""
+    seeds = ([5, 6] * 4)[:n_req]
+    warm = [Request(f"c{s % 2}",       # cycle quality is adapter-specific
+                    np.tile((np.arange(4, dtype=np.int32) * 9 + s)
+                            % CFG.vocab_size, 2).astype(np.int32),
+                    max_new_tokens=16)
+            for s in seeds]
+    outs = mt.generate(warm, dataclasses.replace(sc, spec_decode=False))
+    return [Request(r.client_id,
+                    np.concatenate([r.prompt, np.asarray(o, np.int32)]),
+                    max_new_tokens=40)
+            for r, o in zip(warm, outs)]
+
+
+def _best_us(fn, repeats: int = 5) -> float:
+    """Best-of-N wall time in us (see smoke_gate_section on why best)."""
+    import time as _time
+    fn()                                           # warmup/compile
+    us = float("inf")
+    for _ in range(repeats):
+        t0 = _time.perf_counter()
+        fn()
+        us = min(us, (_time.perf_counter() - t0) * 1e6)
+    return us
+
+
+def spec_section(json_path: str, smoke: bool = False):
+    """Draft-then-verify greedy decoding (``ServeConfig.spec_decode``) vs
+    plain chunked decode on a decode-bound repetitive workload.  Outputs
+    must be BITWISE equal (speculation changes when tokens are computed,
+    never which); the win is model evaluations per emitted token — one
+    verify dispatch scores up to spec_k+1 positions in a single eval."""
+    n_req = 4 if smoke else 8
+    model, params, ads, mt = _setup(2)
+    sc = ServeConfig(batch_size=8, max_new_tokens=40, block_size=8)
+    sc_spec = dataclasses.replace(sc, spec_decode=True, spec_k=8)
+    reqs = _spec_workload(mt, sc, n_req)
+    useful = sum(r.max_new_tokens for r in reqs)
+
+    out_base = mt.generate(reqs, sc)
+    out_spec = mt.generate(reqs, sc_spec)
+    st = dict(mt.last_stats)
+    for a, b in zip(out_base, out_spec):           # parity before timings
+        np.testing.assert_array_equal(a, b)
+    print(row("spec_acceptance_rate", 0.0, f"{st['acceptance_rate']:.1%}"))
+    print(row("spec_verify_dispatches", 0.0, f"{st['verify_dispatches']}"))
+    assert st["acceptance_rate"] > 0.5, \
+        f"repetitive stream must accept >50% of drafts " \
+        f"(got {st['acceptance_rate']:.1%})"
+    if smoke:
+        print(row("spec_smoke_parity", 0.0, "ok"))
+        return
+
+    us_base = _best_us(lambda: mt.generate(reqs, sc))
+    us_spec = _best_us(lambda: mt.generate(reqs, sc_spec))
+    tps_base = useful / (us_base / 1e6)
+    tps_spec = useful / (us_spec / 1e6)
+    speedup = us_base / us_spec
+    print(row("spec_decode_off", us_base, f"{tps_base:.1f} tok/s"))
+    print(row("spec_decode_on", us_spec, f"{tps_spec:.1f} tok/s"))
+    print(row("spec_speedup", 0.0, f"{speedup:.2f}x"))
+    assert speedup >= 1.5, \
+        f"speculation must win >=1.5x on the decode-bound repetitive " \
+        f"workload (got {speedup:.2f}x)"
+    _merge_json(json_path, {"spec": {
+        "workload": {"requests": n_req, "prompt_len": 24, "budget": 40,
+                     "useful_tokens": useful, "slots": sc.batch_size,
+                     "block_size": sc.block_size},
+        "tok_per_s": tps_spec, "base_tok_per_s": tps_base,
+        "us_per_call": us_spec, "base_us_per_call": us_base,
+        "speedup": speedup, "spec_k": sc_spec.spec_k,
+        "acceptance_rate": st["acceptance_rate"],
+        "verify_dispatches": st["verify_dispatches"],
+        "drafted_tokens": st["drafted_tokens"],
+        "accepted_tokens": st["accepted_tokens"],
+        "rollback_tokens": st["rollback_tokens"],
+        "note": "CPU interpret-mode; bitwise-equal greedy streams — win = "
+                "fewer model evaluations per token (prompt-lookup drafts "
+                "verified through the chunked paged prefill path)",
+    }})
+    print(f"# wrote {json_path} (spec section)")
+
+
+def spec_gate_section(json_path: str):
+    """Speculative throughput floor for CI: the spec workload's tok/s,
+    gated against ``benchmarks/baselines/serving_spec.json`` (best-of-5,
+    same rationale as :func:`smoke_gate_section`; parity runs in
+    serving-smoke)."""
+    model, params, ads, mt = _setup(2)
+    sc_spec = ServeConfig(batch_size=8, max_new_tokens=40, block_size=8,
+                          spec_decode=True, spec_k=8)
+    reqs = _spec_workload(mt, ServeConfig(batch_size=8, max_new_tokens=40,
+                                          block_size=8), 8)
+    useful = sum(r.max_new_tokens for r in reqs)
+    us = _best_us(lambda: mt.generate(reqs, sc_spec))
+    tps = useful / (us / 1e6)
+    print(row("spec_gate", us, f"{tps:.1f} tok/s"))
+    _merge_json(json_path, {"spec": {
+        "tok_per_s": tps, "us_per_call": us, "useful_tokens": useful,
+        "requests": len(reqs), "slots": sc_spec.batch_size,
+        "spec_k": sc_spec.spec_k,
+        "note": "speculative-decoding smoke throughput; gated by "
+                "scripts/check_bench_regression.py in CI",
+    }})
+    print(f"# wrote {json_path} (spec gate section)")
+
+
+# ---------------------------------------------------------------------------
 # Smoke throughput floor: the number scripts/check_bench_regression.py gates
 # ---------------------------------------------------------------------------
 
@@ -541,12 +664,14 @@ def main(argv=None):
         return
     if args.gate_only:
         smoke_gate_section(args.json)
+        spec_gate_section(args.json)
         return
     if args.smoke:
         ragged_section(args.json, smoke=True)
         prefill_section(args.json, smoke=True)
         prefix_cache_section(args.json, smoke=True)
         sla_section(args.json, smoke=True)
+        spec_section(args.json, smoke=True)
         smoke_gate_section(args.json)
         return
     fixed_shape_sections()
@@ -554,6 +679,7 @@ def main(argv=None):
     prefill_section(args.json)
     prefix_cache_section(args.json)
     sla_section(args.json)
+    spec_section(args.json)
     smoke_gate_section(args.json)
 
 

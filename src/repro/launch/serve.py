@@ -76,6 +76,14 @@ def main(argv=None):
                          "(interactive,batch,background) cycled over the "
                          "request stream, e.g. 'batch,batch,interactive'; "
                          "empty = all batch")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="continuous mode: speculative greedy decoding — "
+                         "prompt-lookup drafts verified through the paged "
+                         "prefill path (bitwise-identical tokens, fewer "
+                         "model evaluations on repetitive output)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="with --spec-decode: max drafted tokens per slot "
+                         "per verify round")
     ap.add_argument("--paged-backend", default="jnp",
                     choices=["jnp", "pallas"],
                     help="continuous mode: paged-attention implementation — "
@@ -123,6 +131,8 @@ def main(argv=None):
             sc.prefix_cache = args.prefix_cache
             sc.sched_policy = args.sched_policy
             sc.paged_backend = args.paged_backend
+            sc.spec_decode = args.spec_decode
+            sc.spec_k = args.spec_k
             mix = [c.strip() for c in args.priority_mix.split(",")
                    if c.strip()]
             reqs = [Request(f"client{i % args.tenants}",
@@ -153,6 +163,14 @@ def main(argv=None):
                   f"{stats['decode_dispatches']} decode dispatches, "
                   f"{stats['preemptions']} preemptions "
                   f"[{stats['sched_policy']}, backend={sc.paged_backend}]")
+            if args.spec_decode:
+                print(f"  spec decode (k={sc.spec_k}): "
+                      f"{stats['accepted_tokens']}/{stats['drafted_tokens']} "
+                      f"drafted tokens accepted "
+                      f"({stats['acceptance_rate']:.0%}) over "
+                      f"{stats['verify_dispatches']} verify dispatches; "
+                      f"{stats['rollback_tokens']} tokens / "
+                      f"{stats['rollback_blocks']} blocks rolled back")
             for cname, cs in stats["classes"].items():
                 print(f"  class {cname}: {cs['admitted']} admitted, "
                       f"queue wait p50 {cs['wait_p50']:.0f} / "

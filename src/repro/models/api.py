@@ -91,6 +91,29 @@ class Model:
                                 block_tables=block_tables,
                                 paged_backend=paged_backend)
 
+    def verify_step(self, params: Params, cache: Params, tokens, pos, n_new,
+                    adapters: Optional[Params] = None,
+                    lora_scale: float = 1.0,
+                    adapter_ids: Optional[jnp.ndarray] = None,
+                    block_tables: Optional[jnp.ndarray] = None,
+                    paged_backend: Optional[str] = None):
+        """Speculative-decoding verification: score a drafted chunk
+        (feedback token + proposed continuation per row) causally against
+        the paged cache.  This IS :meth:`prefill_step` — same scatter,
+        same chunk attention, same kernels on both paged backends — named
+        separately because the contract differs: the caller consumes the
+        logits at EVERY chunk position (greedy acceptance needs the
+        model's choice after each drafted token), and positions past the
+        accepted run are rolled back by the scheduler, not kept.  Chunk
+        logits are bitwise-equal to feeding the same tokens one decode
+        step at a time, which is what makes greedy draft-then-verify
+        bitwise-identical to non-speculative decoding."""
+        return self.prefill_step(params, cache, tokens, pos, n_new,
+                                 adapters=adapters, lora_scale=lora_scale,
+                                 adapter_ids=adapter_ids,
+                                 block_tables=block_tables,
+                                 paged_backend=paged_backend)
+
     def decode_step(self, params: Params, cache: Params, tokens, pos,
                     adapters: Optional[Params] = None, lora_scale: float = 1.0,
                     adapter_ids: Optional[jnp.ndarray] = None,

@@ -332,7 +332,13 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
       is not chunk-size-invariant on CPU).  The jnp gather below is the
       oracle; ``kernels/paged_attention.py`` (decode) and
       ``kernels/paged_prefill.py`` (chunk) are the TPU drop-ins that never
-      materialise it in HBM.
+      materialise it in HBM.  Speculative-decoding VERIFY dispatches
+      (``Model.verify_step``) are this same chunk path fed with drafted
+      tokens — no extra kernel, and the per-position bitwise equality
+      above is exactly what makes greedy draft-then-verify emit the
+      non-speculative token stream (rejected positions are rolled back
+      host-side; their scattered K/V is masked off by ``lengths`` and
+      overwritten on the next write).
     * cross-attention (whisper): ``kv_override=(k, v)`` precomputed from the
       encoder; causal=False.
     """

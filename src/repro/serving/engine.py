@@ -77,6 +77,17 @@ class ServeConfig:
     #                                  (CPU default) | "pallas" kernels
     #                                  (interpret-mode on CPU; on TPU also
     #                                  set cfg.pallas_interpret=False)
+    spec_decode: bool = False        # speculative decoding (continuous
+    #                                  path): prompt-lookup self-drafts of
+    #                                  up to spec_k tokens verified in ONE
+    #                                  prefill-shaped dispatch; greedy-only
+    #                                  (temperature must be 0) and bitwise-
+    #                                  identical to non-speculative greedy
+    #                                  decoding.  Rejected drafts roll the
+    #                                  paged cache back token-granularly.
+    spec_k: int = 4                  # max drafted tokens per slot per round
+    spec_ngram: int = 3              # longest history n-gram the drafter
+    #                                  matches (see serving/spec_decode.py)
 
 
 @dataclasses.dataclass
@@ -86,13 +97,16 @@ class Request:
     fixed path (``generate_fixed``) still needs every prompt to share S.
     ``max_new_tokens`` overrides ``ServeConfig.max_new_tokens`` per request.
     ``priority`` names a scheduling class (``interactive`` | ``batch`` |
-    ``background``) and ``deadline`` (any comparable number, e.g. a unix
-    timestamp) breaks admission ties earliest-first within a class — both
-    only matter under ``ServeConfig.sched_policy="sla"``."""
+    ``background``); ``None`` (the default) falls back to the client's
+    registered default (``AdapterRegistry.register(...,
+    default_priority=)``) and then to ``"batch"`` — an explicit request
+    priority always wins.  ``deadline`` (any comparable number, e.g. a
+    unix timestamp) breaks admission ties earliest-first within a class —
+    both only matter under ``ServeConfig.sched_policy="sla"``."""
     client_id: Any
     prompt: Any
     max_new_tokens: Optional[int] = None
-    priority: str = "batch"
+    priority: Optional[str] = None
     deadline: Optional[float] = None
 
 
@@ -108,6 +122,8 @@ class _EngineBase:
                                      static_argnames=("chunk_cap", "backend"))
         self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
                                       static_argnames=("backend",))
+        self._verify_chunk = jax.jit(self._verify_chunk_impl,
+                                     static_argnames=("backend",))
 
     # -- steps ---------------------------------------------------------------
     def _prefill_impl(self, params, adapters, ids, cache, tokens):
@@ -180,6 +196,24 @@ class _EngineBase:
         rows = jnp.arange(K, dtype=jnp.int32)
         lg = logits[rows, jnp.clip(n_new - 1, 0, T - 1)]       # (K, V)
         return self._sample(lg[:, None], rng, temperature), cache
+
+    def _verify_chunk_impl(self, params, adapters, ids, cache, tokens,
+                           lengths, n_new, block_tables, backend=None):
+        """One draft-verify dispatch: the SAME paged prefill dataflow as
+        ``_prefill_chunk_impl`` (``Model.verify_step`` delegates to
+        ``prefill_step`` — scatter + causal chunk attention against the
+        pool, both backends), but the greedy sample comes back for EVERY
+        chunk position, not just the last valid one: position ``t``'s
+        argmax is the token non-speculative decoding would have emitted
+        after feeding the chunk up to ``t``, which is exactly what the
+        scheduler's acceptance rule compares drafts against.  Greedy-only
+        (``generate_stream`` rejects spec_decode with temperature > 0),
+        so no rng is threaded.  Returns ((K, T) int32 greedy, cache)."""
+        logits, cache = self.model.verify_step(
+            params, cache, tokens, lengths, n_new, adapters=adapters,
+            lora_scale=self.scale, adapter_ids=ids,
+            block_tables=block_tables, paged_backend=backend)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
     @staticmethod
     def _sample(logits, rng, temperature):
@@ -284,17 +318,19 @@ class MultiTenantEngine(_EngineBase):
                           prefix_cache=sc.prefix_cache)
         cache = self.model.init_paged_decode_cache(num_slots, num_blocks,
                                                    sc.block_size)
-        if sc.prefix_cache:
+        if sc.prefix_cache or sc.spec_decode:
             # recurrent SSM state is per-slot and dense — it cannot be
-            # reconstructed from cached K/V blocks, so a prefix hit would
-            # silently skip the state updates for the matched positions
+            # reconstructed from cached K/V blocks (a prefix hit would
+            # silently skip state updates) nor rolled back token-granularly
+            # (a verify dispatch advances it through rejected drafts)
+            feature = ("prefix_cache" if sc.prefix_cache else "spec_decode")
             for entry in cache["blocks"].values():
                 extra = set(entry) - {"k_pool", "v_pool"}
                 if extra:
                     raise ValueError(
-                        "prefix_cache=True needs an attention-only model: "
+                        f"{feature}=True needs an attention-only model: "
                         f"recurrent per-slot state {sorted(extra)} cannot "
-                        "be block-cached")
+                        "be block-cached or rolled back")
         return kv, cache, False
 
     # -- continuous batching (the serving path) ------------------------------
@@ -321,6 +357,16 @@ class MultiTenantEngine(_EngineBase):
         counters plus per-class queue-wait percentiles for the run."""
         if not requests:
             raise ValueError("empty request batch")
+        if sc.spec_decode:
+            if sc.temperature > 0:
+                raise ValueError(
+                    "spec_decode is greedy-only (temperature must be 0): "
+                    "acceptance compares drafts against argmax tokens, "
+                    "which is what makes the stream bitwise-identical to "
+                    "non-speculative decoding")
+            if sc.spec_k < 1:
+                raise ValueError(f"spec_decode needs spec_k >= 1, "
+                                 f"got {sc.spec_k}")
         prompts = [np.asarray(r.prompt, np.int32).reshape(-1)
                    for r in requests]
         budgets = [sc.max_new_tokens if r.max_new_tokens is None
@@ -345,14 +391,21 @@ class MultiTenantEngine(_EngineBase):
                                              blocks_per, sc)
         evicted0 = kv.evicted_cached   # pool-lifetime counter; report delta
         sched = Scheduler(kv, policy=sc.sched_policy,
-                          aging_ticks=sc.sched_aging)
+                          aging_ticks=sc.sched_aging,
+                          spec_k=sc.spec_k if sc.spec_decode else 0,
+                          spec_ngram=sc.spec_ngram)
         for rid, (r, p, b) in enumerate(zip(requests, prompts, budgets)):
             # cached K/V depends on the adapter: scope hits by client AND
             # by the registry's version of its weights (re-registration
             # invalidates without any explicit flush)
             scope = (r.client_id, self.registry.version(r.client_id))
+            # explicit request priority wins; else the client's registered
+            # default; else the scheduler's baseline class
+            priority = (r.priority
+                        or self.registry.default_priority(r.client_id)
+                        or "batch")
             sched.submit(rid, r.client_id, p, b, scope=scope,
-                         priority=r.priority, deadline=r.deadline)
+                         priority=priority, deadline=r.deadline)
 
         bank = self.registry.bank()
         ids = np.zeros((num_slots,), np.int32)
@@ -362,6 +415,9 @@ class MultiTenantEngine(_EngineBase):
         # longest possible replayed prompt too — width is fixed per run to
         # keep one compiled prefill program.
         T = max(1, min(sc.prefill_chunk, max_span - 1))
+        # verify chunks have their own fixed width (drafted tokens + the
+        # feedback token) so the verify program also compiles once per run
+        Tv = 1 + sc.spec_k
         # EOS can end a row long before its budget; keep chunks short so its
         # slot frees (and admits the queue head) at the next boundary.
         cap = min(sc.scan_chunk, 8) if sc.eos_id is not None else sc.scan_chunk
@@ -384,6 +440,16 @@ class MultiTenantEngine(_EngineBase):
                 events = sched.observe_prefill(arrs["n_new"],
                                                np.asarray(sampled),
                                                eos_id=sc.eos_id)
+            elif plan[0] == "verify":
+                arrs = sched.verify_arrays(Tv)
+                greedy, cache = self._verify_chunk(
+                    self.params, bank, jnp.asarray(ids), cache,
+                    jnp.asarray(arrs["tokens"]), lens,
+                    jnp.asarray(arrs["n_new"]), bt,
+                    backend=sc.paged_backend)
+                events = sched.observe_verify(arrs["n_new"],
+                                              np.asarray(greedy),
+                                              eos_id=sc.eos_id)
             else:
                 n = plan[1]
                 st = sched.chunk_arrays()
@@ -408,6 +474,14 @@ class MultiTenantEngine(_EngineBase):
         self.last_stats = {"prefill_dispatches": sched.prefill_dispatches,
                            "decode_dispatches": sched.decode_dispatches,
                            "decode_steps": sched.steps,
+                           "spec_decode": sc.spec_decode,
+                           "verify_dispatches": sched.verify_dispatches,
+                           "drafted_tokens": sched.drafted_tokens,
+                           "accepted_tokens": sched.accepted_tokens,
+                           "acceptance_rate": (sched.accepted_tokens
+                                               / max(1, sched.drafted_tokens)),
+                           "rollback_tokens": sched.rollback_tokens,
+                           "rollback_blocks": sched.rollback_blocks,
                            "preemptions": sched.preemptions,
                            "prompt_tokens": sched.prompt_tokens,
                            "prefix_hit_tokens": sched.prefix_hit_tokens,

@@ -118,6 +118,14 @@ class PagedKVCache:
         self._chain: List[Optional[bytes]] = [None] * num_slots
         self._nseal: List[int] = [0] * num_slots
         self._pending: List[List[int]] = [[] for _ in range(num_slots)]
+        # rollback support: the chain digest AFTER each sealed block
+        # (element 0 = root, element i = digest after i seals) and the token
+        # ids each seal consumed — :meth:`rollback` pops these to rewind the
+        # chain and refill ``_pending`` when it unseals a block.  Maintained
+        # only while the slot's chain is live (frozen once sealing is
+        # disabled; the already-sealed prefix keeps its history).
+        self._chain_stack: List[List[bytes]] = [[] for _ in range(num_slots)]
+        self._seal_toks: List[List[tuple]] = [[] for _ in range(num_slots)]
         self.evicted_cached = 0    # pool-lifetime cached-block evictions
 
     # ---- capacity ---------------------------------------------------------
@@ -214,6 +222,9 @@ class PagedKVCache:
         self._nseal[slot] = 0
         self._scope[slot] = scope
         self._chain[slot] = _root_digest(scope) if self.prefix_cache else None
+        self._chain_stack[slot] = (
+            [self._chain[slot]] if self.prefix_cache else [])
+        self._seal_toks[slot] = []
         if self.prefix_cache and tokens is not None:
             hits, chain = self.match_prefix(scope, tokens)
             for i, block in enumerate(hits):
@@ -221,6 +232,10 @@ class PagedKVCache:
                 self._cached.pop(block, None)      # 0 -> 1: leaves the pool
                 self.block_tables[slot, i] = block
                 self._owned[slot].append(block)
+                # hit blocks are canonical (the index maps to them), so the
+                # reverse maps reconstruct their per-seal digests and tokens
+                self._chain_stack[slot].append(self._block_hash[block])
+                self._seal_toks[slot].append(self._block_tokens[block])
             self._nseal[slot] = len(hits)
             self._chain[slot] = chain
             self.lengths[slot] = len(hits) * self.block_size
@@ -260,6 +275,8 @@ class PagedKVCache:
         digest = _chain_digest(self._chain[slot], toks)
         self._chain[slot] = digest
         self._nseal[slot] += 1
+        self._chain_stack[slot].append(digest)
+        self._seal_toks[slot].append(toks)
         if digest not in self._index:
             self._index[digest] = block
             self._block_hash[block] = digest
@@ -292,6 +309,66 @@ class PagedKVCache:
         self._pending[slot].extend(int(t) for t in tokens)
         while len(self._pending[slot]) >= self.block_size:
             self._seal(slot)
+
+    def rollback(self, slot: int, n_tokens: int) -> int:
+        """Truncate ``slot``'s context to its first ``n_tokens`` tokens —
+        the speculative-decoding undo: a verify dispatch writes K/V for the
+        whole drafted chunk optimistically, then rolls the slot back past
+        the first greedy mismatch.
+
+        Token-granular: reduces ``lengths``, truncates the unsealed pending
+        tail, UN-seals any sealed block past the new length (dropping its
+        index entry if this slot's block was the canonical copy, popping
+        its digest off the chain so future seals re-chain from the right
+        parent, and refilling ``_pending`` with the tokens of a partially
+        rolled-back block), and frees now-unneeded tail blocks back to the
+        pool.  Raises ``ValueError`` — before mutating anything — if a
+        sealed block to be rolled back is co-owned (``refcount >= 2``):
+        shared prefix content is live in another slot's table and must
+        never be invalidated under it.  (The engine's verify path can't hit
+        this: it only rolls back tokens advanced within the same observe
+        round, before any admission could have matched them.)
+
+        Returns the number of blocks freed back to the pool."""
+        if not self._occupied[slot]:
+            raise ValueError(f"slot {slot} not occupied")
+        cur = int(self.lengths[slot])
+        if not 0 <= n_tokens <= cur:
+            raise ValueError(
+                f"rollback target {n_tokens} outside [0, {cur}]")
+        bs = self.block_size
+        new_nseal = min(self._nseal[slot], n_tokens // bs)
+        for i in range(new_nseal, self._nseal[slot]):
+            b = self._owned[slot][i]
+            if self._refcount[b] >= 2:
+                raise ValueError(
+                    f"rollback past sealed block {b} shared by another slot "
+                    f"(refcount {int(self._refcount[b])}): co-owned prefix "
+                    "content cannot be invalidated")
+        while self._nseal[slot] > new_nseal:
+            i = self._nseal[slot] - 1
+            b = self._owned[slot][i]
+            self._drop_index(b)                # no-op for duplicate content
+            self._nseal[slot] = i
+            if self._chain[slot] is not None:
+                toks = self._seal_toks[slot].pop()
+                self._chain_stack[slot].pop()
+                self._chain[slot] = self._chain_stack[slot][-1]
+                self._pending[slot][:0] = list(toks)
+        if self._chain[slot] is not None:
+            del self._pending[slot][n_tokens - new_nseal * bs:]
+        keep = -(-n_tokens // bs)              # ceil; >= new_nseal always
+        freed = 0
+        while len(self._owned[slot]) > keep:
+            b = self._owned[slot].pop()
+            self.block_tables[slot, len(self._owned[slot])] = 0
+            assert self._refcount[b] == 1, \
+                f"freeing tail block {b} with refcount {self._refcount[b]}"
+            self._refcount[b] = 0              # unsealed + unindexed by now
+            self._free.append(b)
+            freed += 1
+        self.lengths[slot] = n_tokens
+        return freed
 
     def sealed_fraction(self, slot: int) -> float:
         """Fraction of ``slot``'s owned blocks that are sealed (content-
@@ -360,6 +437,8 @@ class PagedKVCache:
         self._pending[slot] = []
         self._nseal[slot] = 0
         self._chain[slot] = None
+        self._chain_stack[slot] = []
+        self._seal_toks[slot] = []
         self._scope[slot] = None
         self.block_tables[slot] = 0
         self.lengths[slot] = 0
@@ -376,7 +455,12 @@ class PagedKVCache:
         * no shared or cached block is ever on the free list;
         * the index and per-block reverse maps agree;
         * tables name owned blocks in position order; lengths stay within
-          the owned span; sealed+pending accounting matches lengths.
+          the owned span AND the table's capacity; sealed+pending
+          accounting matches lengths;
+        * rollback bookkeeping is consistent: no freed block is referenced
+          by any table row, and a live chain's per-seal digest/token
+          history matches the sealed-block count exactly (so a future
+          rollback can always rewind the chain).
         """
         refs = np.zeros((self.num_blocks,), np.int64)
         for blocks in self._owned:
@@ -397,6 +481,12 @@ class PagedKVCache:
         for b in free_list:
             assert b not in self._block_hash, \
                 f"indexed block {b} on the plain free list"
+        # rollback safety: a freed block must have vanished from every
+        # table row (a stale reference would gather freed content)
+        referenced = set(int(b) for row in self.block_tables
+                         for b in row if b != 0)
+        assert not (free_set & referenced), \
+            f"freed blocks still in a table: {sorted(free_set & referenced)}"
         for b in cached:
             assert b in self._block_hash, f"cached-free block {b} unindexed"
         for digest, b in self._index.items():
@@ -408,6 +498,9 @@ class PagedKVCache:
                 assert self._occupied[slot], \
                     f"unoccupied slot {slot} owns blocks"
             assert self.lengths[slot] <= len(blocks) * self.block_size
+            assert (self.lengths[slot]
+                    <= self.max_blocks_per_slot * self.block_size), \
+                f"slot {slot} length exceeds table capacity"
             assert list(self.block_tables[slot, :len(blocks)]) == blocks
             assert (self.block_tables[slot, len(blocks):] == 0).all()
             assert self._nseal[slot] <= len(blocks)
@@ -415,6 +508,13 @@ class PagedKVCache:
                 assert (self._nseal[slot] * self.block_size
                         + len(self._pending[slot]) == self.lengths[slot]), \
                     f"slot {slot} sealing accounting broken"
+                assert (len(self._chain_stack[slot])
+                        == self._nseal[slot] + 1), \
+                    f"slot {slot} chain history out of sync with seals"
+                assert self._chain_stack[slot][-1] == self._chain[slot], \
+                    f"slot {slot} chain digest diverged from its history"
+                assert len(self._seal_toks[slot]) == self._nseal[slot], \
+                    f"slot {slot} seal-token history out of sync"
 
     # ---- device views -----------------------------------------------------
     def device_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:

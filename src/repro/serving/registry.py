@@ -50,6 +50,7 @@ class AdapterRegistry:
         self._lru: "OrderedDict[Any, int]" = OrderedDict()  # client -> slot
         self._free: List[int] = list(range(capacity))
         self._versions: Dict[Any, int] = {}  # bumped on every register()
+        self._default_priority: Dict[Any, str] = {}  # client -> class name
 
     # ---- bookkeeping ------------------------------------------------------
     def __contains__(self, client_id) -> bool:
@@ -73,9 +74,24 @@ class AdapterRegistry:
         return slot
 
     # ---- writes -----------------------------------------------------------
-    def register(self, client_id, adapters: Params) -> int:
+    def register(self, client_id, adapters: Params,
+                 default_priority: Optional[str] = None) -> int:
         """Install (or refresh) a client's fused adapter tree; returns its
-        slot. Evicts the least-recently-used client when full."""
+        slot. Evicts the least-recently-used client when full.
+
+        ``default_priority`` (an SLA class name — ``interactive`` |
+        ``batch`` | ``background``) becomes the scheduling class for this
+        client's requests that don't set one themselves; an explicit
+        ``Request.priority`` always wins.  ``None`` keeps any previously
+        registered default (a weight refresh shouldn't silently demote a
+        tenant's SLA)."""
+        if default_priority is not None:
+            from repro.serving.scheduler import PRIORITY_CLASSES
+            if default_priority not in PRIORITY_CLASSES:
+                raise ValueError(
+                    f"unknown default_priority {default_priority!r} "
+                    f"(have {sorted(PRIORITY_CLASSES)})")
+            self._default_priority[client_id] = default_priority
         slot = self._grab_slot(client_id)
         self._bank = jax.tree.map(
             lambda bank, leaf: bank.at[:, slot].set(leaf.astype(bank.dtype)),
@@ -86,15 +102,18 @@ class AdapterRegistry:
         return slot
 
     def register_dual(self, client_id, personalized: Params, global_: Params,
-                      fusion_weights) -> int:
+                      fusion_weights,
+                      default_priority: Optional[str] = None) -> int:
         """Fuse a dual-LoRA state via Eq. 7 and install the result."""
         fused = merge(personalized, global_, jnp.asarray(fusion_weights))
-        return self.register(client_id, fused)
+        return self.register(client_id, fused,
+                             default_priority=default_priority)
 
     def evict(self, client_id) -> None:
         """Drop a client; its slot returns to the free list (stale weights
         stay in the bank but are unreachable until the slot is reused)."""
         slot = self._lru.pop(client_id)
+        self._default_priority.pop(client_id, None)
         self._free.append(slot)
 
     # ---- reads ------------------------------------------------------------
@@ -105,6 +124,12 @@ class AdapterRegistry:
                            f"(resident: {self.resident})")
         self._lru.move_to_end(client_id)
         return self._lru[client_id]
+
+    def default_priority(self, client_id) -> Optional[str]:
+        """The client's registered default scheduling class, or ``None``
+        when it never set one (the engine then falls back to ``"batch"``).
+        Does not touch LRU recency — reading a default is not serving."""
+        return self._default_priority.get(client_id)
 
     def version(self, client_id) -> int:
         """Monotone per-client weight version, bumped on every

@@ -65,6 +65,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serving.kv_cache import PagedKVCache, blocks_needed
+from repro.serving.spec_decode import propose_draft
 
 # priority classes, most to least urgent (lower level = more urgent)
 PRIORITY_CLASSES: Dict[str, int] = {
@@ -171,6 +172,13 @@ class _SlotState:
     emitted: List[int] = dataclasses.field(default_factory=list)
     prior: List[int] = dataclasses.field(default_factory=list)
     #                               tokens emitted before preemption(s)
+    draft: List[int] = dataclasses.field(default_factory=list)
+    #                               speculative tokens proposed for the NEXT
+    #                               verify dispatch — planning-local state,
+    #                               never part of emitted/prompt until a
+    #                               verify ACCEPTS them (so a preemption
+    #                               between planning and observe can never
+    #                               leak drafts into the requeued prompt)
 
 
 class Scheduler:
@@ -187,13 +195,22 @@ class Scheduler:
     def __init__(self, kv: PagedKVCache, policy: str = "sla",
                  aging_ticks: int = 16,
                  victim_policy: Optional[
-                     Callable[[List[VictimInfo]], int]] = None):
+                     Callable[[List[VictimInfo]], int]] = None,
+                 spec_k: int = 0, spec_ngram: int = 3):
         if policy not in ("sla", "fcfs"):
             raise ValueError(f"unknown sched policy {policy!r}")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
         self.kv = kv
         self.policy = policy
         self.aging_ticks = aging_ticks
         self.victim_policy = victim_policy
+        # speculative decoding: spec_k > 0 turns decode chunks into
+        # draft-then-verify chunks (prompt-lookup drafts of up to spec_k
+        # tokens, matched over <= spec_ngram trailing tokens) whenever any
+        # decoding slot has a proposal; greedy-only (the engine enforces it)
+        self.spec_k = spec_k
+        self.spec_ngram = spec_ngram
         # queue entries: (rid, client_id, prompt, budget, prior_emitted)
         self._queue: "deque[Tuple[int, Any, np.ndarray, int, List[int]]]" = \
             deque()
@@ -206,6 +223,11 @@ class Scheduler:
         self.steps = 0                      # decode steps driven
         self.prefill_dispatches = 0         # prefill chunks dispatched
         self.decode_dispatches = 0          # decode chunks dispatched
+        self.verify_dispatches = 0          # draft-verify chunks dispatched
+        self.drafted_tokens = 0             # speculative tokens proposed
+        self.accepted_tokens = 0            # of those, greedy-accepted
+        self.rollback_tokens = 0            # drafted positions rolled back
+        self.rollback_blocks = 0            # tail blocks freed by rollback
         self.preemptions = 0
         self.preemptions_by_class: Dict[str, int] = {}
         self.victim_sealed_fractions: List[float] = []
@@ -402,14 +424,42 @@ class Scheduler:
             return self.victim_policy(cands)
         return sla_victim(cands, short=short)
 
+    def _draft(self, slot: int) -> List[int]:
+        """Prompt-lookup proposal for a DECODING slot, capped so the verify
+        chunk can neither overshoot the request's budget (at most
+        ``remaining - 1`` drafts: the bonus token the verify emits at the
+        draft-free position accounts for the rest) nor its table capacity
+        (the dispatch transiently writes all drafted positions before
+        rollback trims the rejects)."""
+        st = self._slots[slot]
+        remaining = st.budget - len(st.emitted)
+        cap_tokens = self.kv.max_blocks_per_slot * self.kv.block_size
+        k = min(self.spec_k, remaining - 1,
+                cap_tokens - int(self.kv.lengths[slot]) - 1)
+        if k <= 0:
+            return []
+        history = [int(t) for t in st.prompt] + st.emitted
+        return propose_draft(history, k, max_ngram=self.spec_ngram)
+
     def prepare_chunk(self, prefill_chunk: int, decode_cap: int):
         """Plan the next device chunk under on-demand block growth.
 
         Grows each active slot (oldest rid first) to cover the positions
         the chunk will write; when the pool runs dry, preempts a victim
         (see :meth:`_pick_victim`) and replans.  Returns
-        ``("prefill", None)`` or ``("decode", n_steps)``, or None when no
-        slot is active."""
+        ``("prefill", None)``, ``("verify", None)`` or
+        ``("decode", n_steps)``, or None when no slot is active.
+
+        With ``spec_k > 0`` and no prompt tokens pending, each decoding
+        slot gets a prompt-lookup draft; if ANY slot drafted, the chunk is
+        a VERIFY chunk — drafting slots feed ``1 + len(draft)`` tokens,
+        non-drafting slots ride along as plain 1-token feedback rows (the
+        same mixed planning that lets decode ride prefill chunks).  With
+        no drafts anywhere the multi-step decode chunk is strictly better
+        and is planned as before.  Drafts live only in ``_SlotState.draft``
+        until :meth:`observe_verify` accepts them, so a preemption landing
+        mid-plan (pool-dry growth below) requeues prompt+emitted ONLY —
+        draft tokens never leak into a replayed prompt."""
         while True:
             active = sorted((st.rid, slot)
                             for slot, st in enumerate(self._slots)
@@ -417,19 +467,39 @@ class Scheduler:
             if not active:
                 return None
             prefill = self.prefill_pending
+            verify = False
             targets = {}
             if prefill:
                 for _, slot in active:
                     st = self._slots[slot]
+                    st.draft = []
                     rem = st.prompt.size - st.fed
                     # slots already decoding ride along as 1-token feedback
                     # rows (no decode stall behind another slot's prompt)
                     n = min(prefill_chunk, rem) if rem > 0 else 1
                     targets[slot] = int(self.kv.lengths[slot]) + n
             else:
-                n = self.plan_steps(decode_cap)
-                for _, slot in active:
-                    targets[slot] = int(self.kv.lengths[slot]) + n
+                if self.spec_k > 0:
+                    for _, slot in active:
+                        st = self._slots[slot]
+                        st.draft = self._draft(slot)
+                        verify = verify or bool(st.draft)
+                if verify:
+                    for _, slot in active:
+                        st = self._slots[slot]
+                        targets[slot] = (int(self.kv.lengths[slot])
+                                         + 1 + len(st.draft))
+                else:
+                    # no proposals this round: plain decode, but with spec
+                    # enabled keep the chunk short — drafts are recomputed
+                    # only at chunk boundaries, and a full-budget chunk
+                    # would never give the drafter a second look at the
+                    # (by then repetitive) history
+                    cap = (min(decode_cap, self.spec_k + 1)
+                           if self.spec_k > 0 else decode_cap)
+                    n = self.plan_steps(cap)
+                    for _, slot in active:
+                        targets[slot] = int(self.kv.lengths[slot]) + n
             preempted = False
             for _, slot in active:           # oldest request claims first
                 if self._slots[slot] is None:
@@ -448,7 +518,9 @@ class Scheduler:
                     if victim == slot:
                         break                # self-preempted; replan
             if not preempted:
-                return ("prefill", None) if prefill else ("decode", n)
+                if prefill:
+                    return ("prefill", None)
+                return ("verify", None) if verify else ("decode", n)
 
     # ---- prefill chunks ----------------------------------------------------
     def prefill_arrays(self, width: int):
@@ -503,6 +575,91 @@ class Scheduler:
                     self._finish(slot)
                 events.append((rid, [tok], done))
         self.prefill_dispatches += 1
+        return events
+
+    # ---- verify chunks (speculative decoding) ------------------------------
+    # A verify chunk is a prefill-shaped dispatch over DECODING slots: each
+    # slot feeds its pending feedback token plus its draft, the model scores
+    # the whole chunk causally in ONE evaluation (bitwise-equal to feeding
+    # the same tokens one decode step at a time — the chunked-prefill
+    # property), and the greedy samples at every position come back so
+    # observe_verify can accept the longest matching run.
+
+    def verify_arrays(self, width: int):
+        """Per-slot token chunks for one verify dispatch: ``tokens``
+        (K, width) int32 padded, ``n_new`` (K,) valid counts.  Row ``i``
+        feeds ``[next_token, draft...]`` — a draft-less slot is exactly a
+        1-token decode feedback row.  ``width`` must cover ``1 + spec_k``
+        (fixed per stream so the verify program compiles once)."""
+        K = self.kv.num_slots
+        out = {"tokens": np.zeros((K, width), np.int32),
+               "n_new": np.zeros((K,), np.int32)}
+        for i, st in enumerate(self._slots):
+            if st is None:
+                continue
+            assert st.fed >= st.prompt.size, \
+                f"slot {i} entered a verify chunk mid-prefill"
+            n = 1 + len(st.draft)
+            assert n <= width, (n, width)
+            out["tokens"][i, 0] = st.next_token
+            out["tokens"][i, 1:n] = st.draft
+            out["n_new"][i] = n
+        return out
+
+    def observe_verify(self, n_new: np.ndarray, greedy: np.ndarray,
+                       eos_id: Optional[int] = None
+                       ) -> List[Tuple[int, List[int], bool]]:
+        """Consume one verify dispatch: ``greedy[slot, t]`` is the model's
+        greedy sample after feeding the slot's chunk tokens up to and
+        including position ``t``.  Accepts the longest run where each
+        drafted token equals the PREVIOUS position's greedy sample (the
+        token non-speculative decoding would have fed), emitting one
+        greedy token per accepted position plus the bonus sample at the
+        last accepted one — bitwise-identical to non-speculative greedy
+        decoding.  The K/V written for rejected draft positions is rolled
+        back (:meth:`PagedKVCache.rollback`), freeing over-allocated tail
+        blocks.  Returns (rid, new_tokens, finished) events."""
+        events = []
+        for slot, st in enumerate(self._slots):
+            if st is None or n_new[slot] == 0:
+                continue
+            k = int(n_new[slot]) - 1
+            draft = st.draft
+            assert len(draft) == k, (len(draft), k)
+            g = [int(greedy[slot, t]) for t in range(k + 1)]
+            a = 0
+            while a < k and draft[a] == g[a]:
+                a += 1
+            # chunk fed [next_token, draft...]: advance the cache through
+            # every written position (sealing with the true written ids),
+            # then roll back past the first mismatch — rejected positions
+            # leave lengths, tables, digests and pending as if never fed
+            pre = int(self.kv.lengths[slot])
+            self.kv.advance(slot, 1 + k,
+                            tokens=[st.next_token] + list(draft))
+            self.rollback_blocks += self.kv.rollback(slot, pre + 1 + a)
+            st.fed += 1 + a
+            st.draft = []
+            self.drafted_tokens += k
+            self.accepted_tokens += a
+            self.rollback_tokens += k - a
+            new_toks: List[int] = []
+            done = False
+            for tok in g[:a + 1]:            # g[i] emits after accepting i
+                st.emitted.append(tok)
+                new_toks.append(tok)
+                if (len(st.emitted) >= st.budget
+                        or (eos_id is not None and tok == eos_id)):
+                    done = True
+                    break
+            if done:
+                rid = st.rid
+                self._finish(slot)
+                events.append((rid, new_toks, True))
+            else:
+                st.next_token = new_toks[-1]
+                events.append((st.rid, new_toks, False))
+        self.verify_dispatches += 1
         return events
 
     # ---- decode chunks -----------------------------------------------------

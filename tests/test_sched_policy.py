@@ -338,3 +338,68 @@ def test_engine_priority_classes_reorder_and_report(f32_engine):
             <= st["classes"]["batch"]["wait_p99"])
     assert finish_order(
         dataclasses.replace(sc, sched_policy="fcfs")) == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Registry-level default priorities
+# ---------------------------------------------------------------------------
+
+def test_registry_default_priority_roundtrip():
+    """register(default_priority=) sticks, None keeps the previous value
+    (a weight refresh must not demote a tenant's SLA), unknown classes are
+    rejected, and eviction clears the default."""
+    import jax
+    from conftest import tiny_dense
+    from repro.core.lora import init_adapters
+    from repro.serving.registry import AdapterRegistry
+
+    cfg = tiny_dense()
+    ad = init_adapters(jax.random.PRNGKey(0), cfg)
+    reg = AdapterRegistry(cfg, capacity=2)
+    assert reg.default_priority("c0") is None
+    reg.register("c0", ad, default_priority="interactive")
+    assert reg.default_priority("c0") == "interactive"
+    reg.register("c0", ad)                         # refresh: default kept
+    assert reg.default_priority("c0") == "interactive"
+    reg.register("c0", ad, default_priority="background")
+    assert reg.default_priority("c0") == "background"
+    with pytest.raises(ValueError, match="default_priority"):
+        reg.register("c1", ad, default_priority="turbo")
+    reg.evict("c0")
+    assert reg.default_priority("c0") is None
+
+
+def test_engine_client_default_priority_explicit_wins(f32_engine):
+    """End-to-end on a contended 1-slot engine: a request WITHOUT a
+    priority inherits its client's registered default (c1 -> interactive,
+    so rid 1 jumps the queue), while an explicit Request.priority
+    overrides the default (rid 2 is c1 but explicitly background, so it
+    finishes last despite its client's interactive default)."""
+    import jax
+    from conftest import tiny_dense
+    from repro.core.lora import init_adapters
+    from repro.models.api import get_model
+    from repro.serving.engine import MultiTenantEngine, Request, ServeConfig
+    from repro.serving.registry import AdapterRegistry
+
+    cfg = tiny_dense(dtype="float32", param_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reg = AdapterRegistry(cfg, capacity=2)
+    reg.register("c0", init_adapters(jax.random.PRNGKey(1), cfg))
+    reg.register("c1", init_adapters(jax.random.PRNGKey(2), cfg),
+                 default_priority="interactive")
+    mt = MultiTenantEngine(model, cfg, params, reg)
+    prompt = _prompt(8) % cfg.vocab_size
+    reqs = [Request("c0", prompt, max_new_tokens=4),          # -> batch
+            Request("c1", prompt[:6], max_new_tokens=4),      # -> interactive
+            Request("c1", prompt[:5], max_new_tokens=4,
+                    priority="background")]                   # explicit wins
+    sc = ServeConfig(batch_size=1, max_new_tokens=4, block_size=4,
+                     num_blocks=24, prefill_chunk=4)
+    order = [rid for rid, _t, fin in mt.generate_stream(reqs, sc) if fin]
+    assert order == [1, 0, 2]
+    st = mt.last_stats
+    assert st["classes"]["interactive"]["admitted"] == 1
+    assert st["classes"]["batch"]["admitted"] == 1
+    assert st["classes"]["background"]["admitted"] == 1

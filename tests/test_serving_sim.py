@@ -55,11 +55,19 @@ def _next_token(ctx: List[int]) -> int:
     return h % VOCAB
 
 
-def _oracle(prompt, budget: int, eos_id: Optional[int]) -> List[int]:
+def _cyclic_token(ctx: List[int]) -> int:
+    """Eventually-periodic host model: emissions cycle 0..6, so a
+    prompt-lookup drafter converges to near-perfect acceptance — the
+    high-acceptance regime for speculative decoding."""
+    return (int(ctx[-1]) + 1) % 7
+
+
+def _oracle(prompt, budget: int, eos_id: Optional[int],
+            token_fn=_next_token) -> List[int]:
     ctx = [int(t) for t in prompt]
     out: List[int] = []
     for _ in range(budget):
-        tok = _next_token(ctx)
+        tok = token_fn(ctx)
         out.append(tok)
         ctx.append(tok)
         if eos_id is not None and tok == eos_id:
@@ -89,6 +97,8 @@ class Workload:
     victim: Optional[str] = None                  # None = policy default;
     #                                               "newest" isolates victim
     #                                               choice from admission
+    spec_k: int = 0                               # >0: draft-then-verify
+    spec_ngram: int = 3
 
     @property
     def max_span(self) -> int:
@@ -123,18 +133,25 @@ def gen_workload(rng: np.random.Generator) -> Workload:
 # The simulator: the engine loop with a host model
 # ---------------------------------------------------------------------------
 
-def run_sim(w: Workload) -> Scheduler:
+def run_sim(w: Workload, token_fn=_next_token) -> Scheduler:
     """Drive Scheduler+PagedKVCache exactly as ``generate_stream`` does and
     verify oracle parity, streaming consistency and block invariants.
     With ``w.prefix_cache`` the pool is content-addressed: admissions may
     skip past a matched prefix, whose cached token ids are verified against
-    the prompt before being trusted as fed context."""
+    the prompt before being trusted as fed context.  With ``w.spec_k``
+    decode rounds become draft-then-verify: a verify plan scores the
+    feedback token + draft per slot in one causal pass (greedy at every
+    position, exactly what the chunked-prefill dispatch returns) and the
+    accepted run extends the context mirror — rejected positions must
+    vanish from the cache via rollback, which the post-chunk invariants
+    and length mirror catch."""
     mbps = blocks_needed(w.max_span, w.block_size)
     kv = PagedKVCache(w.num_slots, w.block_size, w.num_blocks, mbps,
                       prefix_cache=w.prefix_cache)
     sched = Scheduler(kv, policy=w.policy, aging_ticks=w.aging,
                       victim_policy={"newest": newest_victim,
-                                     None: None}[w.victim])
+                                     None: None}[w.victim],
+                      spec_k=w.spec_k, spec_ngram=w.spec_ngram)
     for rid, (cid, prompt, budget) in enumerate(w.requests):
         sched.submit(rid, cid, prompt, budget, scope=cid,
                      priority=w.priority(rid),
@@ -172,9 +189,33 @@ def run_sim(w: Workload) -> Scheduler:
                 if n == 0:
                     continue
                 ctx[s].extend(int(t) for t in arrs["tokens"][s, :n])
-                sampled[s] = _next_token(ctx[s])
+                sampled[s] = token_fn(ctx[s])
             events = sched.observe_prefill(arrs["n_new"], sampled,
                                            eos_id=w.eos_id)
+        elif plan[0] == "verify":
+            width = 1 + w.spec_k
+            arrs = sched.verify_arrays(width)
+            # greedy[s, t]: the model's choice after feeding positions
+            # 0..t of the chunk — one causal pass, like the device dispatch
+            greedy = np.zeros((K, width), np.int32)
+            for s in range(K):
+                n = int(arrs["n_new"][s])
+                if n == 0:
+                    continue
+                probe = list(ctx[s])
+                for t in range(n):
+                    probe.append(int(arrs["tokens"][s, t]))
+                    greedy[s, t] = token_fn(probe)
+            pre_len = {s: int(kv.lengths[s]) for s in range(K)}
+            events = sched.observe_verify(arrs["n_new"], greedy,
+                                          eos_id=w.eos_id)
+            for s in range(K):
+                # surviving slots keep feedback + accepted drafts only;
+                # finished slots were released (mirror resets on re-admit)
+                if int(arrs["n_new"][s]) and sched._slots[s] is not None:
+                    acc = int(kv.lengths[s]) - pre_len[s]
+                    ctx[s].extend(int(arrs["tokens"][s, t])
+                                  for t in range(acc))
         else:
             n = plan[1]
             arr = sched.chunk_arrays()
@@ -184,7 +225,7 @@ def run_sim(w: Workload) -> Scheduler:
                 for s in range(K):
                     if arr["active"][s]:
                         ctx[s].append(int(last[s]))
-                        block[t, s] = _next_token(ctx[s])
+                        block[t, s] = token_fn(ctx[s])
                         last[s] = block[t, s]
             events = sched.observe_chunk(block, eos_id=w.eos_id)
         kv.check_invariants()
@@ -195,7 +236,7 @@ def run_sim(w: Workload) -> Scheduler:
             finish_events[rid] += finished
 
     for rid, (cid, prompt, budget) in enumerate(w.requests):
-        want = _oracle(prompt, budget, w.eos_id)
+        want = _oracle(prompt, budget, w.eos_id, token_fn)
         got = list(sched.results[rid])
         assert got == want, (
             f"rid {rid}: oracle parity broken\n got {got}\nwant {want}")
@@ -477,6 +518,128 @@ def test_prefix_aware_victims_reduce_reprefill():
 
 
 # ---------------------------------------------------------------------------
+# Speculative decoding: draft-verify-rollback through the sim
+# ---------------------------------------------------------------------------
+
+def gen_spec_workload(rng: np.random.Generator) -> Workload:
+    """The speculative-decoding profile: repetitive prompts (tiled motifs
+    plus a fresh tail) — the regime prompt-lookup drafting targets — over
+    the same pool spectrum as :func:`gen_workload`, starvation included."""
+    n_req = int(rng.integers(1, 7))
+    requests = []
+    for _ in range(n_req):
+        motif = rng.integers(0, VOCAB, int(rng.integers(2, 6)))
+        tail = rng.integers(0, VOCAB, int(rng.integers(0, 3)))
+        prompt = np.concatenate(
+            [np.tile(motif, int(rng.integers(2, 5))), tail]).astype(np.int32)
+        requests.append((f"c{int(rng.integers(0, 3))}", prompt,
+                         int(rng.integers(1, 17))))
+    block_size = int(rng.choice([2, 3, 4, 8]))
+    num_slots = int(rng.integers(1, 5))
+    mbps = blocks_needed(max(p.size + b for _, p, b in requests), block_size)
+    extra = int(rng.integers(0, mbps * num_slots + 1))
+    eos_id = int(rng.integers(0, VOCAB)) if rng.random() < 0.3 else None
+    return Workload(requests, num_slots, block_size, 1 + mbps + extra,
+                    prefill_chunk=int(rng.integers(1, 9)),
+                    decode_cap=int(rng.integers(1, 9)), eos_id=eos_id,
+                    spec_k=int(rng.integers(1, 7)))
+
+
+def test_spec_decode_bitwise_parity_sweep():
+    """120 seeded spec workloads: the speculative stream must be BITWISE
+    the non-speculative stream (both also oracle-checked inside run_sim),
+    with the sweep actually exercising drafting, acceptance, rollback and
+    preemption-under-spec."""
+    drafted = accepted = rolled = verifies = preemptions = 0
+    for seed in range(120):
+        rng = np.random.default_rng(40_000 + seed)
+        w = gen_spec_workload(rng)
+        # hash model: drafts mostly REJECT (pseudorandom emissions) — the
+        # rollback-heavy regime; periodic model: drafts mostly ACCEPT —
+        # both must stay bitwise non-speculative
+        fn = _cyclic_token if seed % 3 == 0 else _next_token
+        s_spec = run_sim(w, token_fn=fn)
+        s_base = run_sim(dataclasses.replace(w, spec_k=0), token_fn=fn)
+        for rid in range(len(w.requests)):
+            np.testing.assert_array_equal(s_spec.results[rid],
+                                          s_base.results[rid])
+        drafted += s_spec.drafted_tokens
+        accepted += s_spec.accepted_tokens
+        rolled += s_spec.rollback_tokens
+        verifies += s_spec.verify_dispatches
+        preemptions += s_spec.preemptions
+    assert verifies > 100, f"only {verifies} verify dispatches"
+    assert drafted > 200, f"only {drafted} tokens drafted"
+    assert accepted > 50, f"only {accepted} tokens accepted"
+    assert rolled > 50, f"rollback barely exercised ({rolled} tokens)"
+    assert preemptions > 5, f"only {preemptions} preemptions under spec"
+
+
+def test_spec_decode_starved_pool_conserves_tokens():
+    """Preemption mid-speculation: a starved pool (drafts in flight when
+    victims release) must emit exactly what a roomy pool emits — the
+    requeued prompt is prompt+emitted ONLY, drafts never leak."""
+    checked = 0
+    for seed in range(40):
+        rng = np.random.default_rng(50_000 + seed)
+        w = gen_spec_workload(rng)
+        if len(w.requests) < 2:
+            continue
+        mbps = blocks_needed(w.max_span, w.block_size)
+        roomy = dataclasses.replace(w, num_blocks=1 + mbps * w.num_slots)
+        starved = dataclasses.replace(w, num_blocks=1 + mbps)
+        s_roomy = run_sim(roomy)
+        s_starved = run_sim(starved)
+        for rid in range(len(w.requests)):
+            np.testing.assert_array_equal(s_roomy.results[rid],
+                                          s_starved.results[rid])
+        checked += s_starved.preemptions
+    assert checked > 0, "starved spec pools never triggered preemption"
+
+
+def test_spec_decode_with_prefix_cache_parity():
+    """Spec decoding over a warm content-addressed pool: admissions skip
+    matched prefixes AND verify rounds seal/rollback blocks on the same
+    hash chains — streams stay bitwise non-speculative."""
+    hit_tokens = verifies = 0
+    for seed in range(40):
+        rng = np.random.default_rng(60_000 + seed)
+        w = gen_shared_prefix_workload(rng)
+        w_spec = dataclasses.replace(w, spec_k=4)
+        s_spec = run_sim(w_spec)
+        s_base = run_sim(w)
+        for rid in range(len(w.requests)):
+            np.testing.assert_array_equal(s_spec.results[rid],
+                                          s_base.results[rid])
+        hit_tokens += s_spec.prefix_hit_tokens
+        verifies += s_spec.verify_dispatches
+    assert hit_tokens > 100, f"only {hit_tokens} cached tokens under spec"
+    assert verifies > 50, f"only {verifies} verify dispatches"
+
+
+def test_spec_decode_high_acceptance_on_periodic_model():
+    """An eventually-periodic model is the drafter's best case: after
+    warmup every draft matches, acceptance dominates, and most emitted
+    tokens ride verify dispatches instead of decode steps."""
+    rng = np.random.default_rng(3)
+    requests = [("c0", (np.arange(8, dtype=np.int32) % 7), 24),
+                ("c1", (np.arange(6, dtype=np.int32) % 7), 20),
+                ("c0", rng.integers(0, 7, 5).astype(np.int32), 16)]
+    mbps = blocks_needed(max(p.size + b for _, p, b in requests), 4)
+    w = Workload(requests, num_slots=2, block_size=4,
+                 num_blocks=1 + 2 * mbps, prefill_chunk=4, decode_cap=8,
+                 eos_id=None, spec_k=4)
+    sched = run_sim(w, token_fn=_cyclic_token)
+    base = run_sim(dataclasses.replace(w, spec_k=0), token_fn=_cyclic_token)
+    for rid in range(len(requests)):
+        np.testing.assert_array_equal(sched.results[rid], base.results[rid])
+    rate = sched.accepted_tokens / max(1, sched.drafted_tokens)
+    assert rate > 0.8, f"acceptance only {rate:.2f} on a periodic model"
+    assert sched.accepted_tokens > sched.steps, \
+        "speculation should carry most tokens on a periodic model"
+
+
+# ---------------------------------------------------------------------------
 # hypothesis: same driver, shrinking counterexamples, ci/deep profiles
 # ---------------------------------------------------------------------------
 
@@ -514,7 +677,8 @@ if HAVE_HYPOTHESIS:
                         prefix_cache=draw(st.booleans()),
                         priorities=prios,
                         policy=draw(st.sampled_from(["sla", "fcfs"])),
-                        aging=draw(st.sampled_from([0, 2, 16])))
+                        aging=draw(st.sampled_from([0, 2, 16])),
+                        spec_k=draw(st.sampled_from([0, 0, 2, 4])))
 
     @given(workloads())
     def test_simulation_hypothesis(w):
