@@ -37,6 +37,12 @@ warmup call; CPU interpret-mode numbers — the wins are architectural):
     recorded as the ``smoke`` section — CI's
     ``scripts/check_bench_regression.py`` fails the PR when it regresses
     >25% against ``benchmarks/baselines/serving_smoke.json``.
+  * shard (also default): a slot-saturated request stream served at
+    ``num_shards=1`` vs ``2`` (sharded pool + sharded adapter bank, twice
+    the resident slots riding the same fused dispatches) — bitwise-equal
+    outputs, aggregate tok/s scaling recorded as the ``shard`` section;
+    ``--gate-only`` also times it for the
+    ``benchmarks/baselines/serving_shard.json`` CI gate.
   * ``--block-sweep``: ``kernels/batched_lora.py`` tile-size sweep per
     (n_clients, rank) — groundwork for the ROADMAP autotuning item.
   * ``--smoke``: tiny correctness-only run for CI (serving-path regressions
@@ -66,6 +72,7 @@ from repro.models.api import get_model  # noqa: E402
 from repro.serving.engine import (Engine, MultiTenantEngine, Request,  # noqa: E402
                                   ServeConfig)
 from repro.serving.registry import AdapterRegistry  # noqa: E402
+from repro.serving.sharded import ShardedAdapterRegistry  # noqa: E402
 
 CFG = ModelConfig(
     name="mt-bench", family="dense", n_layers=2, d_model=128, n_heads=4,
@@ -227,6 +234,7 @@ def ragged_section(json_path: str, smoke: bool = False):
     _merge_json(json_path, {
         "workload": {"requests": len(reqs),
                      "useful_tokens": useful,
+                     "num_shards": sc_cont.num_shards,
                      "prompt_lens": sorted({len(r.prompt) for r in reqs}),
                      "budgets": sorted({r.max_new_tokens for r in reqs})},
         "fixed_batch": {"us_per_call": us_fixed, "tok_per_s": tps_fixed,
@@ -295,6 +303,7 @@ def prefill_section(json_path: str, smoke: bool = False):
         "workload": {"requests": len(reqs), "prompt_tokens": prompt_tokens,
                      "prompt_lens": sorted(plens), "budget": 4,
                      "slots": sc_chunk.batch_size,
+                     "num_shards": sc_chunk.num_shards,
                      "block_size": sc_chunk.block_size},
         "per_token": {"prefill_dispatches": st_t["prefill_dispatches"],
                       "us_per_call": us_t},
@@ -373,6 +382,7 @@ def prefix_cache_section(json_path: str, smoke: bool = False):
         "workload": {"requests": len(reqs), "prefix_len": 24,
                      "suffix_len": 8, "budget": 4, "clients": 2,
                      "slots": sc_cold.batch_size,
+                     "num_shards": sc_cold.num_shards,
                      "block_size": sc_cold.block_size},
         "cold": {"prefilled_tokens": prefilled_cold,
                  "prefill_dispatches": st_cold["prefill_dispatches"],
@@ -453,6 +463,7 @@ def sla_section(json_path: str, smoke: bool = False):
     _merge_json(json_path, {"sla": {
         "workload": {"batch_requests": n_batch, "interactive_requests": 3,
                      "slots": sc.batch_size, "budget_batch": 10,
+                     "num_shards": sc.num_shards,
                      "budget_interactive": 4},
         "interactive_mean_finish_events": {"sla": lat_sla, "fcfs": lat_fcfs},
         "interactive_latency_win": win,
@@ -544,6 +555,7 @@ def spec_section(json_path: str, smoke: bool = False):
     _merge_json(json_path, {"spec": {
         "workload": {"requests": n_req, "prompt_len": 24, "budget": 40,
                      "useful_tokens": useful, "slots": sc.batch_size,
+                     "num_shards": sc.num_shards,
                      "block_size": sc.block_size},
         "tok_per_s": tps_spec, "base_tok_per_s": tps_base,
         "us_per_call": us_spec, "base_us_per_call": us_base,
@@ -577,7 +589,7 @@ def spec_gate_section(json_path: str):
     _merge_json(json_path, {"spec": {
         "tok_per_s": tps, "us_per_call": us, "useful_tokens": useful,
         "requests": len(reqs), "slots": sc_spec.batch_size,
-        "spec_k": sc_spec.spec_k,
+        "spec_k": sc_spec.spec_k, "num_shards": sc_spec.num_shards,
         "note": "speculative-decoding smoke throughput; gated by "
                 "scripts/check_bench_regression.py in CI",
     }})
@@ -611,10 +623,137 @@ def smoke_gate_section(json_path: str):
     _merge_json(json_path, {"smoke": {
         "tok_per_s": tps, "us_per_call": us, "useful_tokens": useful,
         "requests": len(reqs), "slots": sc.batch_size,
+        "num_shards": sc.num_shards,
         "note": "continuous-batching smoke throughput; gated by "
                 "scripts/check_bench_regression.py in CI",
     }})
     print(f"# wrote {json_path} (smoke section)")
+
+
+# ---------------------------------------------------------------------------
+# Sharded serving: aggregate throughput scaling vs shard count
+# ---------------------------------------------------------------------------
+
+# The shard section's own config: the scaling it measures is DISPATCH
+# amortization (extra shards ride the same fused rounds), so the model is
+# kept small enough that per-dispatch overhead — not per-row FLOPs — is
+# the serving bottleneck (the regime of latency-mode online serving).
+SHARD_CFG = dataclasses.replace(CFG, name="mt-shard", d_model=64, d_ff=128)
+
+
+def _shard_setup():
+    """Engine over a 2-way ShardedAdapterRegistry (4 tenants resident, 2
+    homed per shard) — serves both shard counts: at ``num_shards=1`` the
+    engine runs the single-pool path against the same concatenated bank."""
+    model = get_model(SHARD_CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    reg = ShardedAdapterRegistry(SHARD_CFG, capacity=8, num_shards=2)
+    for i in range(4):
+        reg.register(f"c{i}", _adapters(i + 1, SHARD_CFG))
+    return reg, MultiTenantEngine(model, SHARD_CFG, params, reg)
+
+
+def _shard_workload(n_req: int):
+    """Slot-saturated mixed-client stream: many more requests than slots
+    at either shard count, uniform spans so admission waves and
+    completions stay aligned (rounds halve exactly at 2 shards)."""
+    reqs = []
+    for i in range(n_req):
+        prompt = ((np.arange(8, dtype=np.int32) * 5 + i)
+                  % SHARD_CFG.vocab_size)
+        reqs.append(Request(f"c{i % 4}", prompt, max_new_tokens=12))
+    return reqs
+
+
+def shard_section(json_path: str, smoke: bool = False):
+    """``num_shards=1`` (2 slots) vs ``num_shards=2`` (4 slots, 2 per
+    shard) on a slot-saturated stream in latency-mode serving
+    (``scan_chunk=1``: admission between every token).  Outputs must be
+    bitwise-identical (placement re-orders nothing greedy decoding can
+    see); the win is aggregate tok/s — the second shard's slots ride the
+    SAME fused dispatches, so the dispatch-bound stream completes in half
+    the rounds."""
+    reg, mt = _shard_setup()
+    reqs = _shard_workload(8 if smoke else 16)
+    useful = sum(r.max_new_tokens for r in reqs)
+    sc1 = ServeConfig(batch_size=2, max_new_tokens=12, block_size=8,
+                      scan_chunk=1, num_shards=1)
+    sc2 = dataclasses.replace(sc1, batch_size=4, num_shards=2)
+
+    out1 = mt.generate(reqs, sc1)
+    out2 = mt.generate(reqs, sc2)
+    st2 = dict(mt.last_stats)
+    for a, b in zip(out1, out2):               # parity before trusting times
+        np.testing.assert_array_equal(a, b)
+    assert st2["num_shards"] == 2
+    print(row("shard_placements", 0.0, str(st2["shard_placements"])))
+    if smoke:
+        print(row("shard_smoke_parity", 0.0, "ok"))
+        return
+
+    # Interleave the timed passes so slow machine drift (thermal, noisy
+    # neighbours) hits both configs equally instead of biasing the ratio.
+    import time as _time
+    us1 = us2 = float("inf")
+    for _ in range(7):
+        t0 = _time.perf_counter()
+        mt.generate(reqs, sc1)
+        us1 = min(us1, (_time.perf_counter() - t0) * 1e6)
+        t0 = _time.perf_counter()
+        mt.generate(reqs, sc2)
+        us2 = min(us2, (_time.perf_counter() - t0) * 1e6)
+    tps1 = useful / (us1 / 1e6)
+    tps2 = useful / (us2 / 1e6)
+    scaling = tps2 / tps1
+    print(row("shard_1", us1, f"{tps1:.1f} tok/s, 2 slots"))
+    print(row("shard_2", us2, f"{tps2:.1f} tok/s, 4 slots (2/shard)"))
+    print(row("shard_scaling", 0.0, f"{scaling:.2f}x"))
+    assert scaling > 1.5, \
+        f"2 shards must scale aggregate tok/s >1.5x on a slot-saturated " \
+        f"stream (got {scaling:.2f}x)"
+    _merge_json(json_path, {"shard": {
+        "workload": {"requests": len(reqs), "useful_tokens": useful,
+                     "prompt_len": 8, "budget": 12, "clients": 4,
+                     "scan_chunk": sc1.scan_chunk,
+                     "block_size": sc1.block_size},
+        "num_shards": sc2.num_shards,
+        "one_shard": {"tok_per_s": tps1, "us_per_call": us1,
+                      "slots": sc1.batch_size},
+        "two_shards": {"tok_per_s": tps2, "us_per_call": us2,
+                       "slots": sc2.batch_size,
+                       "placements": st2["shard_placements"]},
+        "tok_per_s": tps2, "scaling": scaling,
+        "resident_tenants": len(reg),
+        "tenants_per_shard": reg.capacity_per_shard,
+        "note": "CPU interpret-mode; bitwise-equal outputs — win = the "
+                "second shard's slots riding the same fused dispatches "
+                "(serving/sharded.py), halving rounds on a dispatch-bound "
+                "stream",
+    }})
+    print(f"# wrote {json_path} (shard section)")
+
+
+def shard_gate_section(json_path: str):
+    """Sharded throughput floor for CI: the 2-shard slot-saturated
+    workload's tok/s, gated against
+    ``benchmarks/baselines/serving_shard.json`` (best-of-5; parity and
+    scaling assertions run in serving-smoke / the full bench)."""
+    _, mt = _shard_setup()
+    reqs = _shard_workload(16)
+    useful = sum(r.max_new_tokens for r in reqs)
+    sc2 = ServeConfig(batch_size=4, max_new_tokens=12, block_size=8,
+                      scan_chunk=1, num_shards=2)
+    us = _best_us(lambda: mt.generate(reqs, sc2))
+    tps = useful / (us / 1e6)
+    print(row("shard_gate", us, f"{tps:.1f} tok/s"))
+    _merge_json(json_path, {"shard": {
+        "tok_per_s": tps, "us_per_call": us, "useful_tokens": useful,
+        "requests": len(reqs), "slots": sc2.batch_size,
+        "num_shards": sc2.num_shards,
+        "note": "2-shard smoke throughput; gated by "
+                "scripts/check_bench_regression.py in CI",
+    }})
+    print(f"# wrote {json_path} (shard gate section)")
 
 
 # ---------------------------------------------------------------------------
@@ -645,6 +784,15 @@ def block_sweep():
         print(row(f"batched_lora_C{C}_r{r}_best", best[1], f"blk={best[0]}"))
 
 
+def _run_section(name: str, fn, *args, **kwargs):
+    """Run one bench section and print its wall time — long CI runs need
+    to show where the minutes went."""
+    import time as _time
+    t0 = _time.perf_counter()
+    fn(*args, **kwargs)
+    print(f"# section {name}: {_time.perf_counter() - t0:.1f}s wall")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -660,27 +808,31 @@ def main(argv=None):
 
     print("name,us_per_call,derived")
     if args.block_sweep:
-        block_sweep()
+        _run_section("block_sweep", block_sweep)
         return
     if args.gate_only:
-        smoke_gate_section(args.json)
-        spec_gate_section(args.json)
+        _run_section("smoke_gate", smoke_gate_section, args.json)
+        _run_section("spec_gate", spec_gate_section, args.json)
+        _run_section("shard_gate", shard_gate_section, args.json)
         return
     if args.smoke:
-        ragged_section(args.json, smoke=True)
-        prefill_section(args.json, smoke=True)
-        prefix_cache_section(args.json, smoke=True)
-        sla_section(args.json, smoke=True)
-        spec_section(args.json, smoke=True)
-        smoke_gate_section(args.json)
+        _run_section("ragged", ragged_section, args.json, smoke=True)
+        _run_section("prefill", prefill_section, args.json, smoke=True)
+        _run_section("prefix_cache", prefix_cache_section, args.json,
+                     smoke=True)
+        _run_section("sla", sla_section, args.json, smoke=True)
+        _run_section("spec", spec_section, args.json, smoke=True)
+        _run_section("shard", shard_section, args.json, smoke=True)
+        _run_section("smoke_gate", smoke_gate_section, args.json)
         return
-    fixed_shape_sections()
-    ragged_section(args.json)
-    prefill_section(args.json)
-    prefix_cache_section(args.json)
-    sla_section(args.json)
-    spec_section(args.json)
-    smoke_gate_section(args.json)
+    _run_section("fixed_shape", fixed_shape_sections)
+    _run_section("ragged", ragged_section, args.json)
+    _run_section("prefill", prefill_section, args.json)
+    _run_section("prefix_cache", prefix_cache_section, args.json)
+    _run_section("sla", sla_section, args.json)
+    _run_section("spec", spec_section, args.json)
+    _run_section("shard", shard_section, args.json)
+    _run_section("smoke_gate", smoke_gate_section, args.json)
 
 
 if __name__ == "__main__":

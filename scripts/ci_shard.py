@@ -29,6 +29,7 @@ WEIGHTS = {
     "tests/test_serving_sim.py": 95,
     "tests/test_continuous.py": 73,
     "tests/test_sched_policy.py": 40,
+    "tests/test_sharded_serving.py": 22,
     "tests/test_spec_decode.py": 35,
     "tests/test_multitenant.py": 37,
     "tests/test_fdlora.py": 33,

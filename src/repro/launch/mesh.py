@@ -24,16 +24,35 @@ def _mesh_kwargs(n):
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    devices = jax.devices()[: 512 if multi_pod else 256]
+    need = 512 if multi_pod else 256
+    devices = jax.devices()
+    if len(devices) < need:
+        raise ValueError(
+            f"make_production_mesh(multi_pod={multi_pod}) needs {need} "
+            f"devices, found {len(devices)}; use make_host_mesh() for "
+            f"local runs")
     import numpy as np
     return jax.sharding.Mesh(
-        np.asarray(devices).reshape(shape), axes, **_mesh_kwargs(len(axes)))
+        np.asarray(devices[:need]).reshape(shape), axes,
+        **_mesh_kwargs(len(axes)))
 
 
 def make_host_mesh(model: int = 1):
-    """Tiny mesh over the real local devices (CPU tests / examples)."""
+    """Tiny mesh over the real local devices (CPU tests / examples).
+
+    ``model`` splits the devices into a ("data", "model") grid; the device
+    count must be divisible by it (force extra host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
     import numpy as np
     n = len(jax.devices())
+    if model < 1:
+        raise ValueError(f"model axis must be >= 1, got {model}")
+    if n % model != 0:
+        raise ValueError(
+            f"make_host_mesh(model={model}): {n} local devices are not "
+            f"divisible by the model axis; force a compatible count with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count")
     return jax.sharding.Mesh(
         np.asarray(jax.devices()).reshape(n // model, model),
         ("data", "model"), **_mesh_kwargs(2))

@@ -32,6 +32,7 @@ from repro.models.api import get_model
 from repro.serving.engine import (Engine, MultiTenantEngine, Request,
                                   ServeConfig)
 from repro.serving.registry import AdapterRegistry
+from repro.serving.sharded import ShardedAdapterRegistry
 from repro.training.checkpoint import load_checkpoint
 
 
@@ -84,6 +85,11 @@ def main(argv=None):
     ap.add_argument("--spec-k", type=int, default=4,
                     help="with --spec-decode: max drafted tokens per slot "
                          "per verify round")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="continuous mode: partition the paged KV pool and "
+                         "adapter bank into N shards with placement-aware "
+                         "admission (slots and blocks split evenly; outputs "
+                         "stay bitwise-identical to --shards 1)")
     ap.add_argument("--paged-backend", default="jnp",
                     choices=["jnp", "pallas"],
                     help="continuous mode: paged-attention implementation — "
@@ -115,7 +121,12 @@ def main(argv=None):
                              "with --adapters/--dual")
         # FDLoRA end state: every client registered one Eq.7-fused adapter;
         # a single engine serves a batch that mixes all of them.
-        registry = AdapterRegistry(cfg, capacity=args.tenants)
+        if args.shards > 1:
+            cap = -(-args.tenants // args.shards) * args.shards
+            registry = ShardedAdapterRegistry(cfg, capacity=cap,
+                                              num_shards=args.shards)
+        else:
+            registry = AdapterRegistry(cfg, capacity=args.tenants)
         for i in range(args.tenants):
             ad_p = init_adapters(jax.random.PRNGKey(10 + 2 * i), cfg)
             ad_s = init_adapters(jax.random.PRNGKey(11 + 2 * i), cfg)
@@ -133,6 +144,7 @@ def main(argv=None):
             sc.paged_backend = args.paged_backend
             sc.spec_decode = args.spec_decode
             sc.spec_k = args.spec_k
+            sc.num_shards = args.shards
             mix = [c.strip() for c in args.priority_mix.split(",")
                    if c.strip()]
             reqs = [Request(f"client{i % args.tenants}",
@@ -163,6 +175,10 @@ def main(argv=None):
                   f"{stats['decode_dispatches']} decode dispatches, "
                   f"{stats['preemptions']} preemptions "
                   f"[{stats['sched_policy']}, backend={sc.paged_backend}]")
+            if args.shards > 1:
+                print(f"  {args.shards} shards: placements "
+                      f"{stats['shard_placements']} "
+                      f"(prefix-affinity > adapter home > least-loaded)")
             if args.spec_decode:
                 print(f"  spec decode (k={sc.spec_k}): "
                       f"{stats['accepted_tokens']}/{stats['drafted_tokens']} "

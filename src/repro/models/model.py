@@ -343,6 +343,11 @@ def _cached_scan(params: Params, cache: Params, tokens: jnp.ndarray,
     x = params["embed"].astype(dtype)[tokens]
     if cfg.family == "dense" and cfg.tie_embeddings:
         x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    # serving: batch rows (slots) are data-parallel over the mesh; the
+    # sharded engine keeps slots shard-contiguous, so partitioning the
+    # fused batch axis here lands each KV shard's rows on its devices.
+    # No-op when tracing without a mesh (the single-device bitwise path).
+    x = L.maybe_shard(x, P("data", None, None))
 
     block_names = _block_names(cfg)
     ad_blocks = (adapters or {}).get("blocks", {})

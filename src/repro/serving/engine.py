@@ -25,6 +25,7 @@ equal-shape greedy requests produce bit-identical tokens on both.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Iterator, List, Optional, Sequence, Tuple
 
@@ -36,6 +37,7 @@ from repro.core.lora import lora_scale
 from repro.serving.kv_cache import PagedKVCache, blocks_needed, reset_slot
 from repro.serving.registry import AdapterRegistry
 from repro.serving.scheduler import PRIORITY_CLASSES, Scheduler
+from repro.serving.sharded import ShardedPagedKVCache, ShardedScheduler
 
 Params = Any
 
@@ -88,6 +90,21 @@ class ServeConfig:
     spec_k: int = 4                  # max drafted tokens per slot per round
     spec_ngram: int = 3              # longest history n-gram the drafter
     #                                  matches (see serving/spec_decode.py)
+    num_shards: int = 1              # partition the paged block pool +
+    #                                  request slots into this many shards
+    #                                  (serving/sharded.py): per-shard free
+    #                                  lists, seal chains and preemption,
+    #                                  placement-aware admission, one fused
+    #                                  dispatch per round.  1 (default) is
+    #                                  the single-pool path, bit-identical
+    #                                  to pre-shard behaviour.
+    mesh: Any = None                 # optional jax.sharding.Mesh entered
+    #                                  around device dispatches: activates
+    #                                  the "data"-axis sharding constraint
+    #                                  on the fused batch (slots are shard-
+    #                                  contiguous, so shard boundaries land
+    #                                  on device boundaries).  None = no
+    #                                  mesh (single device, the default).
 
 
 @dataclasses.dataclass
@@ -309,13 +326,19 @@ class MultiTenantEngine(_EngineBase):
         skip prefill.  A geometry change or a stream abandoned mid-flight
         drops the warm state and starts cold (``last_stats
         ['prefix_pool_reused']`` says which happened)."""
-        key = (num_slots, sc.block_size, num_blocks, blocks_per)
+        key = (num_slots, sc.block_size, num_blocks, blocks_per,
+               sc.num_shards)
         if sc.prefix_cache:
             warm, self._warm = self._warm, None   # taken; restored at drain
             if warm is not None and warm[0] == key and warm[1].idle:
                 return warm[1], warm[2], True
-        kv = PagedKVCache(num_slots, sc.block_size, num_blocks, blocks_per,
-                          prefix_cache=sc.prefix_cache)
+        if sc.num_shards > 1:
+            kv: Any = ShardedPagedKVCache(
+                sc.num_shards, num_slots, sc.block_size, num_blocks,
+                blocks_per, prefix_cache=sc.prefix_cache)
+        else:
+            kv = PagedKVCache(num_slots, sc.block_size, num_blocks,
+                              blocks_per, prefix_cache=sc.prefix_cache)
         cache = self.model.init_paged_decode_cache(num_slots, num_blocks,
                                                    sc.block_size)
         if sc.prefix_cache or sc.spec_decode:
@@ -367,6 +390,12 @@ class MultiTenantEngine(_EngineBase):
             if sc.spec_k < 1:
                 raise ValueError(f"spec_decode needs spec_k >= 1, "
                                  f"got {sc.spec_k}")
+        if sc.num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {sc.num_shards}")
+        if sc.num_shards > 1 and sc.batch_size % sc.num_shards != 0:
+            raise ValueError(
+                f"batch_size {sc.batch_size} not divisible by "
+                f"{sc.num_shards} shards (slots split evenly)")
         prompts = [np.asarray(r.prompt, np.int32).reshape(-1)
                    for r in requests]
         budgets = [sc.max_new_tokens if r.max_new_tokens is None
@@ -384,16 +413,30 @@ class MultiTenantEngine(_EngineBase):
             blocks_per = sc.max_blocks_per_slot or (num_blocks - 1)
         else:
             num_slots = max(1, min(sc.batch_size, len(requests)))
+            if sc.num_shards > 1:      # equal per-shard slot counts
+                num_slots = (-(-num_slots // sc.num_shards) * sc.num_shards)
             blocks_per = (sc.max_blocks_per_slot
                           or blocks_needed(max_span, sc.block_size))
             num_blocks = sc.num_blocks or (1 + num_slots * blocks_per)
+        if sc.num_shards > 1 and (num_blocks - 1) % sc.num_shards != 0:
+            raise ValueError(
+                f"allocatable blocks {num_blocks - 1} not divisible by "
+                f"{sc.num_shards} shards (set num_blocks = 1 + "
+                f"{sc.num_shards}*k)")
         kv, cache, reused = self._paged_pool(num_slots, num_blocks,
                                              blocks_per, sc)
         evicted0 = kv.evicted_cached   # pool-lifetime counter; report delta
-        sched = Scheduler(kv, policy=sc.sched_policy,
-                          aging_ticks=sc.sched_aging,
-                          spec_k=sc.spec_k if sc.spec_decode else 0,
-                          spec_ngram=sc.spec_ngram)
+        if sc.num_shards > 1:
+            sched: Any = ShardedScheduler(
+                kv, registry=self.registry, policy=sc.sched_policy,
+                aging_ticks=sc.sched_aging,
+                spec_k=sc.spec_k if sc.spec_decode else 0,
+                spec_ngram=sc.spec_ngram)
+        else:
+            sched = Scheduler(kv, policy=sc.sched_policy,
+                              aging_ticks=sc.sched_aging,
+                              spec_k=sc.spec_k if sc.spec_decode else 0,
+                              spec_ngram=sc.spec_ngram)
         for rid, (r, p, b) in enumerate(zip(requests, prompts, budgets)):
             # cached K/V depends on the adapter: scope hits by client AND
             # by the registry's version of its weights (re-registration
@@ -421,6 +464,11 @@ class MultiTenantEngine(_EngineBase):
         # EOS can end a row long before its budget; keep chunks short so its
         # slot frees (and admits the queue head) at the next boundary.
         cap = min(sc.scan_chunk, 8) if sc.eos_id is not None else sc.scan_chunk
+        # with a mesh, dispatches trace under it so the "data"-axis sharding
+        # constraints in models/layers.py bind the fused batch to devices;
+        # without one the constraints no-op (single-device bitwise path)
+        mesh_scope = (sc.mesh if sc.mesh is not None
+                      else contextlib.nullcontext())
         while sched.has_work:
             for slot, cid in sched.admit():
                 ids[slot] = self.registry.acquire(cid)
@@ -432,32 +480,35 @@ class MultiTenantEngine(_EngineBase):
             rng, sub = jax.random.split(rng)
             if plan[0] == "prefill":
                 arrs = sched.prefill_arrays(T)
-                sampled, cache = self._prefill_chunk(
-                    self.params, bank, jnp.asarray(ids), cache,
-                    jnp.asarray(arrs["tokens"]), lens,
-                    jnp.asarray(arrs["n_new"]), bt, sub, sc.temperature,
-                    backend=sc.paged_backend)
+                with mesh_scope:
+                    sampled, cache = self._prefill_chunk(
+                        self.params, bank, jnp.asarray(ids), cache,
+                        jnp.asarray(arrs["tokens"]), lens,
+                        jnp.asarray(arrs["n_new"]), bt, sub, sc.temperature,
+                        backend=sc.paged_backend)
                 events = sched.observe_prefill(arrs["n_new"],
                                                np.asarray(sampled),
                                                eos_id=sc.eos_id)
             elif plan[0] == "verify":
                 arrs = sched.verify_arrays(Tv)
-                greedy, cache = self._verify_chunk(
-                    self.params, bank, jnp.asarray(ids), cache,
-                    jnp.asarray(arrs["tokens"]), lens,
-                    jnp.asarray(arrs["n_new"]), bt,
-                    backend=sc.paged_backend)
+                with mesh_scope:
+                    greedy, cache = self._verify_chunk(
+                        self.params, bank, jnp.asarray(ids), cache,
+                        jnp.asarray(arrs["tokens"]), lens,
+                        jnp.asarray(arrs["n_new"]), bt,
+                        backend=sc.paged_backend)
                 events = sched.observe_verify(arrs["n_new"],
                                               np.asarray(greedy),
                                               eos_id=sc.eos_id)
             else:
                 n = plan[1]
                 st = sched.chunk_arrays()
-                out, cache = self._decode_chunk(
-                    self.params, bank, jnp.asarray(ids), cache,
-                    jnp.asarray(st["last"]), jnp.asarray(st["active"]),
-                    lens, bt, jnp.int32(n), sub, sc.temperature,
-                    chunk_cap=cap, backend=sc.paged_backend)
+                with mesh_scope:
+                    out, cache = self._decode_chunk(
+                        self.params, bank, jnp.asarray(ids), cache,
+                        jnp.asarray(st["last"]), jnp.asarray(st["active"]),
+                        lens, bt, jnp.int32(n), sub, sc.temperature,
+                        chunk_cap=cap, backend=sc.paged_backend)
                 events = sched.observe_chunk(np.asarray(out)[:n],
                                              eos_id=sc.eos_id)
             yield from events
@@ -491,13 +542,17 @@ class MultiTenantEngine(_EngineBase):
                            "prefix_evictions": kv.evicted_cached - evicted0,
                            "prefix_pool_reused": reused,
                            "sched_policy": sc.sched_policy,
+                           "num_shards": sc.num_shards,
                            # queue waits in admission rounds (ticks), by class
                            "classes": classes,
                            "victim_sealed_fraction_mean": (
                                float(np.mean(sched.victim_sealed_fractions))
                                if sched.victim_sealed_fractions else 0.0)}
+        if sc.num_shards > 1:
+            self.last_stats["shard_placements"] = dict(sched.placed)
         if sc.prefix_cache:
-            key = (num_slots, sc.block_size, num_blocks, blocks_per)
+            key = (num_slots, sc.block_size, num_blocks, blocks_per,
+                   sc.num_shards)
             self._warm = (key, kv, cache)
 
     def generate(self, requests: Sequence[Request],

@@ -94,6 +94,9 @@ class VictimInfo:
     #                               (refcount-1; co-owned blocks yield 0)
     prompt_len: int
     fed: int
+    deadline: Optional[float] = None  # the request's SLA deadline; None =
+    #                               unbounded slack (sorts as +inf: the
+    #                               safest victim among deadlined peers)
 
     @property
     def _cap(self) -> int:
@@ -134,15 +137,23 @@ def sla_victim(cands: List[VictimInfo], short: int = 1) -> int:
     pool is missing (a deviation that still forces a second preemption
     pays twice).  Then take the cheapest such candidate (newest on ties).
     With nothing cached/co-owned no candidate qualifies and this IS
-    newest-first."""
+    newest-first.
+
+    Deadlines refine the within-class pick: the LATEST-deadline candidate
+    (most slack — a deadline-less request counts as infinite slack) is the
+    preferred victim among same-class peers, arrival order breaking exact
+    ties as before.  With no deadlines set every candidate has infinite
+    slack and the policy reduces to the legacy newest-first behaviour."""
     lvl = max(c.level for c in cands)
     pool = [c for c in cands if c.level == lvl]
-    newest = max(pool, key=lambda c: c.seq)
+    slack = (lambda c: math.inf if c.deadline is None else c.deadline)
+    newest = max(pool, key=lambda c: (slack(c), c.seq))
     cheap = [c for c in pool if c.releasable_blocks >= max(1, short)
              and c.guaranteed_cost + c.block_size <= newest.guaranteed_cost]
     if not cheap:
         return newest.slot
-    return min(cheap, key=lambda c: (c.guaranteed_cost, -c.seq)).slot
+    return min(cheap, key=lambda c: (c.guaranteed_cost, -slack(c),
+                                     -c.seq)).slot
 
 
 def newest_victim(cands: List[VictimInfo]) -> int:
@@ -416,7 +427,8 @@ class Scheduler:
                             shared_prefix_tokens=
                             self.kv.shared_prefix_tokens(s),
                             releasable_blocks=self.kv.releasable_blocks(s),
-                            prompt_len=int(st.prompt.size), fed=st.fed)
+                            prompt_len=int(st.prompt.size), fed=st.fed,
+                            deadline=self._meta[st.rid].deadline)
                  for st, s in active if s != protected]
         if not cands:
             return protected             # grower alone; caller raises/replans
@@ -441,7 +453,43 @@ class Scheduler:
         history = [int(t) for t in st.prompt] + st.emitted
         return propose_draft(history, k, max_ngram=self.spec_ngram)
 
-    def prepare_chunk(self, prefill_chunk: int, decode_cap: int):
+    def _decode_cap(self, decode_cap: int) -> int:
+        """With spec enabled keep decode chunks short — drafts are
+        recomputed only at chunk boundaries, and a full-budget chunk would
+        never give the drafter a second look at the (by then repetitive)
+        history."""
+        return (min(decode_cap, self.spec_k + 1) if self.spec_k > 0
+                else decode_cap)
+
+    def preferred_round(self, decode_cap: int):
+        """The round this scheduler would plan next, WITHOUT growing any
+        block table: ``("prefill", None)``, ``("verify", None)``,
+        ``("decode", n_steps)`` or None when no slot is active.  Drafts are
+        computed (and stored on the slots) as a side effect, exactly as the
+        auto path of :meth:`prepare_chunk` would.
+
+        A multi-shard coordinator calls this on every shard, negotiates one
+        global round kind (any prefill wins; else any verify; else decode
+        with the min step count), then forces it back through
+        :meth:`prepare_chunk(kind=..., steps=...)` so the fused dispatch
+        runs one round shape across all shards."""
+        if not self.active_slots:
+            return None
+        if self.prefill_pending:
+            return ("prefill", None)
+        if self.spec_k > 0:
+            verify = False
+            for slot in self.active_slots:
+                st = self._slots[slot]
+                st.draft = self._draft(slot)
+                verify = verify or bool(st.draft)
+            if verify:
+                return ("verify", None)
+        return ("decode", self.plan_steps(self._decode_cap(decode_cap)))
+
+    def prepare_chunk(self, prefill_chunk: int, decode_cap: int,
+                      kind: Optional[str] = None,
+                      steps: Optional[int] = None):
         """Plan the next device chunk under on-demand block growth.
 
         Grows each active slot (oldest rid first) to cover the positions
@@ -459,14 +507,24 @@ class Scheduler:
         and is planned as before.  Drafts live only in ``_SlotState.draft``
         until :meth:`observe_verify` accepts them, so a preemption landing
         mid-plan (pool-dry growth below) requeues prompt+emitted ONLY —
-        draft tokens never leak into a replayed prompt."""
+        draft tokens never leak into a replayed prompt.
+
+        ``kind`` forces the round shape (multi-shard coordination: every
+        shard of a fused dispatch must plan the same kind).  A forced
+        ``"prefill"`` on a shard with no prompt pending plans all-feedback
+        rows; a forced ``"verify"`` with no local drafts plans 1-token
+        rows; a forced ``"decode"`` with ``steps`` runs exactly that many
+        steps (the coordinator passes the min over shards, so no slot
+        overshoots its budget).  ``kind=None`` (single-pool path) is
+        byte-identical to the pre-shard planner."""
         while True:
             active = sorted((st.rid, slot)
                             for slot, st in enumerate(self._slots)
                             if st is not None)
             if not active:
                 return None
-            prefill = self.prefill_pending
+            prefill = (self.prefill_pending if kind is None
+                       else kind == "prefill")
             verify = False
             targets = {}
             if prefill:
@@ -479,25 +537,22 @@ class Scheduler:
                     n = min(prefill_chunk, rem) if rem > 0 else 1
                     targets[slot] = int(self.kv.lengths[slot]) + n
             else:
-                if self.spec_k > 0:
+                if self.spec_k > 0 and kind != "decode":
                     for _, slot in active:
                         st = self._slots[slot]
                         st.draft = self._draft(slot)
                         verify = verify or bool(st.draft)
+                verify = verify or kind == "verify"
                 if verify:
                     for _, slot in active:
                         st = self._slots[slot]
                         targets[slot] = (int(self.kv.lengths[slot])
                                          + 1 + len(st.draft))
                 else:
-                    # no proposals this round: plain decode, but with spec
-                    # enabled keep the chunk short — drafts are recomputed
-                    # only at chunk boundaries, and a full-budget chunk
-                    # would never give the drafter a second look at the
-                    # (by then repetitive) history
-                    cap = (min(decode_cap, self.spec_k + 1)
-                           if self.spec_k > 0 else decode_cap)
-                    n = self.plan_steps(cap)
+                    for _, slot in active:
+                        self._slots[slot].draft = []
+                    n = (steps if steps is not None
+                         else self.plan_steps(self._decode_cap(decode_cap)))
                     for _, slot in active:
                         targets[slot] = int(self.kv.lengths[slot]) + n
             preempted = False

@@ -10,7 +10,7 @@ from repro.configs.registry import (ALL_ARCHS, ASSIGNED_ARCHS,
                                     config_for_shape, get_config,
                                     shape_supported)
 from repro.launch import specs as sp
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
 
 
 def test_registry_covers_assignment():
@@ -61,3 +61,44 @@ def test_decode_inputs():
     ins = sp.decode_inputs(cfg, "decode_32k")
     assert ins["tokens"].shape == (128, 1)
     assert ins["pos"].shape == ()
+
+
+# ---------------------------------------------------------------------------
+# Mesh factories
+# ---------------------------------------------------------------------------
+
+def test_host_mesh_default_shape():
+    n = len(jax.devices())
+    mesh = make_host_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape == {"data": n, "model": 1}
+
+
+def test_host_mesh_model_axis_must_divide_devices():
+    n = len(jax.devices())
+    bad = n + 1  # never divides n (and n+1 > n when n is 1)
+    with pytest.raises(ValueError, match="not divisible by the model axis"):
+        make_host_mesh(model=bad)
+
+
+def test_host_mesh_rejects_nonpositive_model_axis():
+    with pytest.raises(ValueError, match="must be >= 1"):
+        make_host_mesh(model=0)
+
+
+def test_host_mesh_splits_model_axis():
+    n = len(jax.devices())
+    if n % 2 != 0:
+        pytest.skip("needs an even device count "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count)")
+    mesh = make_host_mesh(model=2)
+    assert mesh.shape == {"data": n // 2, "model": 2}
+
+
+def test_production_mesh_needs_real_pod():
+    if len(jax.devices()) >= 256:
+        pytest.skip("real pod attached")
+    with pytest.raises(ValueError, match="use make_host_mesh"):
+        make_production_mesh()
+    with pytest.raises(ValueError, match="needs 512 devices"):
+        make_production_mesh(multi_pod=True)

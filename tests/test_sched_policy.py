@@ -151,6 +151,48 @@ def test_zero_cached_victims_fall_back_to_newest_first():
     assert newest_victim(infos) == 2
 
 
+def test_deadline_breaks_victim_ties_toward_most_slack():
+    """Among same-class candidates the latest deadline (None = infinite
+    slack) marks the safest victim: it anchors the newest-first pick and
+    breaks guaranteed-cost ties among cheap candidates — and with no
+    deadlines set the pick is exactly the legacy newest-first."""
+    def info(slot, seq, deadline=None, shared=0):
+        return VictimInfo(slot=slot, rid=slot, seq=seq, level=1, emitted=0,
+                          context_len=8, block_size=4, sealed_tokens=shared,
+                          sealed_fraction=0.0, shared_prefix_tokens=shared,
+                          releasable_blocks=2, prompt_len=8, fed=8,
+                          deadline=deadline)
+
+    # anchor path (nothing co-owned): latest deadline loses its slot even
+    # though it arrived FIRST — legacy would have taken seq 2
+    assert sla_victim([info(0, 0, deadline=50.0), info(1, 1, deadline=10.0),
+                       info(2, 2, deadline=30.0)]) == 0
+    # a deadline-less peer has infinite slack: preferred over any deadline
+    assert sla_victim([info(1, 1, deadline=10.0), info(2, 2)]) == 2
+    # cheap path: equal guaranteed costs tie-break toward the most slack...
+    pool = [info(0, 0, deadline=100.0, shared=8),
+            info(1, 1, deadline=10.0, shared=8), info(2, 2)]
+    assert sla_victim(pool) == 0
+    # ...and with deadlines stripped, toward the newest (legacy behaviour)
+    pool = [info(0, 0, shared=8), info(1, 1, shared=8), info(2, 2)]
+    assert sla_victim(pool) == 1
+
+
+def test_deadline_guides_scheduler_victim_pick():
+    """Through the real scheduler: the active request with the LATEST
+    deadline is preempted ahead of newer-but-tighter peers (the oldest
+    top-class request stays protected)."""
+    kv, sched = _make(num_slots=3, num_blocks=16, mbps=8)
+    sched.submit(0, "c", _prompt(8), 4, deadline=5.0)
+    sched.submit(1, "c", _prompt(8, 1), 4, deadline=99.0)
+    sched.submit(2, "c", _prompt(8, 2), 4, deadline=50.0)
+    sched.admit()
+    _drain_prefill(sched)
+    slot_of = {st.rid: s for s, st in enumerate(sched._slots)}
+    # rid 0 (oldest, top class) is protected; rid 1 has the most slack
+    assert sched._pick_victim(slot_of[0]) == slot_of[1]
+
+
 def test_oldest_top_class_request_is_never_preempted():
     """The progress bound: the oldest active request of the top class
     present is protected from every pick."""
