@@ -33,6 +33,12 @@ warmup call; CPU interpret-mode numbers — the wins are architectural):
     Appends a ``spec`` section (speedup, acceptance, dispatch counts);
     ``--gate-only`` also times it for the
     ``benchmarks/baselines/serving_spec.json`` CI gate.
+  * quant (also default): equal-HBM paged pools, ``kv_dtype="f32"`` vs
+    ``"int8"`` — greedy-identical streams, the int8 pool holding 1.78x the
+    blocks per byte (>=1.5x concurrent residents at the fixed budget, and
+    never more preemptions on a pool-thrashing stream).  Appends a
+    ``quant`` section; ``--gate-only`` records the deterministic residency
+    number for the ``benchmarks/baselines/serving_quant.json`` CI gate.
   * smoke gate (also default): a fixed small continuous workload's tok/s,
     recorded as the ``smoke`` section — CI's
     ``scripts/check_bench_regression.py`` fails the PR when it regresses
@@ -71,6 +77,7 @@ from repro.kernels.batched_lora import batched_lora_matmul  # noqa: E402
 from repro.models.api import get_model  # noqa: E402
 from repro.serving.engine import (Engine, MultiTenantEngine, Request,  # noqa: E402
                                   ServeConfig)
+from repro.serving.kv_cache import kv_bytes_per_block  # noqa: E402
 from repro.serving.registry import AdapterRegistry  # noqa: E402
 from repro.serving.sharded import ShardedAdapterRegistry  # noqa: E402
 
@@ -757,6 +764,127 @@ def shard_gate_section(json_path: str):
 
 
 # ---------------------------------------------------------------------------
+# Quantized KV pools: concurrent residency per HBM byte (int8 vs f32)
+# ---------------------------------------------------------------------------
+
+def _quant_capacity(block_size: int = 8, span: int = 40):
+    """Static capacity math at a fixed HBM budget: how many requests of
+    ``span`` tokens can hold their whole KV residently, f32 pool vs int8
+    pool of the same byte cost (``kv_bytes_per_block`` prices one block of
+    one layer -- the ratio is layer-count invariant)."""
+    hd = CFG.d_model // CFG.n_heads
+    by_f32 = kv_bytes_per_block(block_size, CFG.n_kv_heads, hd, "f32")
+    by_i8 = kv_bytes_per_block(block_size, CFG.n_kv_heads, hd, "int8")
+    budget = 12 * by_f32                       # a 12-block f32 pool's HBM
+    blocks_f32 = budget // by_f32
+    blocks_i8 = budget // by_i8
+    per_req = -(-span // block_size)
+    return {"block_size": block_size, "span": span,
+            "hbm_budget_bytes_per_layer": budget,
+            "bytes_per_block": {"f32": by_f32, "int8": by_i8},
+            "blocks": {"f32": int(blocks_f32), "int8": int(blocks_i8)},
+            "capacity_ratio": by_f32 / by_i8,
+            "concurrent_residents": {"f32": int(blocks_f32 // per_req),
+                                     "int8": int(blocks_i8 // per_req)}}
+
+
+def quant_section(json_path: str, smoke: bool = False):
+    """``ServeConfig(kv_dtype="int8")``: paged K/V blocks stored int8 with
+    per-(block, position, kv-head) scales — 36 vs 64 bytes per token per
+    kv-head (1.78x blocks per HBM byte).  The quantized path is ERROR-
+    BOUND, not bitwise: tests/test_quant.py pins kernel-level tolerances
+    and greedy-stream equality on the smoke model; on this larger bench
+    model an occasional argmax flip is expected and greedy compounds, so
+    the section asserts structural parity (every request decodes its full
+    budget) and reports token agreement informationally.  The win is
+    residency — at the SAME pool byte budget the int8 engine preempts
+    less (or not at all) on a stream that thrashes the f32 pool."""
+    model, params, ads, mt = _setup(4)
+    reqs = _ragged_workload(4)
+    if smoke:
+        reqs = reqs[:4]
+    cap = _quant_capacity()
+    print(row("quant_bytes_per_block_f32", 0.0,
+              str(cap["bytes_per_block"]["f32"])))
+    print(row("quant_bytes_per_block_int8", 0.0,
+              str(cap["bytes_per_block"]["int8"])))
+    print(row("quant_capacity_ratio", 0.0,
+              f"{cap['capacity_ratio']:.2f}x"))
+    print(row("quant_concurrent_residents", 0.0,
+              f"f32={cap['concurrent_residents']['f32']} "
+              f"int8={cap['concurrent_residents']['int8']}"))
+    assert cap["capacity_ratio"] >= 1.5, \
+        f"int8 pool must hold >=1.5x blocks per HBM byte " \
+        f"(got {cap['capacity_ratio']:.2f}x)"
+
+    # equal-HBM pools (+1 for the scratch block): the f32 pool is sized to
+    # thrash under this stream, the int8 pool gets the blocks the same
+    # bytes buy
+    sc_f32 = ServeConfig(batch_size=4, max_new_tokens=NEW_TOKENS,
+                         block_size=8, num_blocks=cap["blocks"]["f32"] + 1)
+    sc_i8 = dataclasses.replace(sc_f32, kv_dtype="int8",
+                                num_blocks=cap["blocks"]["int8"] + 1)
+    out_f = mt.generate(reqs, sc_f32)
+    st_f = dict(mt.last_stats)
+    out_q = mt.generate(reqs, sc_i8)
+    st_q = dict(mt.last_stats)
+    agree = total = 0
+    for r, a, b in zip(reqs, out_f, out_q):
+        # structural parity: spans (and thus pool pressure) are identical,
+        # so the preemption comparison below is apples-to-apples
+        assert len(a) == len(b) == r.max_new_tokens
+        agree += int((np.asarray(a) == np.asarray(b)).sum())
+        total += len(a)
+    print(row("quant_token_agreement", 0.0, f"{agree / total:.1%}"))
+    print(row("quant_preemptions_f32_pool", 0.0, str(st_f["preemptions"])))
+    print(row("quant_preemptions_int8_pool", 0.0, str(st_q["preemptions"])))
+    assert st_q["preemptions"] <= st_f["preemptions"], \
+        "the int8 pool must not preempt MORE than the f32 pool it " \
+        "out-capacitates at the same HBM budget"
+    if smoke:
+        print(row("quant_smoke_parity", 0.0, "ok"))
+        return
+
+    us_f = _best_us(lambda: mt.generate(reqs, sc_f32))
+    us_q = _best_us(lambda: mt.generate(reqs, sc_i8))
+    useful = sum(r.max_new_tokens for r in reqs)
+    print(row("quant_f32_pool", us_f, f"{useful / (us_f / 1e6):.1f} tok/s"))
+    print(row("quant_int8_pool", us_q, f"{useful / (us_q / 1e6):.1f} tok/s"))
+    _merge_json(json_path, {"quant": {
+        **cap,
+        "workload": {"requests": len(reqs), "useful_tokens": useful,
+                     "slots": sc_f32.batch_size,
+                     "num_shards": sc_f32.num_shards},
+        "preemptions": {"f32": st_f["preemptions"],
+                        "int8": st_q["preemptions"]},
+        "token_agreement": agree / total,
+        "us_per_call": {"f32": us_f, "int8": us_q},
+        "note": "CPU interpret-mode; error-bound (not bitwise) vs f32 — "
+                "smoke-model stream equality pinned in tests/test_quant.py "
+                "— win = 1.78x paged blocks per HBM byte (kernels/quant.py, "
+                "dequant inside the Pallas kernels)",
+    }})
+    print(f"# wrote {json_path} (quant section)")
+
+
+def quant_gate_section(json_path: str):
+    """Residency floor for CI: concurrent int8 residents at the fixed HBM
+    budget, gated against ``benchmarks/baselines/serving_quant.json``.
+    Pure capacity math — deterministic, immune to runner jitter; the
+    parity + preemption assertions run in serving-smoke."""
+    cap = _quant_capacity()
+    print(row("quant_gate", 0.0,
+              f"{cap['concurrent_residents']['int8']} residents "
+              f"({cap['capacity_ratio']:.2f}x blocks/byte)"))
+    _merge_json(json_path, {"quant": {
+        **cap,
+        "note": "int8 KV residency at fixed HBM; gated by "
+                "scripts/check_bench_regression.py in CI",
+    }})
+    print(f"# wrote {json_path} (quant gate section)")
+
+
+# ---------------------------------------------------------------------------
 # Block-size sweep for the batched-LoRA kernel (autotuning groundwork)
 # ---------------------------------------------------------------------------
 
@@ -814,6 +942,7 @@ def main(argv=None):
         _run_section("smoke_gate", smoke_gate_section, args.json)
         _run_section("spec_gate", spec_gate_section, args.json)
         _run_section("shard_gate", shard_gate_section, args.json)
+        _run_section("quant_gate", quant_gate_section, args.json)
         return
     if args.smoke:
         _run_section("ragged", ragged_section, args.json, smoke=True)
@@ -823,6 +952,7 @@ def main(argv=None):
         _run_section("sla", sla_section, args.json, smoke=True)
         _run_section("spec", spec_section, args.json, smoke=True)
         _run_section("shard", shard_section, args.json, smoke=True)
+        _run_section("quant", quant_section, args.json, smoke=True)
         _run_section("smoke_gate", smoke_gate_section, args.json)
         return
     _run_section("fixed_shape", fixed_shape_sections)
@@ -832,6 +962,7 @@ def main(argv=None):
     _run_section("sla", sla_section, args.json)
     _run_section("spec", spec_section, args.json)
     _run_section("shard", shard_section, args.json)
+    _run_section("quant", quant_section, args.json)
     _run_section("smoke_gate", smoke_gate_section, args.json)
 
 

@@ -36,6 +36,7 @@ WEIGHTS = {
     "tests/test_distributed.py": 29,
     "tests/test_kernels.py": 26,
     "tests/test_prefix_cache.py": 26,
+    "tests/test_quant.py": 90,
     "tests/test_training.py": 20,
     "tests/test_launch.py": 4,
     "tests/test_property.py": 4,

@@ -38,8 +38,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, w_ref, oh_ref, a_ref, b_ref, o_ref, acc_ref, zacc_ref, *,
-            scale: float, k_steps: int, n_clients: int):
+def _kernel(x_ref, w_ref, oh_ref, *rest,
+            scale: float, k_steps: int, n_clients: int, quantized: bool):
+    if quantized:
+        # int8 banks ride with one combined per-client scale vector
+        # (s_a[c]·s_b[c], lane-padded): scalar scales commute through the
+        # matmul chain, so dequant collapses to one per-row factor at finish
+        cs_ref, a_ref, b_ref, o_ref, acc_ref, zacc_ref = rest
+    else:
+        a_ref, b_ref, o_ref, acc_ref, zacc_ref = rest
+        cs_ref = None
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -50,7 +59,10 @@ def _kernel(x_ref, w_ref, oh_ref, a_ref, b_ref, o_ref, acc_ref, zacc_ref, *,
     oh = oh_ref[:, :n_clients]                      # (bm, C) fp32 one-hot
     acc_ref[...] += jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
     # rank expansion against ALL resident adapters: (bm, bk) @ (bk, C*r_pad)
-    xa = jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+    a = a_ref[...]
+    if quantized:
+        a = a.astype(x.dtype)       # int8 in [-127, 127] is exact in bf16
+    xa = jnp.dot(x, a, preferred_element_type=jnp.float32)
     m = xa.shape[0]
     # per-row client select (the on-chip gather): (bm, C, r_pad) ⊙ one-hot
     z = jnp.sum(xa.reshape(m, n_clients, -1) * oh[:, :, None], axis=1)
@@ -62,7 +74,15 @@ def _kernel(x_ref, w_ref, oh_ref, a_ref, b_ref, o_ref, acc_ref, zacc_ref, *,
         # inverse trick: scatter z into the row's client column-block so one
         # matmul against the stacked (C*r_pad, bn) B-bank applies B[g[i]]
         zt = (z[:, None, :] * oh[:, :, None]).reshape(m, -1).astype(x.dtype)
-        lora = jnp.dot(zt, b_ref[...], preferred_element_type=jnp.float32)
+        b = b_ref[...]
+        if quantized:
+            b = b.astype(x.dtype)
+        lora = jnp.dot(zt, b, preferred_element_type=jnp.float32)
+        if quantized:
+            # per-row combined dequant scale via the same one-hot select
+            row_scale = jnp.sum(oh * cs_ref[:1, :n_clients], axis=1,
+                                keepdims=True)      # (bm, 1)
+            lora = lora * row_scale
         o_ref[...] = (acc_ref[...] + scale * lora).astype(o_ref.dtype)
 
 
@@ -121,10 +141,17 @@ def _lane_pad(x, mult: int = 128):
 @functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "bk",
                                              "interpret"))
 def batched_lora_matmul(x, w, a, b, adapter_ids, scale: float = 1.0, *,
+                        a_scale=None, b_scale=None,
                         bm: int = 256, bn: int = 256, bk: int = 256,
                         interpret: bool = True):
     """x: (M, K), w: (K, N), a: (C, K, r), b: (C, r, N),
     adapter_ids: (M,) int32 in [0, C) -> (M, N).
+
+    With int8 banks pass ``a_scale``/``b_scale`` ((C,) fp32 per-client
+    quantization scales): the banks stay int8 in HBM/VMEM and the kernel
+    applies one combined ``s_a[g[i]]·s_b[g[i]]`` factor per row at its
+    finish step — scalar scales commute through the LoRA chain, so no
+    dequantized bank is ever materialised.
 
     M, K, N must tile by (bm, bn, bk); r is zero-padded to 128 internally.
     ``interpret=True`` executes on CPU for validation; on TPU pass False.
@@ -132,23 +159,36 @@ def batched_lora_matmul(x, w, a, b, adapter_ids, scale: float = 1.0, *,
     M, K = x.shape
     N = w.shape[1]
     C, _, r = a.shape
+    quantized = a_scale is not None
     r_pad = -(-r // 128) * 128
-    a2, b2 = _bank_2d(a, b, r_pad, x.dtype)
+    a2, b2 = _bank_2d(a, b, r_pad, jnp.int8 if quantized else x.dtype)
     w = w.astype(x.dtype)
     oh = _lane_pad(jax.nn.one_hot(adapter_ids, C, dtype=jnp.float32))
     C_lanes = oh.shape[1]
     k_steps = K // bk
 
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bm, C_lanes), lambda i, j, k: (i, 0)),
+    ]
+    operands = [x, w, oh]
+    if quantized:
+        cs = (a_scale.astype(jnp.float32) * b_scale.astype(jnp.float32))
+        cs2 = _lane_pad(cs[None, :])                # (1, C_lanes)
+        in_specs.append(pl.BlockSpec((1, C_lanes), lambda i, j, k: (0, 0)))
+        operands.append(cs2)
+    in_specs += [
+        pl.BlockSpec((bk, C * r_pad), lambda i, j, k: (k, 0)),
+        pl.BlockSpec((C * r_pad, bn), lambda i, j, k: (0, j)),
+    ]
+    operands += [a2, b2]
+
     return pl.pallas_call(
-        functools.partial(_kernel, scale=scale, k_steps=k_steps, n_clients=C),
+        functools.partial(_kernel, scale=scale, k_steps=k_steps, n_clients=C,
+                          quantized=quantized),
         grid=(M // bm, N // bn, k_steps),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bm, C_lanes), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((bk, C * r_pad), lambda i, j, k: (k, 0)),
-            pl.BlockSpec((C * r_pad, bn), lambda i, j, k: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[
@@ -156,7 +196,7 @@ def batched_lora_matmul(x, w, a, b, adapter_ids, scale: float = 1.0, *,
             pltpu.VMEM((bm, r_pad), jnp.float32),
         ],
         interpret=interpret,
-    )(x, w, oh, a2, b2)
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "bk",

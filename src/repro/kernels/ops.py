@@ -20,7 +20,8 @@ from repro.kernels.dual_lora import dual_lora_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lora_matmul import lora_matmul
 from repro.kernels.paged_attention import paged_attention
-from repro.kernels.paged_prefill import paged_prefill_attention, paged_scatter
+from repro.kernels.paged_prefill import (paged_prefill_attention,
+                                         paged_scatter, paged_scatter_quant)
 
 
 def _pad_to(x, axis, mult):
@@ -78,8 +79,10 @@ def batched_lora_dense(x: jnp.ndarray, w: jnp.ndarray,
                        scale: float, *, interpret: bool = True,
                        block: int = 256) -> jnp.ndarray:
     """Multi-tenant dense: (B, ..., K) @ (K, N) with per-*request* adapter
-    routing. ``bank`` = {"a": (C, K, r), "b": (C, r, N)}; ``adapter_ids`` is
-    (B,) int32 and broadcasts over the trailing (sequence) axes of ``x``.
+    routing. ``bank`` = {"a": (C, K, r), "b": (C, r, N)}; an int8 bank also
+    carries ``a_scale``/``b_scale`` ((C,) fp32) which the kernel applies as
+    one per-row combined factor. ``adapter_ids`` is (B,) int32 and
+    broadcasts over the trailing (sequence) axes of ``x``.
     Pads M/K/N to tiles; padded rows route to slot 0 and are sliced away."""
     lead = x.shape[:-1]
     K = x.shape[-1]
@@ -96,6 +99,8 @@ def batched_lora_dense(x: jnp.ndarray, w: jnp.ndarray,
     ap, _ = _pad_to(bank["a"], 1, block)
     bp, _ = _pad_to(bank["b"], 2, block)
     y = batched_lora_matmul(x2p.astype(jnp.bfloat16), wp, ap, bp, g, scale,
+                            a_scale=bank.get("a_scale"),
+                            b_scale=bank.get("b_scale"),
                             bm=block, bn=block, bk=block, interpret=interpret)
     return y[:M, :N].reshape(*lead, N)
 
@@ -103,6 +108,8 @@ def batched_lora_dense(x: jnp.ndarray, w: jnp.ndarray,
 def paged_gqa_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                         v_pool: jnp.ndarray, block_tables: jnp.ndarray,
                         lengths: jnp.ndarray, *,
+                        k_scale: Optional[jnp.ndarray] = None,
+                        v_scale: Optional[jnp.ndarray] = None,
                         interpret: bool = True) -> jnp.ndarray:
     """Model-layout adapter for the paged decode kernel.
 
@@ -110,6 +117,10 @@ def paged_gqa_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
     k_pool/v_pool: (NB, bs, Kv, hd). Pads head_dim to 128 lanes (zero key
     lanes leave q·k unchanged; zero value lanes are sliced away) and keeps
     the block-table gather inside the kernel. Returns q's shape.
+
+    With int8 pools pass ``k_scale``/``v_scale`` ((NB, bs, Kv) fp32) —
+    they carry no head-dim axis so the lane padding leaves them alone and
+    the kernel dequantizes each DMA'd block tile in VMEM.
 
     ``lengths`` is exclusive (positions already written): when dropping this
     into the paged branch of ``layers.multihead_attention``, pass the
@@ -124,7 +135,8 @@ def paged_gqa_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
     kp, _ = _pad_to(k_pool, 3, 128)
     vp, _ = _pad_to(v_pool, 3, 128)
     o = paged_attention(qp, kp, vp, block_tables.astype(jnp.int32),
-                        lengths.astype(jnp.int32), scale=scale,
+                        lengths.astype(jnp.int32),
+                        k_scale=k_scale, v_scale=v_scale, scale=scale,
                         interpret=interpret)[..., :hd]
     return o[:, None] if squeeze else o
 
@@ -135,6 +147,8 @@ def paged_prefill_gqa_attention(q: jnp.ndarray, k_new: jnp.ndarray,
                                 block_tables: jnp.ndarray,
                                 lengths: jnp.ndarray,
                                 n_new: jnp.ndarray, *,
+                                k_scale: Optional[jnp.ndarray] = None,
+                                v_scale: Optional[jnp.ndarray] = None,
                                 interpret: bool = True):
     """Model-layout adapter for the chunked paged-prefill kernel.
 
@@ -146,20 +160,34 @@ def paged_prefill_gqa_attention(q: jnp.ndarray, k_new: jnp.ndarray,
     over the updated pools — the O(T) scatter is materialised, the
     O(context) gather never is.  Pads head_dim to 128 lanes.
 
-    Returns (out (B, T, H, hd), new_k_pool, new_v_pool)."""
+    Returns (out (B, T, H, hd), new_k_pool, new_v_pool).  With int8 pools
+    pass ``k_scale``/``v_scale`` ((NB, bs, Kv) fp32): the chunk quantizes
+    at scatter time and the return grows to
+    (out, new_k_pool, new_v_pool, new_k_scale, new_v_scale)."""
     hd = q.shape[-1]
-    kp, vp = paged_scatter(k_pool, v_pool, k_new, v_new,
-                           block_tables.astype(jnp.int32),
-                           lengths.astype(jnp.int32),
-                           n_new.astype(jnp.int32))
+    quantized = k_scale is not None
+    if quantized:
+        kp, vp, ks, vs = paged_scatter_quant(
+            k_pool, v_pool, k_scale, v_scale, k_new, v_new,
+            block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+            n_new.astype(jnp.int32))
+    else:
+        kp, vp = paged_scatter(k_pool, v_pool, k_new, v_new,
+                               block_tables.astype(jnp.int32),
+                               lengths.astype(jnp.int32),
+                               n_new.astype(jnp.int32))
+        ks = vs = None
 
     scale = hd ** -0.5                       # scale from the *unpadded* head
     qp, _ = _pad_to(q, 3, 128)
     kpp, _ = _pad_to(kp, 3, 128)
     vpp, _ = _pad_to(vp, 3, 128)
     o = paged_prefill_attention(qp, kpp, vpp, block_tables.astype(jnp.int32),
-                                lengths.astype(jnp.int32), scale=scale,
+                                lengths.astype(jnp.int32),
+                                k_scale=ks, v_scale=vs, scale=scale,
                                 interpret=interpret)[..., :hd]
+    if quantized:
+        return o, kp, vp, ks, vs
     return o, kp, vp
 
 

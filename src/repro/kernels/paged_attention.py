@@ -31,8 +31,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, scale: float, bs: int, mb: int):
+def _kernel(bt_ref, len_ref, q_ref, *rest, scale: float, bs: int, mb: int,
+            quantized: bool):
+    if quantized:
+        # int8 pools ride with block-aligned fp32 scale tiles (1, 1, bs, 1)
+        # whose index_map reads the same block-table entry as K/V
+        k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = rest
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     i = pl.program_id(2)
 
@@ -50,7 +57,12 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(jnp.any(mask))                           # skip past-the-end blocks
     def _compute():
         q = q_ref[0, 0]                               # (G, hd)
-        k = k_ref[0, 0]                               # (bs, hd)
+        if quantized:                                 # dequant in VMEM, fp32
+            k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0]
+            v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0]
+        else:
+            k = k_ref[0, 0]                           # (bs, hd)
+            v = v_ref[0, 0]
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         s = jnp.where(mask, s, NEG_INF)
 
@@ -61,8 +73,7 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         p = jnp.exp(s - m_new)                        # (G, bs)
         l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
-            p.astype(v_ref.dtype), v_ref[0, 0],
-            preferred_element_type=jnp.float32)
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
         m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
         l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
 
@@ -74,10 +85,16 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                    k_scale=None, v_scale=None,
                     scale: float | None = None, interpret: bool = True):
     """q: (B, H, hd) decode queries; k_pool/v_pool: (NB, bs, Kv, hd) shared
     block pools; block_tables: (B, MB) int32 physical block ids per row;
     lengths: (B,) int32 valid context per row.  Returns (B, H, hd).
+
+    With int8 pools pass ``k_scale``/``v_scale`` ((NB, bs, Kv) fp32,
+    written by ``paged_scatter_quant``): each grid step DMAs the block's
+    scale tile alongside its values and dequantizes in VMEM — the fp32
+    K/V gather still never materialises in HBM.
 
     ``lengths`` counts positions ALREADY WRITTEN to the pool, exclusive:
     row b attends K/V positions [0, lengths[b]).  The serving decode step
@@ -95,24 +112,35 @@ def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
     MB = block_tables.shape[1]
     G = H // Kv
     scale = scale if scale is not None else hd ** -0.5
+    quantized = k_scale is not None
 
     qg = q.reshape(B, Kv, G, hd)
     # head-major pools so one (block, head) tile DMAs contiguously
     kh = k_pool.transpose(0, 2, 1, 3)                 # (NB, Kv, bs, hd)
     vh = v_pool.transpose(0, 2, 1, 3)
 
+    # the paged gather: block i of row b is DMA'd from the physical
+    # block its table names — no padded (B, MB*bs) tensor ever exists
+    pool_spec = pl.BlockSpec((1, 1, bs, hd),
+                             lambda b, h, i, bt, ln: (bt[b, i], h, 0, 0))
+    in_specs = [pl.BlockSpec((1, 1, G, hd),
+                             lambda b, h, i, bt, ln: (b, h, 0, 0))]
+    operands = [qg]
+    if quantized:
+        scale_spec = pl.BlockSpec((1, 1, bs, 1),
+                                  lambda b, h, i, bt, ln: (bt[b, i], h, 0, 0))
+        ksh = k_scale.transpose(0, 2, 1)[..., None]   # (NB, Kv, bs, 1)
+        vsh = v_scale.transpose(0, 2, 1)[..., None]
+        in_specs += [pool_spec, scale_spec, pool_spec, scale_spec]
+        operands += [kh, ksh, vh, vsh]
+    else:
+        in_specs += [pool_spec, pool_spec]
+        operands += [kh, vh]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                        # block_tables, lengths
         grid=(B, Kv, MB),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, i, bt, ln: (b, h, 0, 0)),
-            # the paged gather: block i of row b is DMA'd from the physical
-            # block its table names — no padded (B, MB*bs) tensor ever exists
-            pl.BlockSpec((1, 1, bs, hd),
-                         lambda b, h, i, bt, ln: (bt[b, i], h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, hd),
-                         lambda b, h, i, bt, ln: (bt[b, i], h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda b, h, i, bt, ln: (b, h, 0, 0)),
         scratch_shapes=[
@@ -122,9 +150,10 @@ def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, scale=scale, bs=bs, mb=MB),
+        functools.partial(_kernel, scale=scale, bs=bs, mb=MB,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype),
         interpret=interpret,
-    )(block_tables, lengths, qg, kh, vh)
+    )(block_tables, lengths, *operands)
     return out.reshape(B, H, hd)

@@ -1,0 +1,53 @@
+"""Symmetric int8 quantization helpers for KV pools and adapter banks.
+
+One convention everywhere: values are stored as int8 in [-127, 127] with an
+fp32 scale per *group*, where the group is whatever axis set amax runs over:
+
+* paged K/V blocks — one scale per (block, position, kv-head), i.e. amax
+  over the head dim.  A scatter write is self-contained (its scale rides
+  with it), so blocks quantized at different times never need requantizing
+  and LRU-parked prefix-cache blocks stay valid bit-for-bit across owners.
+* adapter banks — one scale per (period, client) leaf slice, i.e. amax over
+  the whole (d_in, r) factor.  A scalar per-client scale commutes through
+  the LoRA matmul chain: ``(x @ (s_a·A)) @ (s_b·B) = s_a·s_b · (x@A)@B``,
+  which is what lets the batched kernel apply one per-row combined scale
+  at its finish step instead of dequantizing the banks in HBM.
+
+Dequantization always happens at the *read* site (gather oracle or inside
+the Pallas kernel), in fp32 — int8 never feeds an MXU dot directly here.
+``scale`` is ``amax / 127`` with a tiny floor so all-zero groups (zero-init
+pools, unregistered bank slots) round-trip to exact zeros instead of NaNs.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple, Union
+
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+# groups whose amax is below this are stored with this scale instead of 0
+# (q = round(0 / eps) = 0 either way; the floor only avoids 0/0)
+_SCALE_FLOOR = 1e-12
+
+Axis = Union[int, Sequence[int]]
+
+
+def quantize_int8(x: jnp.ndarray, axis: Axis) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize ``x`` to int8 with one fp32 scale per group.
+
+    ``axis`` names the dims amax reduces over (the group extent).  Returns
+    ``(q int8, scale fp32)`` where ``scale`` keeps ``x``'s shape with the
+    reduced dims REMOVED — callers re-broadcast at dequant time.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, _SCALE_FLOOR) / INT8_MAX
+    q = jnp.clip(jnp.round(xf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, jnp.squeeze(scale, axis=axis)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, axis: Axis
+                    ) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int8`: fp32 values ``q * scale`` with the
+    scale re-broadcast over the reduced ``axis``."""
+    return q.astype(jnp.float32) * jnp.expand_dims(scale, axis)

@@ -22,14 +22,22 @@ def dual_lora_matmul_ref(x, w, a1, b1, a2, b2, w1, w2, scale: float):
     return (base + scale * z).astype(x.dtype)
 
 
-def batched_lora_matmul_ref(x, w, a, b, adapter_ids, scale: float):
+def batched_lora_matmul_ref(x, w, a, b, adapter_ids, scale: float, *,
+                            a_scale=None, b_scale=None):
     """Multi-tenant: y[i] = x[i]@w + scale*(x[i]@a[g[i]])@b[g[i]].
 
     a: (C, K, r), b: (C, r, N), adapter_ids: (M,) int32. The reference
-    materialises the per-row gather (the thing the kernel avoids)."""
+    materialises the per-row gather (the thing the kernel avoids).
+
+    With int8 banks pass ``a_scale``/``b_scale`` ((C,) fp32 per-client
+    quantization scales): the gathered factors dequantize before the
+    matmul chain, exactly as the kernel's per-row combined scale does."""
     base = jnp.matmul(x, w, preferred_element_type=jnp.float32)
     ag = jnp.take(a, adapter_ids, axis=0).astype(jnp.float32)   # (M, K, r)
     bg = jnp.take(b, adapter_ids, axis=0).astype(jnp.float32)   # (M, r, N)
+    if a_scale is not None:
+        ag = ag * jnp.take(a_scale, adapter_ids, axis=0)[:, None, None]
+        bg = bg * jnp.take(b_scale, adapter_ids, axis=0)[:, None, None]
     z = jnp.einsum("mk,mkr->mr", x.astype(jnp.float32), ag)
     z = jnp.einsum("mr,mrn->mn", z, bg)
     return (base + scale * z).astype(x.dtype)
@@ -53,22 +61,33 @@ def batched_dual_lora_matmul_ref(x, w, a1, b1, a2, b2, adapter_ids, fusion_w,
     return (base + scale * z).astype(x.dtype)
 
 
+def _gather_pool(pool, pool_scale, block_tables, rep):
+    """Materialise the padded per-row block gather (B, MB*bs, Kv, hd) in
+    fp32, dequantizing int8 pools with their (NB, bs, Kv) scales."""
+    B, MB = block_tables.shape
+    bs, Kv, hd = pool.shape[1:]
+    g = pool[block_tables].reshape(B, MB * bs, Kv, hd).astype(jnp.float32)
+    if pool_scale is not None:
+        g = g * pool_scale[block_tables].reshape(B, MB * bs, Kv)[..., None]
+    return jnp.repeat(g, rep, axis=2)
+
+
 def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                        k_scale=None, v_scale=None,
                         scale: float | None = None):
     """Paged decode attention: q: (B, H, hd), k_pool/v_pool:
     (NB, bs, Kv, hd), block_tables: (B, MB) int32, lengths: (B,) int32.
 
     The reference materialises the padded per-row block gather
-    (B, MB*bs, Kv, hd) in HBM — the thing the Pallas kernel avoids."""
+    (B, MB*bs, Kv, hd) in HBM — the thing the Pallas kernel avoids.
+    With int8 pools pass ``k_scale``/``v_scale`` ((NB, bs, Kv) fp32)."""
     B, H, hd = q.shape
     bs, Kv = k_pool.shape[1], k_pool.shape[2]
     MB = block_tables.shape[1]
     scale = scale if scale is not None else hd ** -0.5
     rep = H // Kv
-    k = jnp.repeat(k_pool[block_tables].reshape(B, MB * bs, Kv, hd),
-                   rep, axis=2).astype(jnp.float32)
-    v = jnp.repeat(v_pool[block_tables].reshape(B, MB * bs, Kv, hd),
-                   rep, axis=2).astype(jnp.float32)
+    k = _gather_pool(k_pool, k_scale, block_tables, rep)
+    v = _gather_pool(v_pool, v_scale, block_tables, rep)
     logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k) * scale
     mask = jnp.arange(MB * bs)[None, :] < lengths[:, None]      # (B, L)
     logits = jnp.where(mask[:, None, :], logits, -1e30)
@@ -80,6 +99,7 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
 
 
 def paged_prefill_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                                k_scale=None, v_scale=None,
                                 scale: float | None = None):
     """Chunked paged prefill: q: (B, T, H, hd) chunk queries at absolute
     positions ``lengths[b] + t``; k_pool/v_pool: (NB, bs, Kv, hd) pools WITH
@@ -89,16 +109,15 @@ def paged_prefill_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
     Query t of row b attends positions ``[0, lengths[b] + t]`` — prior
     context plus the causal mask inside the chunk.  The reference
     materialises the padded per-row block gather (B, MB*bs, Kv, hd) in HBM,
-    which is what ``kernels/paged_prefill.py`` avoids."""
+    which is what ``kernels/paged_prefill.py`` avoids.  With int8 pools
+    pass ``k_scale``/``v_scale`` ((NB, bs, Kv) fp32)."""
     B, T, H, hd = q.shape
     bs, Kv = k_pool.shape[1], k_pool.shape[2]
     MB = block_tables.shape[1]
     scale = scale if scale is not None else hd ** -0.5
     rep = H // Kv
-    k = jnp.repeat(k_pool[block_tables].reshape(B, MB * bs, Kv, hd),
-                   rep, axis=2).astype(jnp.float32)
-    v = jnp.repeat(v_pool[block_tables].reshape(B, MB * bs, Kv, hd),
-                   rep, axis=2).astype(jnp.float32)
+    k = _gather_pool(k_pool, k_scale, block_tables, rep)
+    v = _gather_pool(v_pool, v_scale, block_tables, rep)
     logits = jnp.einsum("bthd,bkhd->bhtk", q.astype(jnp.float32), k) * scale
     q_pos = lengths[:, None] + jnp.arange(T)[None, :]           # (B, T)
     mask = jnp.arange(MB * bs)[None, None, :] <= q_pos[:, :, None]  # (B,T,L)

@@ -90,6 +90,12 @@ def main(argv=None):
                          "adapter bank into N shards with placement-aware "
                          "admission (slots and blocks split evenly; outputs "
                          "stay bitwise-identical to --shards 1)")
+    ap.add_argument("--kv-dtype", default="f32",
+                    choices=["f32", "int8"],
+                    help="continuous mode: paged KV block storage — 'f32' "
+                         "= the unquantized pools, 'int8' = quantized "
+                         "blocks with per-block scales (~1.78x blocks per "
+                         "HBM byte; error-bound, not bitwise, vs f32)")
     ap.add_argument("--paged-backend", default="jnp",
                     choices=["jnp", "pallas"],
                     help="continuous mode: paged-attention implementation — "
@@ -142,6 +148,7 @@ def main(argv=None):
             sc.prefix_cache = args.prefix_cache
             sc.sched_policy = args.sched_policy
             sc.paged_backend = args.paged_backend
+            sc.kv_dtype = args.kv_dtype
             sc.spec_decode = args.spec_decode
             sc.spec_k = args.spec_k
             sc.num_shards = args.shards
@@ -174,7 +181,8 @@ def main(argv=None):
                   f"{stats['prefill_dispatches']} prefill + "
                   f"{stats['decode_dispatches']} decode dispatches, "
                   f"{stats['preemptions']} preemptions "
-                  f"[{stats['sched_policy']}, backend={sc.paged_backend}]")
+                  f"[{stats['sched_policy']}, backend={sc.paged_backend}, "
+                  f"kv={sc.kv_dtype}]")
             if args.shards > 1:
                 print(f"  {args.shards} shards: placements "
                       f"{stats['shard_placements']} "

@@ -65,18 +65,20 @@ class Model:
         return dec.decode_cache_specs(self.cfg)
 
     def init_paged_decode_cache(self, num_slots: int, num_blocks: int,
-                                block_size: int) -> Params:
+                                block_size: int,
+                                kv_dtype: str = "f32") -> Params:
         """Continuous-batching serving cache: shared K/V block pools +
-        dense per-slot SSM state (see serving/kv_cache.py)."""
+        dense per-slot SSM state (see serving/kv_cache.py).
+        ``kv_dtype="int8"`` quantizes the K/V pools with per-block scales."""
         if self.cfg.is_encdec:
             raise NotImplementedError("paged decoding is decoder-family only")
         return dec.init_paged_decode_cache(self.cfg, num_slots, num_blocks,
-                                           block_size)
+                                           block_size, kv_dtype=kv_dtype)
 
-    def paged_decode_cache_specs(self) -> Params:
+    def paged_decode_cache_specs(self, kv_dtype: str = "f32") -> Params:
         if self.cfg.is_encdec:
             raise NotImplementedError("paged decoding is decoder-family only")
-        return dec.paged_decode_cache_specs(self.cfg)
+        return dec.paged_decode_cache_specs(self.cfg, kv_dtype)
 
     def prefill_step(self, params: Params, cache: Params, tokens, pos, n_new,
                      adapters: Optional[Params] = None,

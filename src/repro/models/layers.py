@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops as kernel_ops
-from repro.kernels.paged_prefill import paged_scatter
+from repro.kernels.paged_prefill import paged_scatter, paged_scatter_quant
 
 Params = Dict[str, Any]
 
@@ -75,7 +75,9 @@ def matmul(x, w, *, out_dtype=None):
 
 
 def lora_delta(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
-               adapter_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+               adapter_ids: Optional[jnp.ndarray] = None,
+               a_scale: Optional[jnp.ndarray] = None,
+               b_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """fp32 LoRA update (x·A)·B, single-tenant or banked.
 
     Single-tenant: ``a: (d_in, r)``, ``b: (r, d_out)``. Multi-tenant serving:
@@ -83,6 +85,10 @@ def lora_delta(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
     ``adapter_ids: (B,)`` int32 selecting one adapter per batch row of
     ``x: (B, S, d_in)`` (the pure-jnp oracle of the batched Pallas kernel —
     the kernel path never materialises the per-row gather in HBM).
+
+    int8 banks (``AdapterRegistry(bank_dtype="int8")``) carry one fp32
+    quantization scale per client and factor: ``a_scale``/``b_scale`` (C,).
+    The gathered per-row factors dequantize before the fp32 matmul chain.
     """
     xf = x.astype(jnp.float32)
     if a.ndim == 3:  # banked: per-row client routing
@@ -90,28 +96,53 @@ def lora_delta(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
             raise ValueError("banked LoRA leaves need adapter_ids")
         ag = jnp.take(a.astype(jnp.float32), adapter_ids, axis=0)  # (B, d, r)
         bg = jnp.take(b.astype(jnp.float32), adapter_ids, axis=0)  # (B, r, n)
+        if a_scale is not None:
+            ag = ag * jnp.take(a_scale, adapter_ids, axis=0)[:, None, None]
+            bg = bg * jnp.take(b_scale, adapter_ids, axis=0)[:, None, None]
         z = jnp.einsum("b...k,bkr->b...r", xf, ag)
         return jnp.einsum("b...r,brn->b...n", z, bg)
-    z = jnp.matmul(xf, a.astype(jnp.float32))
-    return jnp.matmul(z, b.astype(jnp.float32))
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    if a_scale is not None:
+        af = af * a_scale
+        bf = bf * b_scale
+    z = jnp.matmul(xf, af)
+    return jnp.matmul(z, bf)
+
+
+def lora_pair(adapters: Optional[Params], name: str):
+    """The LoRA tuple :func:`dense` expects for one adapter target, or
+    ``None`` when the target carries no adapter.  fp32 targets yield
+    ``(A, B)``; int8 bank targets (which store per-client ``a_scale`` /
+    ``b_scale`` leaves next to the factors) yield the 4-tuple
+    ``(A, B, a_scale, b_scale)``.  Every layer that routes adapters into
+    ``dense`` goes through this helper so the int8 layout has exactly one
+    decoding site."""
+    if adapters is None or name not in adapters:
+        return None
+    ad = adapters[name]
+    if "a_scale" in ad:
+        return (ad["a"], ad["b"], ad["a_scale"], ad["b_scale"])
+    return (ad["a"], ad["b"])
 
 
 def dense(x: jnp.ndarray, w: jnp.ndarray,
-          lora: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+          lora: Optional[Tuple[jnp.ndarray, ...]] = None,
           lora_scale: float = 1.0,
           adapter_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Linear layer with optional LoRA adapter.
 
     ``lora`` is ``(A, B)`` with A: (d_in, r) fp32, B: (r, d_out) fp32 — or
     banked ``(C, d_in, r)`` / ``(C, r, d_out)`` with per-row ``adapter_ids``
-    (multi-tenant serving; see :func:`lora_delta`). The adapter path always
-    computes in fp32 (adapters are the trainable, numerically sensitive part)
-    and is added to the frozen base output.
+    (multi-tenant serving; see :func:`lora_delta`), optionally extended to
+    ``(A, B, a_scale, b_scale)`` for int8 banks (see :func:`lora_pair`).
+    The adapter path always computes in fp32 (adapters are the trainable,
+    numerically sensitive part) and is added to the frozen base output.
     """
     y = matmul(x, w.astype(x.dtype))
     if lora is not None:
-        a, b = lora
-        z = lora_delta(x, a, b, adapter_ids)
+        a, b, *scales = lora
+        z = lora_delta(x, a, b, adapter_ids, *scales)
         y = (y.astype(jnp.float32) + lora_scale * z).astype(y.dtype)
     return y
 
@@ -283,19 +314,37 @@ def _paged_attention_pallas(params, q, k, v, x, cfg, kv_cache, block_tables,
             "paged_backend='pallas' supports full attention only (no "
             "sliding window / logit softcap); use paged_backend='jnp'")
     interp = cfg.pallas_interpret
+    quant = "k_scale" in kv_cache             # int8 pools carry scale leaves
     if n_new is None and S == 1:
-        kp, vp = paged_scatter(kv_cache["k_pool"], kv_cache["v_pool"], k, v,
-                               block_tables, lengths, None)
-        o = kernel_ops.paged_gqa_attention(
-            q, kp, vp, block_tables, lengths + 1, interpret=interp)
+        if quant:
+            kp, vp, ks, vs = paged_scatter_quant(
+                kv_cache["k_pool"], kv_cache["v_pool"], kv_cache["k_scale"],
+                kv_cache["v_scale"], k, v, block_tables, lengths, None)
+            o = kernel_ops.paged_gqa_attention(
+                q, kp, vp, block_tables, lengths + 1,
+                k_scale=ks, v_scale=vs, interpret=interp)
+        else:
+            kp, vp = paged_scatter(kv_cache["k_pool"], kv_cache["v_pool"],
+                                   k, v, block_tables, lengths, None)
+            o = kernel_ops.paged_gqa_attention(
+                q, kp, vp, block_tables, lengths + 1, interpret=interp)
     else:
         nn = (n_new if n_new is not None
               else jnp.full((B,), S, dtype=jnp.int32))
-        o, kp, vp = kernel_ops.paged_prefill_gqa_attention(
-            q, k, v, kv_cache["k_pool"], kv_cache["v_pool"], block_tables,
-            lengths, nn, interpret=interp)
+        if quant:
+            o, kp, vp, ks, vs = kernel_ops.paged_prefill_gqa_attention(
+                q, k, v, kv_cache["k_pool"], kv_cache["v_pool"], block_tables,
+                lengths, nn, k_scale=kv_cache["k_scale"],
+                v_scale=kv_cache["v_scale"], interpret=interp)
+        else:
+            o, kp, vp = kernel_ops.paged_prefill_gqa_attention(
+                q, k, v, kv_cache["k_pool"], kv_cache["v_pool"], block_tables,
+                lengths, nn, interpret=interp)
     out = dn(o.astype(x.dtype).reshape(B, S, H * hd), params["wo"], la("wo"))
-    return out, {"k_pool": kp, "v_pool": vp}
+    new_cache = {"k_pool": kp, "v_pool": vp}
+    if quant:
+        new_cache.update(k_scale=ks, v_scale=vs)
+    return out, new_cache
 
 
 def multihead_attention(params: Params, x: jnp.ndarray, cfg,
@@ -344,8 +393,7 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
     """
     H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     B, S, _ = x.shape
-    la = (lambda name: (adapters[name]["a"], adapters[name]["b"])
-          if adapters is not None and name in adapters else None)
+    la = partial(lora_pair, adapters)
     dn = partial(dense, lora_scale=lora_scale, adapter_ids=adapter_ids)
 
     q = dn(x, params["wq"], la("wq")).reshape(B, S, H, hd)
@@ -378,13 +426,29 @@ def multihead_attention(params: Params, x: jnp.ndarray, cfg,
         bs_blk = kv_cache["k_pool"].shape[1]
         pos = (lengths[:, None].astype(jnp.int32)
                + jnp.arange(S, dtype=jnp.int32)[None, :])  # write positions
-        kp, vp = paged_scatter(kv_cache["k_pool"], kv_cache["v_pool"], k, v,
-                               block_tables, lengths, n_new)
-        new_cache = {"k_pool": kp, "v_pool": vp}
         MB = block_tables.shape[1]
         L = MB * bs_blk
-        kg = kp[block_tables].reshape(B, L, Kv, hd).astype(x.dtype)
-        vg = vp[block_tables].reshape(B, L, Kv, hd).astype(x.dtype)
+        if "k_scale" in kv_cache:             # int8 pools: dequant the gather
+            kp, vp, ks, vs = paged_scatter_quant(
+                kv_cache["k_pool"], kv_cache["v_pool"], kv_cache["k_scale"],
+                kv_cache["v_scale"], k, v, block_tables, lengths, n_new)
+            new_cache = {"k_pool": kp, "v_pool": vp,
+                         "k_scale": ks, "v_scale": vs}
+            # elementwise dequant keeps the per-position bitwise chunk
+            # invariance below: values depend only on what was scattered,
+            # never on how the chunk was split
+            kg = (kp[block_tables].reshape(B, L, Kv, hd).astype(jnp.float32)
+                  * ks[block_tables].reshape(B, L, Kv)[..., None]
+                  ).astype(x.dtype)
+            vg = (vp[block_tables].reshape(B, L, Kv, hd).astype(jnp.float32)
+                  * vs[block_tables].reshape(B, L, Kv)[..., None]
+                  ).astype(x.dtype)
+        else:
+            kp, vp = paged_scatter(kv_cache["k_pool"], kv_cache["v_pool"],
+                                   k, v, block_tables, lengths, n_new)
+            new_cache = {"k_pool": kp, "v_pool": vp}
+            kg = kp[block_tables].reshape(B, L, Kv, hd).astype(x.dtype)
+            vg = vp[block_tables].reshape(B, L, Kv, hd).astype(x.dtype)
         k_pos = jnp.arange(L, dtype=jnp.int32)        # slot-logical order
         # One attend per chunk position, each with the exact decode-step
         # shapes: q_pos = lengths + t, so the (B, L) causal+window mask
@@ -441,18 +505,40 @@ def kv_cache_specs() -> Params:
             "pos": P()}
 
 
-def init_paged_kv_cache(cfg, num_blocks: int, block_size: int, dtype) -> Params:
+def init_paged_kv_cache(cfg, num_blocks: int, block_size: int, dtype,
+                        kv_dtype: str = "f32") -> Params:
     """One K/V pool per layer, shared by every serving slot: blocks are
-    handed to slots by the host-side block table (serving/kv_cache.py)."""
+    handed to slots by the host-side block table (serving/kv_cache.py).
+
+    ``kv_dtype="int8"`` stores the pools as int8 with one fp32 scale per
+    (block, position, kv-head) riding as ``k_scale``/``v_scale`` leaves —
+    36 bytes per token per kv-head instead of 64 (bf16), so the same HBM
+    budget holds ~1.78x the blocks.  ``"f32"`` keeps the unquantized pools
+    in ``dtype`` exactly as before (bf16 in serving)."""
     Kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if kv_dtype == "int8":
+        return {"k_pool": jnp.zeros((num_blocks, block_size, Kv, hd),
+                                    dtype=jnp.int8),
+                "v_pool": jnp.zeros((num_blocks, block_size, Kv, hd),
+                                    dtype=jnp.int8),
+                "k_scale": jnp.zeros((num_blocks, block_size, Kv),
+                                     dtype=jnp.float32),
+                "v_scale": jnp.zeros((num_blocks, block_size, Kv),
+                                     dtype=jnp.float32)}
+    if kv_dtype != "f32":
+        raise ValueError(f"kv_dtype must be 'f32' or 'int8', got {kv_dtype!r}")
     return {"k_pool": jnp.zeros((num_blocks, block_size, Kv, hd), dtype=dtype),
             "v_pool": jnp.zeros((num_blocks, block_size, Kv, hd), dtype=dtype)}
 
 
-def paged_kv_cache_specs() -> Params:
+def paged_kv_cache_specs(kv_dtype: str = "f32") -> Params:
     # the block axis is a shared pool (no batch sharding); heads on MODEL
-    return {"k_pool": P(None, None, MODEL, None),
-            "v_pool": P(None, None, MODEL, None)}
+    specs = {"k_pool": P(None, None, MODEL, None),
+             "v_pool": P(None, None, MODEL, None)}
+    if kv_dtype == "int8":
+        specs["k_scale"] = P(None, None, MODEL)
+        specs["v_scale"] = P(None, None, MODEL)
+    return specs
 
 
 # ---------------------------------------------------------------------------
@@ -481,8 +567,7 @@ def mlp_specs(mlp_type: str) -> Params:
 def apply_mlp(params: Params, x: jnp.ndarray, mlp_type: str,
               adapters: Optional[Params] = None, lora_scale: float = 1.0,
               adapter_ids: Optional[jnp.ndarray] = None):
-    la = (lambda name: (adapters[name]["a"], adapters[name]["b"])
-          if adapters is not None and name in adapters else None)
+    la = partial(lora_pair, adapters)
     dn = partial(dense, lora_scale=lora_scale, adapter_ids=adapter_ids)
     if mlp_type in ("swiglu", "geglu"):
         act = jax.nn.silu if mlp_type == "swiglu" else partial(jax.nn.gelu, approximate=True)

@@ -12,13 +12,14 @@ A; gated RMSNorm before ``out_proj``.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.layers import MODEL, dense
+from repro.models.layers import MODEL, dense, lora_pair
 
 Params = Dict[str, Any]
 
@@ -189,8 +190,7 @@ def apply_mamba(params: Params, x: jnp.ndarray, cfg,
     """
     B, S, d = x.shape
     d_in, n_h, d_st, n_g, conv_dim, _ = _dims(cfg)
-    la = (lambda name: (adapters[name]["a"], adapters[name]["b"])
-          if adapters is not None and name in adapters else None)
+    la = partial(lora_pair, adapters)
 
     zxbcdt = dense(x, params["in_proj"], la("in_proj"), lora_scale,
                    adapter_ids=adapter_ids)

@@ -234,16 +234,21 @@ def decode_cache_specs(cfg) -> Params:
 
 
 def init_paged_decode_cache(cfg, num_slots: int, num_blocks: int,
-                            block_size: int) -> Params:
+                            block_size: int, kv_dtype: str = "f32") -> Params:
     """Serving-path cache for continuous batching: attention layers share one
     K/V block pool (slots reference blocks through the scheduler's block
-    table); SSM/Mamba rows keep dense per-slot recurrent state."""
+    table); SSM/Mamba rows keep dense per-slot recurrent state.
+
+    ``kv_dtype="int8"`` stores the K/V pools quantized with per-block fp32
+    scale leaves (see :func:`layers.init_paged_kv_cache`); SSM state stays
+    dense fp32 either way."""
     cache: Params = {"blocks": {}}
     for name, entry in zip(_block_names(cfg), cfg.layer_pattern):
         mixer, _ = _parse(entry)
         if mixer == "attn":
             one = lambda: L.init_paged_kv_cache(cfg, num_blocks, block_size,
-                                                jnp.bfloat16)
+                                                jnp.bfloat16,
+                                                kv_dtype=kv_dtype)
         else:
             one = lambda: mamba2.init_ssm_cache(cfg, num_slots)
         cache["blocks"][name] = jax.tree.map(
@@ -251,11 +256,11 @@ def init_paged_decode_cache(cfg, num_slots: int, num_blocks: int,
     return cache
 
 
-def paged_decode_cache_specs(cfg) -> Params:
+def paged_decode_cache_specs(cfg, kv_dtype: str = "f32") -> Params:
     specs: Params = {"blocks": {}}
     for name, entry in zip(_block_names(cfg), cfg.layer_pattern):
         mixer, _ = _parse(entry)
-        base = (L.paged_kv_cache_specs() if mixer == "attn"
+        base = (L.paged_kv_cache_specs(kv_dtype) if mixer == "attn"
                 else mamba2.ssm_cache_specs())
         specs["blocks"][name] = _add_leading(base)
     return specs

@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.layers import DATA, MODEL, lora_delta, matmul, maybe_shard
+from repro.models.layers import (DATA, MODEL, lora_delta, lora_pair, matmul,
+                                 maybe_shard)
 
 Params = Dict[str, Any]
 
@@ -89,8 +90,8 @@ def apply_moe(params: Params, x: jnp.ndarray, cfg,
     xf = x.reshape(T, d)
     logits = matmul(xf, params["router"].astype(xf.dtype), out_dtype=jnp.float32)
     if adapters is not None and "router" in adapters:
-        a, b = adapters["router"]["a"], adapters["router"]["b"]
-        delta = lora_delta(x, a, b, adapter_ids)     # (B, S, E)
+        a, b, *scales = lora_pair(adapters, "router")
+        delta = lora_delta(x, a, b, adapter_ids, *scales)    # (B, S, E)
         logits = logits + lora_scale * delta.reshape(T, E)
     weights, ids, aux = _top_k_routing(logits, k)          # (T,k)
 

@@ -105,6 +105,16 @@ class ServeConfig:
     #                                  contiguous, so shard boundaries land
     #                                  on device boundaries).  None = no
     #                                  mesh (single device, the default).
+    kv_dtype: str = "f32"            # paged K/V pool storage: "f32" keeps
+    #                                  the unquantized (bf16) pools exactly
+    #                                  as before; "int8" stores blocks
+    #                                  quantized with per-(block, position,
+    #                                  kv-head) fp32 scales — ~1.78x the
+    #                                  blocks per HBM byte, dequantized at
+    #                                  read inside both paged backends.
+    #                                  Greedy streams match the f32 path
+    #                                  within a documented error bound (see
+    #                                  tests/test_quant.py), NOT bitwise.
 
 
 @dataclasses.dataclass
@@ -327,7 +337,7 @@ class MultiTenantEngine(_EngineBase):
         drops the warm state and starts cold (``last_stats
         ['prefix_pool_reused']`` says which happened)."""
         key = (num_slots, sc.block_size, num_blocks, blocks_per,
-               sc.num_shards)
+               sc.num_shards, sc.kv_dtype)
         if sc.prefix_cache:
             warm, self._warm = self._warm, None   # taken; restored at drain
             if warm is not None and warm[0] == key and warm[1].idle:
@@ -340,7 +350,8 @@ class MultiTenantEngine(_EngineBase):
             kv = PagedKVCache(num_slots, sc.block_size, num_blocks,
                               blocks_per, prefix_cache=sc.prefix_cache)
         cache = self.model.init_paged_decode_cache(num_slots, num_blocks,
-                                                   sc.block_size)
+                                                   sc.block_size,
+                                                   kv_dtype=sc.kv_dtype)
         if sc.prefix_cache or sc.spec_decode:
             # recurrent SSM state is per-slot and dense — it cannot be
             # reconstructed from cached K/V blocks (a prefix hit would
@@ -348,7 +359,8 @@ class MultiTenantEngine(_EngineBase):
             # (a verify dispatch advances it through rejected drafts)
             feature = ("prefix_cache" if sc.prefix_cache else "spec_decode")
             for entry in cache["blocks"].values():
-                extra = set(entry) - {"k_pool", "v_pool"}
+                extra = set(entry) - {"k_pool", "v_pool",
+                                      "k_scale", "v_scale"}
                 if extra:
                     raise ValueError(
                         f"{feature}=True needs an attention-only model: "
@@ -390,6 +402,9 @@ class MultiTenantEngine(_EngineBase):
             if sc.spec_k < 1:
                 raise ValueError(f"spec_decode needs spec_k >= 1, "
                                  f"got {sc.spec_k}")
+        if sc.kv_dtype not in ("f32", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'f32' or 'int8', got {sc.kv_dtype!r}")
         if sc.num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {sc.num_shards}")
         if sc.num_shards > 1 and sc.batch_size % sc.num_shards != 0:
@@ -543,6 +558,7 @@ class MultiTenantEngine(_EngineBase):
                            "prefix_pool_reused": reused,
                            "sched_policy": sc.sched_policy,
                            "num_shards": sc.num_shards,
+                           "kv_dtype": sc.kv_dtype,
                            # queue waits in admission rounds (ticks), by class
                            "classes": classes,
                            "victim_sealed_fraction_mean": (
@@ -552,7 +568,7 @@ class MultiTenantEngine(_EngineBase):
             self.last_stats["shard_placements"] = dict(sched.placed)
         if sc.prefix_cache:
             key = (num_slots, sc.block_size, num_blocks, blocks_per,
-                   sc.num_shards)
+                   sc.num_shards, sc.kv_dtype)
             self._warm = (key, kv, cache)
 
     def generate(self, requests: Sequence[Request],

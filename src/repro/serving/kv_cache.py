@@ -67,6 +67,24 @@ def blocks_needed(n_tokens: int, block_size: int) -> int:
     return -(-max(n_tokens, 1) // block_size)
 
 
+def kv_bytes_per_block(block_size: int, n_kv_heads: int, head_dim: int,
+                       kv_dtype: str = "f32") -> int:
+    """HBM bytes one K+V block pair costs per attention layer.
+
+    ``"f32"`` (the unquantized path) stores bf16 pools: 2·2 bytes per
+    (position, head, lane).  ``"int8"`` stores 1-byte values plus one fp32
+    scale per (position, kv-head) and factor — for head_dim 32 that is
+    36 B/token/kv-head against bf16's 64 B, i.e. ~1.78x the blocks at a
+    fixed HBM budget.  The serving bench and capacity planning both price
+    pools through this one function."""
+    positions = block_size * n_kv_heads
+    if kv_dtype == "int8":
+        return 2 * positions * (head_dim * 1 + 4)     # K+V values + scales
+    if kv_dtype != "f32":
+        raise ValueError(f"kv_dtype must be 'f32' or 'int8', got {kv_dtype!r}")
+    return 2 * positions * head_dim * 2               # bf16 K+V
+
+
 def _root_digest(scope: Any) -> bytes:
     return hashlib.sha256(b"scope:" + repr(scope).encode()).digest()
 
@@ -195,8 +213,12 @@ class PagedKVCache:
             block = self._index.get(digest)
             if block is None:
                 break
-            assert self._block_tokens[block] == blk_toks, \
-                "prefix index corrupt: digest matches different tokens"
+            # serving a mismatched block would silently corrupt a request's
+            # context — keep this live under ``python -O``
+            if self._block_tokens[block] != blk_toks:
+                raise RuntimeError(
+                    f"prefix index corrupt: block {block}'s digest matches "
+                    "different tokens than it stores")
             hits.append(block)
             chain = digest
         return hits, chain
@@ -252,7 +274,13 @@ class PagedKVCache:
         if not self._occupied[slot]:
             raise ValueError(f"slot {slot} not occupied")
         need = blocks_needed(n_tokens, self.block_size)
-        assert need <= self.max_blocks_per_slot, (need, n_tokens)
+        # a real exception, not an assert: this guards the block-table
+        # bounds on the serving hot path and must survive ``python -O``
+        if need > self.max_blocks_per_slot:
+            raise ValueError(
+                f"slot {slot} needs {need} blocks for {n_tokens} tokens but "
+                f"tables hold max_blocks_per_slot={self.max_blocks_per_slot} "
+                "(admission should have rejected this request: see fits())")
         add = need - len(self._owned[slot])
         if add <= 0:
             return True
@@ -362,8 +390,15 @@ class PagedKVCache:
         while len(self._owned[slot]) > keep:
             b = self._owned[slot].pop()
             self.block_tables[slot, len(self._owned[slot])] = 0
-            assert self._refcount[b] == 1, \
-                f"freeing tail block {b} with refcount {self._refcount[b]}"
+            # pool-integrity guard (must survive ``python -O``): freeing a
+            # co-owned block here would hand shared live content back to the
+            # allocator.  The pre-scan above only covers SEALED blocks, so
+            # this is the last line of defence for the unsealed tail.
+            if self._refcount[b] != 1:
+                raise RuntimeError(
+                    f"rollback freeing tail block {b} with refcount "
+                    f"{int(self._refcount[b])} (expected 1: unsealed tail "
+                    "blocks are always private)")
             self._refcount[b] = 0              # unsealed + unindexed by now
             self._free.append(b)
             freed += 1
@@ -532,7 +567,7 @@ def reset_slot(cache, slot: int):
     excludes never-written positions, and prefix-cached blocks must keep
     their content across owners."""
     def _zero(leaf_key, leaf):
-        if leaf_key in ("k_pool", "v_pool"):
+        if leaf_key in ("k_pool", "v_pool", "k_scale", "v_scale"):
             return leaf
         # mamba state stacked over periods: (n_periods, num_slots, ...)
         return leaf.at[:, slot].set(jnp.zeros_like(leaf[:, slot]))

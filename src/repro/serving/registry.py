@@ -28,29 +28,79 @@ import jax.numpy as jnp
 
 from repro.core.dual_lora import merge
 from repro.core.lora import init_adapters
+from repro.kernels.quant import quantize_int8
 
 Params = Any
 
 
-class AdapterRegistry:
-    """Registers/evicts client adapter trees into a stacked serving bank."""
+def _is_pair(node) -> bool:
+    """An adapter target leaf-dict ({"a", "b"}) in the tree walk."""
+    return isinstance(node, dict) and set(node) == {"a", "b"}
 
-    def __init__(self, cfg, capacity: int, rank: Optional[int] = None):
+
+class AdapterRegistry:
+    """Registers/evicts client adapter trees into a stacked serving bank.
+
+    ``bank_dtype="int8"`` stores the stacked factors quantized: each target
+    grows fp32 ``a_scale``/``b_scale`` leaves of shape (n_periods, C) — one
+    symmetric scale per (period, client) factor, computed at
+    :meth:`register` time.  Registered trees stay fp32 at the API; only the
+    resident bank is compressed (4x per factor), which is what bounds the
+    HBM cost of multi-tenant residency.  The model's jnp path
+    (``layers.lora_delta``) and the batched Pallas kernel both dequantize
+    at read time, so a zero slot still serves the frozen base model."""
+
+    def __init__(self, cfg, capacity: int, rank: Optional[int] = None,
+                 bank_dtype: str = "f32"):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if bank_dtype not in ("f32", "int8"):
+            raise ValueError(
+                f"bank_dtype must be 'f32' or 'int8', got {bank_dtype!r}")
         self.capacity = capacity
+        self.bank_dtype = bank_dtype
         self.evictions = 0
         template = jax.eval_shape(
             lambda: init_adapters(jax.random.PRNGKey(0), cfg, rank))
+        # kept for validating registered trees before any jax.tree.map can
+        # die with an opaque broadcast error deep inside the bank update
+        self._template: Params = template
         # zero bank: a zero adapter is a no-op, so unregistered slots serve
         # the frozen base model.
-        self._bank: Params = jax.tree.map(
-            lambda l: jnp.zeros(l.shape[:1] + (capacity,) + l.shape[1:],
-                                l.dtype), template)
+        if bank_dtype == "int8":
+            self._bank = self._build_int8_bank(template)
+        else:
+            self._bank = jax.tree.map(
+                lambda l: jnp.zeros(l.shape[:1] + (capacity,) + l.shape[1:],
+                                    l.dtype), template)
         self._lru: "OrderedDict[Any, int]" = OrderedDict()  # client -> slot
         self._free: List[int] = list(range(capacity))
         self._versions: Dict[Any, int] = {}  # bumped on every register()
         self._default_priority: Dict[Any, str] = {}  # client -> class name
+
+    def _build_int8_bank(self, node) -> Params:
+        """Mirror the template with int8 factor banks plus per-(period,
+        client) fp32 scale leaves next to each {"a", "b"} pair."""
+        if _is_pair(node):
+            out = {k: jnp.zeros(l.shape[:1] + (self.capacity,) + l.shape[1:],
+                                jnp.int8) for k, l in node.items()}
+            periods = node["a"].shape[0]
+            out["a_scale"] = jnp.zeros((periods, self.capacity), jnp.float32)
+            out["b_scale"] = jnp.zeros((periods, self.capacity), jnp.float32)
+            return out
+        return {k: self._build_int8_bank(v) for k, v in node.items()}
+
+    def _set_slot_int8(self, bank, adapters, slot: int) -> Params:
+        """Quantize one client's fp32 tree into bank slot ``slot``."""
+        if "a_scale" in bank:
+            qa, sa = quantize_int8(adapters["a"], axis=(1, 2))  # per period
+            qb, sb = quantize_int8(adapters["b"], axis=(1, 2))
+            return {"a": bank["a"].at[:, slot].set(qa),
+                    "b": bank["b"].at[:, slot].set(qb),
+                    "a_scale": bank["a_scale"].at[:, slot].set(sa),
+                    "b_scale": bank["b_scale"].at[:, slot].set(sb)}
+        return {k: self._set_slot_int8(bank[k], adapters[k], slot)
+                for k in bank}
 
     # ---- bookkeeping ------------------------------------------------------
     def __contains__(self, client_id) -> bool:
@@ -70,8 +120,42 @@ class AdapterRegistry:
         if self._free:
             return self._free.pop(0)
         evicted, slot = self._lru.popitem(last=False)   # LRU out
+        # a churned-out tenant is gone: its SLA class must not silently
+        # resurrect if it re-registers later without one (and the dict must
+        # not grow unboundedly under tenant churn).  ``_versions`` stays —
+        # monotonicity is what keeps stale prefix-cache entries unreachable
+        # if the client ever comes back.
+        self._default_priority.pop(evicted, None)
         self.evictions += 1
         return slot
+
+    def _validate_tree(self, adapters: Params, what: str = "adapters") -> None:
+        """Check ``adapters`` against the bank template BEFORE any bank
+        update, so a mis-shaped or mis-structured tree fails with the bad
+        leaf named instead of an opaque broadcast error inside
+        ``jax.tree.map``."""
+        t_leaves = jax.tree_util.tree_flatten_with_path(self._template)[0]
+        t_def = jax.tree.structure(self._template)
+        a_def = jax.tree.structure(adapters)
+        if t_def != a_def:
+            t_keys = {jax.tree_util.keystr(p) for p, _ in t_leaves}
+            a_keys = {jax.tree_util.keystr(p) for p, _ in
+                      jax.tree_util.tree_flatten_with_path(adapters)[0]}
+            missing = sorted(t_keys - a_keys)
+            extra = sorted(a_keys - t_keys)
+            detail = "".join(
+                ([f"; missing leaves: {missing}"] if missing else [])
+                + ([f"; unexpected leaves: {extra}"] if extra else []))
+            raise ValueError(
+                f"{what} tree structure does not match the adapter bank "
+                f"template{detail}")
+        a_leaves = jax.tree_util.tree_flatten_with_path(adapters)[0]
+        for (path, tmpl), (_, leaf) in zip(t_leaves, a_leaves):
+            shape = tuple(jnp.shape(leaf))
+            if shape != tuple(tmpl.shape):
+                raise ValueError(
+                    f"{what} leaf {jax.tree_util.keystr(path)} has shape "
+                    f"{shape}; the bank template expects {tuple(tmpl.shape)}")
 
     # ---- writes -----------------------------------------------------------
     def register(self, client_id, adapters: Params,
@@ -85,6 +169,7 @@ class AdapterRegistry:
         ``Request.priority`` always wins.  ``None`` keeps any previously
         registered default (a weight refresh shouldn't silently demote a
         tenant's SLA)."""
+        self._validate_tree(adapters)
         if default_priority is not None:
             from repro.serving.scheduler import PRIORITY_CLASSES
             if default_priority not in PRIORITY_CLASSES:
@@ -93,9 +178,13 @@ class AdapterRegistry:
                     f"(have {sorted(PRIORITY_CLASSES)})")
             self._default_priority[client_id] = default_priority
         slot = self._grab_slot(client_id)
-        self._bank = jax.tree.map(
-            lambda bank, leaf: bank.at[:, slot].set(leaf.astype(bank.dtype)),
-            self._bank, adapters)
+        if self.bank_dtype == "int8":
+            self._bank = self._set_slot_int8(self._bank, adapters, slot)
+        else:
+            self._bank = jax.tree.map(
+                lambda bank, leaf: bank.at[:, slot].set(
+                    leaf.astype(bank.dtype)),
+                self._bank, adapters)
         self._lru[client_id] = slot
         self._lru.move_to_end(client_id)
         self._versions[client_id] = self._versions.get(client_id, 0) + 1
@@ -105,6 +194,8 @@ class AdapterRegistry:
                       fusion_weights,
                       default_priority: Optional[str] = None) -> int:
         """Fuse a dual-LoRA state via Eq. 7 and install the result."""
+        self._validate_tree(personalized, what="personalized adapters")
+        self._validate_tree(global_, what="global adapters")
         fused = merge(personalized, global_, jnp.asarray(fusion_weights))
         return self.register(client_id, fused,
                              default_priority=default_priority)
@@ -112,6 +203,9 @@ class AdapterRegistry:
     def evict(self, client_id) -> None:
         """Drop a client; its slot returns to the free list (stale weights
         stay in the bank but are unreachable until the slot is reused)."""
+        if client_id not in self._lru:
+            raise KeyError(f"client {client_id!r} is not resident "
+                           f"(resident: {self.resident})")
         slot = self._lru.pop(client_id)
         self._default_priority.pop(client_id, None)
         self._free.append(slot)
@@ -140,5 +234,6 @@ class AdapterRegistry:
         return self._versions.get(client_id, 0)
 
     def bank(self) -> Params:
-        """The stacked adapter tree (leaves (n_periods, C, d_in, r))."""
+        """The stacked adapter tree (leaves (n_periods, C, d_in, r); int8
+        banks also carry (n_periods, C) fp32 ``a_scale``/``b_scale``)."""
         return self._bank

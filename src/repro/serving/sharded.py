@@ -188,7 +188,7 @@ class ShardedAdapterRegistry:
     """
 
     def __init__(self, cfg, capacity: int, num_shards: int,
-                 rank: Optional[int] = None):
+                 rank: Optional[int] = None, bank_dtype: str = "f32"):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         if capacity % num_shards != 0:
@@ -197,8 +197,10 @@ class ShardedAdapterRegistry:
         self.capacity = capacity
         self.num_shards = num_shards
         self.capacity_per_shard = capacity // num_shards
+        self.bank_dtype = bank_dtype
         self.shards: List[AdapterRegistry] = [
-            AdapterRegistry(cfg, self.capacity_per_shard, rank)
+            AdapterRegistry(cfg, self.capacity_per_shard, rank,
+                            bank_dtype=bank_dtype)
             for _ in range(num_shards)]
         self._home: Dict[Any, int] = {}
         self._bank_cache: Optional[Params] = None
@@ -255,6 +257,9 @@ class ShardedAdapterRegistry:
                              default_priority=default_priority)
 
     def evict(self, client_id) -> None:
+        if client_id not in self._home:
+            raise KeyError(f"client {client_id!r} is not resident "
+                           f"(resident: {self.resident})")
         s = self._home.pop(client_id)
         self.shards[s].evict(client_id)
         self._bank_cache = None
