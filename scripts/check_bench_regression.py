@@ -1,19 +1,30 @@
 """Fail CI when a benchmarked serving metric regresses past tolerance.
 
-The bench-gate CI job runs ``benchmarks/multitenant_bench.py --smoke``
-(which merges a ``smoke`` throughput section into ``BENCH_serving.json``)
-and then this script, which compares the fresh number against the
-committed baseline:
+The bench-gate CI job runs ``benchmarks/multitenant_bench.py`` (which
+merges its sections into ``BENCH_serving.json``) and then this script,
+which compares the fresh numbers against committed baselines.  One
+manifest-driven invocation checks every gate:
 
     python scripts/check_bench_regression.py \
         --current BENCH_serving.json \
-        --baseline benchmarks/baselines/serving_smoke.json
+        --manifest benchmarks/baselines/manifest.json
 
-Exit 1 when ``current < baseline * (1 - max_regression)``.  Improvements
-never fail (ratchet the baseline with ``--update`` when a PR makes the
-smoke workload legitimately faster — or slower, with justification in the
-PR).  ``BENCH_MAX_REGRESSION`` overrides the tolerance without a code
-change (shared CI runners are noisier than a quiet dev box).
+The manifest lists gates as ``{"baseline": <path>, "key": <dotted>,
+"max_regression": <fraction>, "direction": "higher"|"lower"}``.
+``direction`` defaults to ``"higher"`` (throughput-like: fail when
+``current < baseline * (1 - max_regression)``); ``"lower"`` gates
+latency-like metrics (fail when ``current > baseline *
+(1 + max_regression)``).  Improvements never fail in either direction —
+ratchet baselines with ``--update`` when a PR legitimately moves a
+workload (and justify in the PR).  ``BENCH_MAX_REGRESSION`` overrides
+the tolerance of gates that do not pin their own (shared CI runners are
+noisier than a quiet dev box).
+
+The single-gate form (``--baseline`` + ``--key``) still works for local
+spot checks.  ``--update`` MERGES the measured value into the baseline
+file, preserving its other keys — several gates may share one file
+(e.g. ``serving_trace.json`` carries both a throughput and a latency
+key).
 """
 from __future__ import annotations
 
@@ -32,54 +43,120 @@ def dig(record: dict, dotted: str):
     return cur
 
 
+def merge_key(path: str, dotted: str, value, note: str | None = None) -> None:
+    """Set ``dotted`` = ``value`` inside the JSON file at ``path``,
+    creating it if absent and leaving every other key untouched."""
+    record: dict = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            record = json.load(f)
+    if note and "note" not in record:
+        record["note"] = note
+    cur = record
+    parts = dotted.split(".")
+    for part in parts[:-1]:
+        cur = cur.setdefault(part, {})
+    cur[parts[-1]] = value
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+
+
+def check_gate(current_record: dict, baseline_path: str, key: str,
+               max_regression: float, direction: str = "higher",
+               update: bool = False) -> bool:
+    """Run one gate; returns True when it passes (or was updated)."""
+    current = dig(current_record, key)
+    if update:
+        merge_key(baseline_path, key, current,
+                  note="bench-gate baseline; refresh with "
+                       "scripts/check_bench_regression.py --update")
+        print(f"baseline updated: {key} = {current:.1f} -> {baseline_path}")
+        return True
+    with open(baseline_path) as f:
+        baseline = dig(json.load(f), key)
+    ratio = current / baseline if baseline else float("inf")
+    if direction == "lower":
+        ceil = baseline * (1.0 + max_regression)
+        ok = current <= ceil
+        bound = f"ceil={ceil:.1f} at +{max_regression:.0%}"
+    else:
+        floor = baseline * (1.0 - max_regression)
+        ok = current >= floor
+        bound = f"floor={floor:.1f} at -{max_regression:.0%}"
+    verdict = "OK" if ok else "REGRESSION"
+    print(f"{key}: current={current:.1f} baseline={baseline:.1f} "
+          f"({ratio:.2f}x, {bound}) -> {verdict}")
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--current", default="BENCH_serving.json",
                     help="bench record produced by the current run")
+    ap.add_argument("--manifest", default=None,
+                    help="JSON manifest listing every gate "
+                         "(benchmarks/baselines/manifest.json); replaces "
+                         "--baseline/--key")
     ap.add_argument("--baseline",
                     default="benchmarks/baselines/serving_smoke.json",
-                    help="committed baseline record")
+                    help="committed baseline record (single-gate mode)")
     ap.add_argument("--key", default="smoke.tok_per_s",
-                    help="dotted path to the gated metric (higher = better)")
+                    help="dotted path to the gated metric "
+                         "(single-gate mode)")
+    ap.add_argument("--direction", choices=("higher", "lower"),
+                    default="higher",
+                    help="'higher' = throughput-like (drop fails); "
+                         "'lower' = latency-like (rise fails)")
+    env_tol = os.environ.get("BENCH_MAX_REGRESSION")
     ap.add_argument("--max-regression", type=float,
-                    default=float(os.environ.get("BENCH_MAX_REGRESSION",
-                                                 "0.25")),
-                    help="allowed fractional drop (default 0.25 = 25%%)")
+                    default=float(env_tol) if env_tol is not None else None,
+                    help="allowed fractional regression; in manifest mode "
+                         "this (or BENCH_MAX_REGRESSION) only overrides "
+                         "gates without their own value "
+                         "(single-gate default 0.25)")
     ap.add_argument("--update", action="store_true",
-                    help="rewrite the baseline with the current value")
+                    help="merge the measured value(s) into the baseline "
+                         "file(s) instead of checking")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
-        current = dig(json.load(f), args.key)
+        current_record = json.load(f)
 
-    if args.update:
-        nested: dict = {"note": "smoke-gate baseline; refresh with "
-                                "scripts/check_bench_regression.py --update"}
-        cur = nested
-        parts = args.key.split(".")
-        for part in parts[:-1]:
-            cur = cur.setdefault(part, {})
-        cur[parts[-1]] = current
-        os.makedirs(os.path.dirname(args.baseline) or ".", exist_ok=True)
-        with open(args.baseline, "w") as f:
-            json.dump(nested, f, indent=2)
-            f.write("\n")
-        print(f"baseline updated: {args.key} = {current:.1f}")
+    if args.manifest:
+        with open(args.manifest) as f:
+            manifest = json.load(f)
+        gates = manifest.get("gates")
+        if not gates:
+            print(f"manifest {args.manifest} has no gates", file=sys.stderr)
+            return 2
+        failed = []
+        for g in gates:
+            tol = g.get("max_regression")
+            if args.max_regression is not None:
+                tol = args.max_regression if tol is None else tol
+            if tol is None:
+                tol = 0.25
+            ok = check_gate(current_record, g["baseline"], g["key"],
+                            float(tol), g.get("direction", "higher"),
+                            update=args.update)
+            if not ok:
+                failed.append(g["key"])
+        if failed:
+            print(f"bench gate failed for {', '.join(failed)}: regressed "
+                  "past tolerance; if intentional, refresh baselines with "
+                  "--update and justify in the PR", file=sys.stderr)
+            return 1
         return 0
 
-    with open(args.baseline) as f:
-        baseline = dig(json.load(f), args.key)
-
-    floor = baseline * (1.0 - args.max_regression)
-    ratio = current / baseline if baseline else float("inf")
-    verdict = "OK" if current >= floor else "REGRESSION"
-    print(f"{args.key}: current={current:.1f} baseline={baseline:.1f} "
-          f"({ratio:.2f}x, floor={floor:.1f} at "
-          f"-{args.max_regression:.0%}) -> {verdict}")
-    if current < floor:
-        print("bench gate failed: smoke throughput regressed past "
-              "tolerance; if intentional, refresh the baseline with "
-              "--update and justify in the PR", file=sys.stderr)
+    tol = args.max_regression if args.max_regression is not None else 0.25
+    ok = check_gate(current_record, args.baseline, args.key, tol,
+                    args.direction, update=args.update)
+    if not ok:
+        print("bench gate failed: metric regressed past tolerance; if "
+              "intentional, refresh the baseline with --update and "
+              "justify in the PR", file=sys.stderr)
         return 1
     return 0
 

@@ -23,25 +23,26 @@ import sys
 # seconds per file on the reference CPU box (quiet, interpret-mode Pallas);
 # balance only needs relative magnitudes
 WEIGHTS = {
-    "tests/test_models.py": 190,
-    "tests/test_arch_smoke.py": 140,
-    "tests/test_baselines.py": 99,
-    "tests/test_serving_sim.py": 95,
-    "tests/test_continuous.py": 73,
-    "tests/test_sched_policy.py": 40,
-    "tests/test_sharded_serving.py": 22,
-    "tests/test_spec_decode.py": 35,
-    "tests/test_multitenant.py": 37,
-    "tests/test_fdlora.py": 33,
-    "tests/test_distributed.py": 29,
-    "tests/test_kernels.py": 26,
-    "tests/test_prefix_cache.py": 26,
-    "tests/test_quant.py": 90,
-    "tests/test_training.py": 20,
-    "tests/test_launch.py": 4,
-    "tests/test_property.py": 4,
-    "tests/test_ci_shard.py": 4,
-    "tests/test_docs.py": 3,
+    "tests/test_models.py": 132,
+    "tests/test_quant.py": 100,
+    "tests/test_arch_smoke.py": 93,
+    "tests/test_baselines.py": 64,
+    "tests/test_continuous.py": 62,
+    "tests/test_serving_sim.py": 60,
+    "tests/test_multitenant.py": 22,
+    "tests/test_distributed.py": 21,
+    "tests/test_spec_decode.py": 20,
+    "tests/test_fdlora.py": 19,
+    "tests/test_sched_policy.py": 18,
+    "tests/test_sharded_serving.py": 16,
+    "tests/test_prefix_cache.py": 16,
+    "tests/test_kernels.py": 15,
+    "tests/test_trace_serving.py": 9,
+    "tests/test_training.py": 7,
+    "tests/test_launch.py": 3,
+    "tests/test_property.py": 3,
+    "tests/test_ci_shard.py": 2,
+    "tests/test_docs.py": 2,
 }
 DEFAULT_WEIGHT = 30
 

@@ -14,11 +14,22 @@ per-request budgets, admission into freed slots):
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
         --tenants 4 --batch 4 --requests 12 --continuous
+
+Open-loop asyncio serving (requests arrive on a synthetic trace at
+arbitrary wall-clock times, tokens stream back per request, graceful
+drain; see ``serving/trace.py`` for the workload generator):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+        --tenants 4 --batch 4 --serve --trace-requests 24 \
+        --trace-arrival bursty --trace-rate 20
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
+from collections import deque
+from typing import AsyncIterator, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +42,168 @@ from repro.data.tokenizer import ByteTokenizer
 from repro.models.api import get_model
 from repro.serving.engine import (Engine, MultiTenantEngine, Request,
                                   ServeConfig)
+from repro.serving.kv_cache import blocks_needed
 from repro.serving.registry import AdapterRegistry
 from repro.serving.sharded import ShardedAdapterRegistry
 from repro.training.checkpoint import load_checkpoint
+
+
+class AsyncServer:
+    """Asyncio front end over an open-loop :class:`StreamSession`.
+
+    Callers ``await submit(request)`` at ANY time — including while other
+    requests are mid-flight — and consume their tokens incrementally via
+    ``async for toks in stream(rid)``.  One pump coroutine owns the
+    session: it drains staged submissions between engine rounds (so
+    scheduler state is only ever touched from the event-loop thread) and
+    runs each blocking :meth:`StreamSession.step` in the default executor,
+    which keeps the event loop responsive while the device computes —
+    with ``ServeConfig.overlap`` the host side of a step is mostly
+    planning, so submissions interleave at chunk granularity.
+
+    ``await drain()`` is the graceful shutdown: already-accepted requests
+    run to completion, late ``submit`` calls are rejected, and the
+    session's ``last_stats`` (wall-clock queue waits per class) come back.
+    ``async with AsyncServer(...)`` drains on exit.
+    """
+
+    def __init__(self, engine: MultiTenantEngine, sc: ServeConfig):
+        self._engine, self._sc = engine, sc
+        self._ses = engine.session(sc)          # open loop: starts empty
+        self._staged: deque = deque()           # (Request, arrival, Future)
+        self._queues: Dict[int, asyncio.Queue] = {}
+        self._wake: Optional[asyncio.Event] = None
+        self._pump_task: Optional[asyncio.Task] = None
+        self._closing = False
+        self.stats: Optional[dict] = None
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "AsyncServer":
+        if self._pump_task is None:
+            self._wake = asyncio.Event()
+            self._pump_task = asyncio.ensure_future(self._pump())
+        return self
+
+    async def drain(self) -> dict:
+        """Stop accepting; run accepted requests to completion; return the
+        session's ``last_stats``."""
+        self._closing = True
+        if self._pump_task is not None:
+            self._wake.set()
+            await self._pump_task
+        else:
+            self.stats = self._ses.finalize()
+        return self.stats
+
+    async def __aenter__(self) -> "AsyncServer":
+        return self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.drain()
+
+    # -- client API ----------------------------------------------------------
+    async def submit(self, request: Request) -> int:
+        """Stage ``request`` and return its rid once the pump accepts it.
+        The submission wall-clock time is recorded as the request's
+        arrival, so ``last_stats`` queue waits are end-to-end."""
+        if self._closing:
+            raise RuntimeError("AsyncServer is draining; submit rejected")
+        if self._pump_task is None:
+            raise RuntimeError("AsyncServer not started (use 'async with' "
+                               "or call start())")
+        fut = asyncio.get_running_loop().create_future()
+        self._staged.append((request, time.monotonic(), fut))
+        self._wake.set()
+        return await fut
+
+    async def stream(self, rid: int) -> AsyncIterator[List[int]]:
+        """Token increments for one request, ending after its final chunk
+        (budget reached or EOS)."""
+        q = self._queues[rid]
+        while True:
+            toks, fin = await q.get()
+            if toks:
+                yield toks
+            if fin:
+                return
+
+    # -- engine pump ---------------------------------------------------------
+    async def _pump(self) -> None:
+        loop = asyncio.get_running_loop()
+        ses = self._ses
+        while True:
+            while self._staged:                 # intake between rounds
+                req, arrival, fut = self._staged.popleft()
+                rid = ses.submit(req, arrival_time=arrival)
+                self._queues[rid] = asyncio.Queue()
+                fut.set_result(rid)
+            if not ses.has_work:
+                if self._closing:
+                    break
+                self._wake.clear()              # idle: park until a submit
+                await self._wake.wait()
+                continue
+            events = await loop.run_in_executor(None, ses.step)
+            for rid, toks, fin in events:
+                q = self._queues.get(rid)
+                if q is not None:
+                    q.put_nowait((list(toks), fin))
+                    if fin:
+                        self._queues.pop(rid, None)
+        self.stats = ses.finalize()
+
+
+def _print_class_stats(stats: dict) -> None:
+    """Per-class queue-wait lines.  Open-loop sessions (driven with
+    arrival times) report WALL-CLOCK percentiles; closed-loop batches
+    keep the admission-round numbers — rounds are meaningless as a
+    latency unit when requests arrive over an open interval."""
+    for cname, cs in stats["classes"].items():
+        if "wait_wall_ms_p50" in cs:
+            print(f"  class {cname}: {cs['admitted']} admitted, "
+                  f"queue wait p50 {cs['wait_wall_ms_p50']:.1f} / "
+                  f"p99 {cs['wait_wall_ms_p99']:.1f} ms wall, "
+                  f"{cs['preemptions']} preemptions")
+        else:
+            print(f"  class {cname}: {cs['admitted']} admitted, "
+                  f"queue wait p50 {cs['wait_p50']:.0f} / "
+                  f"p99 {cs['wait_p99']:.0f} rounds, "
+                  f"{cs['preemptions']} preemptions")
+
+
+async def _serve_demo(eng: MultiTenantEngine, sc: ServeConfig, trace,
+                      time_scale: float, tok: ByteTokenizer) -> dict:
+    """Drive a synthetic open-loop trace through :class:`AsyncServer`:
+    one client coroutine per trace entry sleeps until its scheduled
+    arrival, submits, and consumes its stream; the server drains
+    gracefully once every accepted request finishes."""
+    t0 = time.monotonic()
+    lat: Dict[int, Tuple[float, int, float]] = {}   # rid -> (ttft, n, span)
+    async with AsyncServer(eng, sc) as srv:
+        async def client(i, e):
+            sched = e.arrival_s * time_scale
+            await asyncio.sleep(max(0.0, sched - (time.monotonic() - t0)))
+            rid = await srv.submit(e.request())
+            first = last = None
+            n = 0
+            async for toks in srv.stream(rid):
+                now = time.monotonic() - t0
+                first = now if first is None else first
+                last, n = now, n + len(toks)
+            lat[i] = (first - sched, n, (last - first) if n > 1 else 0.0)
+
+        await asyncio.gather(*(client(i, e) for i, e in enumerate(trace)))
+        elapsed = time.monotonic() - t0
+    ttfts = sorted(v[0] for v in lat.values())
+    total = sum(v[1] for v in lat.values())
+    print(f"open-loop serve: {len(trace)} requests, {total} tokens in "
+          f"{elapsed:.2f}s ({total / elapsed:.1f} tok/s goodput incl. "
+          f"compile); TTFT p50 "
+          f"{1e3 * float(np.percentile(ttfts, 50)):.1f} / p99 "
+          f"{1e3 * float(np.percentile(ttfts, 99)):.1f} ms "
+          f"[overlap={'on' if sc.overlap else 'off'}]")
+    _print_class_stats(srv.stats)
+    return srv.stats
 
 
 def main(argv=None):
@@ -102,6 +272,28 @@ def main(argv=None):
                          "'jnp' gather oracle (CPU default) or 'pallas' "
                          "kernels (interpret-mode on CPU; identical greedy "
                          "tokens)")
+    ap.add_argument("--serve", action="store_true",
+                    help="with --tenants: open-loop asyncio serving — "
+                         "requests arrive on a synthetic trace at wall-"
+                         "clock times, tokens stream back per request, "
+                         "graceful drain; reports TTFT percentiles and "
+                         "WALL-CLOCK per-class queue waits")
+    ap.add_argument("--trace-requests", type=int, default=24,
+                    help="--serve: trace length (requests)")
+    ap.add_argument("--trace-arrival", default="bursty",
+                    choices=["poisson", "bursty"],
+                    help="--serve: arrival process (same long-run rate)")
+    ap.add_argument("--trace-rate", type=float, default=20.0,
+                    help="--serve: mean arrival rate, requests/second")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="--serve: workload generator seed")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="--serve: multiply trace arrival times (<1 "
+                         "compresses the trace = higher load)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable async overlapped dispatch (run the "
+                         "synchronous reference loop; tokens are bitwise "
+                         "identical either way)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -117,9 +309,11 @@ def main(argv=None):
     sc = ServeConfig(batch_size=args.batch, max_new_tokens=args.new_tokens,
                      cache_len=args.cache_len)
 
-    if args.continuous and args.tenants <= 0:
-        raise SystemExit("--continuous needs --tenants N (the continuous "
-                         "scheduler serves the multi-tenant engine)")
+    if (args.continuous or args.serve) and args.tenants <= 0:
+        raise SystemExit("--continuous/--serve need --tenants N (the "
+                         "continuous scheduler serves the multi-tenant "
+                         "engine)")
+    sc.overlap = not args.no_overlap
     if args.tenants > 0:
         if args.adapters or args.dual:
             raise SystemExit("--tenants is a self-contained demo (random "
@@ -139,6 +333,31 @@ def main(argv=None):
             registry.register_dual(f"client{i}", ad_p, ad_s,
                                    jnp.array([0.6, 0.6]))
         eng = MultiTenantEngine(model, cfg, params, registry)
+        if args.serve:
+            from repro.serving.trace import synth_trace
+            sc.block_size = args.block_size
+            sc.prefill_chunk = args.prefill_chunk
+            sc.sched_policy = args.sched_policy
+            sc.paged_backend = args.paged_backend
+            sc.kv_dtype = args.kv_dtype
+            sc.num_shards = args.shards
+            # open-loop sessions need the pool pinned up front: size it for
+            # batch_size concurrent worst-case spans (prompt_max + out_max)
+            prompt_max, out_max = 32, args.new_tokens
+            bp = blocks_needed(prompt_max + out_max, sc.block_size)
+            nb = args.batch * bp
+            if args.shards > 1:
+                nb = -(-nb // args.shards) * args.shards
+            sc.num_blocks = 1 + nb
+            sc.max_blocks_per_slot = bp
+            trace = synth_trace(
+                args.trace_seed, args.trace_requests,
+                arrival=args.trace_arrival, rate=args.trace_rate,
+                prompt_max=prompt_max, out_max=out_max,
+                clients=tuple(f"client{i}" for i in range(args.tenants)),
+                vocab_size=cfg.vocab_size)
+            asyncio.run(_serve_demo(eng, sc, trace, args.time_scale, tok))
+            return
         if args.continuous:
             # ragged stream: varied prompt lengths AND per-request budgets;
             # the scheduler admits queued requests as slots free up.
@@ -195,11 +414,7 @@ def main(argv=None):
                       f"{stats['verify_dispatches']} verify dispatches; "
                       f"{stats['rollback_tokens']} tokens / "
                       f"{stats['rollback_blocks']} blocks rolled back")
-            for cname, cs in stats["classes"].items():
-                print(f"  class {cname}: {cs['admitted']} admitted, "
-                      f"queue wait p50 {cs['wait_p50']:.0f} / "
-                      f"p99 {cs['wait_p99']:.0f} rounds, "
-                      f"{cs['preemptions']} preemptions")
+            _print_class_stats(stats)
             if args.prefix_cache:
                 print(f"  prefix cache (cold call): "
                       f"{stats['prefix_hit_tokens']}/"

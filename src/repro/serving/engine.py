@@ -105,6 +105,21 @@ class ServeConfig:
     #                                  contiguous, so shard boundaries land
     #                                  on device boundaries).  None = no
     #                                  mesh (single device, the default).
+    overlap: bool = True             # async overlapped dispatch (continuous
+    #                                  path): the host plans and enqueues
+    #                                  chunk N+1 while the device executes
+    #                                  chunk N, materialising a chunk's
+    #                                  samples ONLY when the next plan can
+    #                                  depend on them — i.e. when the chunk
+    #                                  emits tokens (feedback rows, a
+    #                                  completing prompt, decode/verify).
+    #                                  Prompt-only prefill chunks pipeline
+    #                                  with zero host-device round-trips.
+    #                                  False = the synchronous reference
+    #                                  loop (one host sync per chunk); both
+    #                                  run the SAME dispatches with the SAME
+    #                                  inputs, so token streams are BITWISE
+    #                                  identical either way.
     kv_dtype: str = "f32"            # paged K/V pool storage: "f32" keeps
     #                                  the unquantized (bf16) pools exactly
     #                                  as before; "int8" stores blocks
@@ -186,26 +201,38 @@ class _EngineBase:
         dispatch per chunk instead of per token.  (Prompts are fed by
         ``_prefill_chunk``; every active slot here is past its prompt.)
         ``backend`` (static) selects the paged-attention impl
-        (``ServeConfig.paged_backend``).  Returns the (chunk_cap, K)
-        sampled block (rows >= n_steps are garbage; the scheduler slices)."""
+        (``ServeConfig.paged_backend``).  The per-round rng split lives
+        INSIDE the jit (same split math as a host-side
+        ``jax.random.split`` — the sampled stream is bitwise unchanged)
+        so the serving loop can chain the returned key without a host
+        round-trip.  Returns the (chunk_cap, K) sampled block (rows >=
+        n_steps are garbage; the scheduler slices), the cache, each
+        slot's final context length (``lengths + n_steps * active`` — the
+        device-side mirror of the host pool's ``advance`` bookkeeping),
+        each slot's final sampled token (the feed for the next chunk,
+        letting steady-state decode chain device-to-device without
+        materialising this chunk first; garbage for inactive rows, whose
+        writes sink into reserved block 0 either way) and the advanced
+        rng key."""
         K = ids.shape[0]
+        rng, sub = jax.random.split(rng)
 
         def body(t, carry):
-            cache, last, lengths, rng, out = carry
-            rng, sub = jax.random.split(rng)
+            cache, last, lengths, sub, out = carry
+            sub, key = jax.random.split(sub)
             logits, cache = self.model.decode_step(
                 params, cache, last[:, None], lengths, adapters=adapters,
                 lora_scale=self.scale, adapter_ids=ids,
                 block_tables=block_tables, paged_backend=backend)
-            nxt = self._sample(logits, sub, temperature)
+            nxt = self._sample(logits, key, temperature)
             out = out.at[t].set(nxt)
-            return (cache, nxt, lengths + active, rng, out)
+            return (cache, nxt, lengths + active, sub, out)
 
         out0 = jnp.zeros((chunk_cap, K), jnp.int32)
         carry = jax.lax.fori_loop(
-            0, n_steps, body, (cache, last, lengths, rng, out0))
-        cache, _, _, _, out = carry
-        return out, cache
+            0, n_steps, body, (cache, last, lengths, sub, out0))
+        cache, new_last, new_lens, _, out = carry
+        return out, cache, new_lens, new_last, rng
 
     def _prefill_chunk_impl(self, params, adapters, ids, cache, tokens,
                             lengths, n_new, block_tables, rng, temperature,
@@ -214,7 +241,11 @@ class _EngineBase:
         — ``n_new[k]`` valid per row — through the paged cache, and sample
         each row's logits at its LAST valid position (the first emitted
         token for rows whose prompt just completed; garbage, discarded by
-        the scheduler, for the rest).  Returns ((K,) sampled, cache)."""
+        the scheduler, for the rest).  Like ``_decode_chunk_impl`` the
+        per-round rng split happens inside the jit (bitwise-identical
+        stream) and the advanced lengths come back as a device array.
+        Returns ((K,) sampled, cache, lengths + n_new, rng)."""
+        rng, sub = jax.random.split(rng)
         logits, cache = self.model.prefill_step(
             params, cache, tokens, lengths, n_new, adapters=adapters,
             lora_scale=self.scale, adapter_ids=ids,
@@ -222,7 +253,8 @@ class _EngineBase:
         K, T, _ = logits.shape
         rows = jnp.arange(K, dtype=jnp.int32)
         lg = logits[rows, jnp.clip(n_new - 1, 0, T - 1)]       # (K, V)
-        return self._sample(lg[:, None], rng, temperature), cache
+        return (self._sample(lg[:, None], sub, temperature), cache,
+                lengths + n_new, rng)
 
     def _verify_chunk_impl(self, params, adapters, ids, cache, tokens,
                            lengths, n_new, block_tables, backend=None):
@@ -369,6 +401,22 @@ class MultiTenantEngine(_EngineBase):
         return kv, cache, False
 
     # -- continuous batching (the serving path) ------------------------------
+    def session(self, sc: ServeConfig,
+                requests: Optional[Sequence[Request]] = None
+                ) -> "StreamSession":
+        """An open-intake continuous-batching session over one paged pool.
+
+        With ``requests`` the session starts closed-loop (the whole batch
+        submitted up front — exactly what ``generate_stream`` drives).
+        With ``requests=None`` it starts EMPTY and callers
+        :meth:`StreamSession.submit` requests at arbitrary times between
+        :meth:`StreamSession.step` calls — the open-loop mode behind
+        ``launch/serve.py --serve`` and the trace harness
+        (``serving/trace.py``).  Open-loop sessions need
+        ``sc.num_blocks`` pinned: pool geometry cannot be derived from
+        requests that have not arrived yet."""
+        return StreamSession(self, sc, requests)
+
     def generate_stream(self, requests: Sequence[Request], sc: ServeConfig
                         ) -> Iterator[Tuple[int, List[int], bool]]:
         """Continuous batching over ``sc.batch_size`` slots of a paged KV
@@ -389,187 +437,17 @@ class MultiTenantEngine(_EngineBase):
         newest active request goes, as before.
         ``rid`` is the request's index in ``requests``.  After the stream
         drains, ``self.last_stats`` records dispatch and preemption
-        counters plus per-class queue-wait percentiles for the run."""
+        counters plus per-class queue-wait percentiles for the run.
+
+        The loop body lives in :class:`StreamSession` (scheduling split
+        from dispatch; ``sc.overlap`` pipelines host planning with device
+        execution) — this wrapper is the closed-loop driver."""
         if not requests:
             raise ValueError("empty request batch")
-        if sc.spec_decode:
-            if sc.temperature > 0:
-                raise ValueError(
-                    "spec_decode is greedy-only (temperature must be 0): "
-                    "acceptance compares drafts against argmax tokens, "
-                    "which is what makes the stream bitwise-identical to "
-                    "non-speculative decoding")
-            if sc.spec_k < 1:
-                raise ValueError(f"spec_decode needs spec_k >= 1, "
-                                 f"got {sc.spec_k}")
-        if sc.kv_dtype not in ("f32", "int8"):
-            raise ValueError(
-                f"kv_dtype must be 'f32' or 'int8', got {sc.kv_dtype!r}")
-        if sc.num_shards < 1:
-            raise ValueError(f"num_shards must be >= 1, got {sc.num_shards}")
-        if sc.num_shards > 1 and sc.batch_size % sc.num_shards != 0:
-            raise ValueError(
-                f"batch_size {sc.batch_size} not divisible by "
-                f"{sc.num_shards} shards (slots split evenly)")
-        prompts = [np.asarray(r.prompt, np.int32).reshape(-1)
-                   for r in requests]
-        budgets = [sc.max_new_tokens if r.max_new_tokens is None
-                   else r.max_new_tokens for r in requests]
-        max_span = max(p.size + b for p, b in zip(prompts, budgets))
-        if sc.prefix_cache and sc.num_blocks is not None:
-            # STABLE pool geometry: cross-call warm reuse must not depend
-            # on this batch's request count or longest span (a batch-derived
-            # key would silently drop the cache whenever traffic varies) —
-            # slots track batch_size and the table spans the whole pool
-            # unless pinned tighter.  Extra masked gather lanes are exact
-            # zeros, so the wider table stays bitwise-equal.
-            num_slots = max(1, sc.batch_size)
-            num_blocks = sc.num_blocks
-            blocks_per = sc.max_blocks_per_slot or (num_blocks - 1)
-        else:
-            num_slots = max(1, min(sc.batch_size, len(requests)))
-            if sc.num_shards > 1:      # equal per-shard slot counts
-                num_slots = (-(-num_slots // sc.num_shards) * sc.num_shards)
-            blocks_per = (sc.max_blocks_per_slot
-                          or blocks_needed(max_span, sc.block_size))
-            num_blocks = sc.num_blocks or (1 + num_slots * blocks_per)
-        if sc.num_shards > 1 and (num_blocks - 1) % sc.num_shards != 0:
-            raise ValueError(
-                f"allocatable blocks {num_blocks - 1} not divisible by "
-                f"{sc.num_shards} shards (set num_blocks = 1 + "
-                f"{sc.num_shards}*k)")
-        kv, cache, reused = self._paged_pool(num_slots, num_blocks,
-                                             blocks_per, sc)
-        evicted0 = kv.evicted_cached   # pool-lifetime counter; report delta
-        if sc.num_shards > 1:
-            sched: Any = ShardedScheduler(
-                kv, registry=self.registry, policy=sc.sched_policy,
-                aging_ticks=sc.sched_aging,
-                spec_k=sc.spec_k if sc.spec_decode else 0,
-                spec_ngram=sc.spec_ngram)
-        else:
-            sched = Scheduler(kv, policy=sc.sched_policy,
-                              aging_ticks=sc.sched_aging,
-                              spec_k=sc.spec_k if sc.spec_decode else 0,
-                              spec_ngram=sc.spec_ngram)
-        for rid, (r, p, b) in enumerate(zip(requests, prompts, budgets)):
-            # cached K/V depends on the adapter: scope hits by client AND
-            # by the registry's version of its weights (re-registration
-            # invalidates without any explicit flush)
-            scope = (r.client_id, self.registry.version(r.client_id))
-            # explicit request priority wins; else the client's registered
-            # default; else the scheduler's baseline class
-            priority = (r.priority
-                        or self.registry.default_priority(r.client_id)
-                        or "batch")
-            sched.submit(rid, r.client_id, p, b, scope=scope,
-                         priority=priority, deadline=r.deadline)
-
-        bank = self.registry.bank()
-        ids = np.zeros((num_slots,), np.int32)
-        rng = jax.random.PRNGKey(sc.seed)
-        self.last_stats = None       # a partially consumed stream has none
-        # Preemption replays prompt+emitted, so prefill chunks must fit the
-        # longest possible replayed prompt too — width is fixed per run to
-        # keep one compiled prefill program.
-        T = max(1, min(sc.prefill_chunk, max_span - 1))
-        # verify chunks have their own fixed width (drafted tokens + the
-        # feedback token) so the verify program also compiles once per run
-        Tv = 1 + sc.spec_k
-        # EOS can end a row long before its budget; keep chunks short so its
-        # slot frees (and admits the queue head) at the next boundary.
-        cap = min(sc.scan_chunk, 8) if sc.eos_id is not None else sc.scan_chunk
-        # with a mesh, dispatches trace under it so the "data"-axis sharding
-        # constraints in models/layers.py bind the fused batch to devices;
-        # without one the constraints no-op (single-device bitwise path)
-        mesh_scope = (sc.mesh if sc.mesh is not None
-                      else contextlib.nullcontext())
-        while sched.has_work:
-            for slot, cid in sched.admit():
-                ids[slot] = self.registry.acquire(cid)
-                cache = reset_slot(cache, slot)
-            plan = sched.prepare_chunk(T, cap)
-            if plan is None:                 # nothing active: admit failed
-                raise RuntimeError("scheduler stalled with queued work")
-            bt, lens = kv.device_tables()
-            rng, sub = jax.random.split(rng)
-            if plan[0] == "prefill":
-                arrs = sched.prefill_arrays(T)
-                with mesh_scope:
-                    sampled, cache = self._prefill_chunk(
-                        self.params, bank, jnp.asarray(ids), cache,
-                        jnp.asarray(arrs["tokens"]), lens,
-                        jnp.asarray(arrs["n_new"]), bt, sub, sc.temperature,
-                        backend=sc.paged_backend)
-                events = sched.observe_prefill(arrs["n_new"],
-                                               np.asarray(sampled),
-                                               eos_id=sc.eos_id)
-            elif plan[0] == "verify":
-                arrs = sched.verify_arrays(Tv)
-                with mesh_scope:
-                    greedy, cache = self._verify_chunk(
-                        self.params, bank, jnp.asarray(ids), cache,
-                        jnp.asarray(arrs["tokens"]), lens,
-                        jnp.asarray(arrs["n_new"]), bt,
-                        backend=sc.paged_backend)
-                events = sched.observe_verify(arrs["n_new"],
-                                              np.asarray(greedy),
-                                              eos_id=sc.eos_id)
-            else:
-                n = plan[1]
-                st = sched.chunk_arrays()
-                with mesh_scope:
-                    out, cache = self._decode_chunk(
-                        self.params, bank, jnp.asarray(ids), cache,
-                        jnp.asarray(st["last"]), jnp.asarray(st["active"]),
-                        lens, bt, jnp.int32(n), sub, sc.temperature,
-                        chunk_cap=cap, backend=sc.paged_backend)
-                events = sched.observe_chunk(np.asarray(out)[:n],
-                                             eos_id=sc.eos_id)
-            yield from events
-        classes = {}
-        for cname in PRIORITY_CLASSES:
-            waits = sched.wait_ticks.get(cname, [])
-            if not waits and cname not in sched.preemptions_by_class:
-                continue                     # class unused this stream
-            classes[cname] = {
-                "admitted": len(waits),
-                "wait_p50": float(np.percentile(waits, 50)) if waits else 0.0,
-                "wait_p99": float(np.percentile(waits, 99)) if waits else 0.0,
-                "preemptions": sched.preemptions_by_class.get(cname, 0)}
-        self.last_stats = {"prefill_dispatches": sched.prefill_dispatches,
-                           "decode_dispatches": sched.decode_dispatches,
-                           "decode_steps": sched.steps,
-                           "spec_decode": sc.spec_decode,
-                           "verify_dispatches": sched.verify_dispatches,
-                           "drafted_tokens": sched.drafted_tokens,
-                           "accepted_tokens": sched.accepted_tokens,
-                           "acceptance_rate": (sched.accepted_tokens
-                                               / max(1, sched.drafted_tokens)),
-                           "rollback_tokens": sched.rollback_tokens,
-                           "rollback_blocks": sched.rollback_blocks,
-                           "preemptions": sched.preemptions,
-                           "prompt_tokens": sched.prompt_tokens,
-                           "prefix_hit_tokens": sched.prefix_hit_tokens,
-                           "prefix_hit_rate": (sched.prefix_hit_tokens
-                                               / max(1, sched.prompt_tokens)),
-                           "prefix_cached_blocks": kv.cached_blocks,
-                           "prefix_evictions": kv.evicted_cached - evicted0,
-                           "prefix_pool_reused": reused,
-                           "sched_policy": sc.sched_policy,
-                           "num_shards": sc.num_shards,
-                           "kv_dtype": sc.kv_dtype,
-                           # queue waits in admission rounds (ticks), by class
-                           "classes": classes,
-                           "victim_sealed_fraction_mean": (
-                               float(np.mean(sched.victim_sealed_fractions))
-                               if sched.victim_sealed_fractions else 0.0)}
-        if sc.num_shards > 1:
-            self.last_stats["shard_placements"] = dict(sched.placed)
-        if sc.prefix_cache:
-            key = (num_slots, sc.block_size, num_blocks, blocks_per,
-                   sc.num_shards, sc.kv_dtype)
-            self._warm = (key, kv, cache)
+        ses = StreamSession(self, sc, requests)
+        while ses.has_work:
+            yield from ses.step()
+        ses.finalize()
 
     def generate(self, requests: Sequence[Request],
                  sc: ServeConfig) -> List[np.ndarray]:
@@ -599,3 +477,418 @@ class MultiTenantEngine(_EngineBase):
         prompts = jnp.stack([jnp.asarray(r.prompt, jnp.int32)
                              for r in requests])
         return self._run(self.params, self.registry.bank(), ids, prompts, sc)
+
+
+class StreamSession:
+    """One continuous-batching serving session over a paged KV pool.
+
+    ``MultiTenantEngine.generate_stream``'s loop body, split into an object
+    so SCHEDULING is separate from DISPATCH:
+
+      * :meth:`submit` — enqueue a request at ANY time (open intake): the
+        asyncio front end (``launch/serve.py --serve``) and the open-loop
+        trace driver (``serving/trace.py``) call it between steps while
+        earlier requests are mid-flight.  Closed-loop callers pass the
+        whole batch at construction instead.
+      * :meth:`step` — ONE engine round: admission -> chunk planning ->
+        device dispatch -> observation, returning the ``(rid, new_tokens,
+        finished)`` events the round produced (possibly none).
+      * :meth:`finalize` — drain bookkeeping: builds ``engine.last_stats``
+        and persists the warm prefix pool.  Idempotent.
+
+    **Overlapped dispatch** (``ServeConfig.overlap``, default True): device
+    chunks are enqueued through jax async dispatch and the host only
+    BLOCKS on a chunk's samples when the next plan can depend on them.
+    Decode and verify chunks always emit tokens, but a prefill chunk that
+    feeds only prompt tokens emits nothing (``Scheduler.chunk_emits``) and
+    its sampled array is garbage by construction — so it is handed to
+    ``observe_prefill`` as the UN-materialised device array (host-side
+    bookkeeping never reads it) and the host runs admission, prefix
+    matching and chunk planning for chunk N+1 — and enqueues its dispatch
+    — while the device is still executing chunk N.  Prompt-heavy phases,
+    the open-loop TTFT bottleneck, pipeline with zero host-device
+    round-trips.
+
+    Decode rounds pipeline through ONE-ROUND-DEFERRED OBSERVATION: when
+    the next plan provably cannot depend on a chunk's token values (no
+    slot finishes inside it — ``Scheduler.chunk_defer_safe`` — and no
+    EOS / speculation / prefix sealing / sharding is configured), the
+    chunk's counts advance immediately (``observe_chunk_counts``) while
+    its samples stay on device; the NEXT round dispatches chunk N+1 from
+    device-chained state (final sampled token, lengths, rng, cached
+    tables/ids) and only then materialises chunk N
+    (``observe_chunk_values``), so the host's blocking wait overlaps
+    chunk N+1's execution.  Events for a deferred chunk surface one
+    round late; the tokens per rid are unchanged.  Both settings run the
+    SAME dispatches with the SAME inputs, so token streams are BITWISE
+    identical; ``overlap=False`` is the synchronous reference loop (one
+    materialisation per chunk).
+    """
+
+    def __init__(self, engine: MultiTenantEngine, sc: ServeConfig,
+                 requests: Optional[Sequence[Request]] = None):
+        if sc.spec_decode:
+            if sc.temperature > 0:
+                raise ValueError(
+                    "spec_decode is greedy-only (temperature must be 0): "
+                    "acceptance compares drafts against argmax tokens, "
+                    "which is what makes the stream bitwise-identical to "
+                    "non-speculative decoding")
+            if sc.spec_k < 1:
+                raise ValueError(f"spec_decode needs spec_k >= 1, "
+                                 f"got {sc.spec_k}")
+        if sc.kv_dtype not in ("f32", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'f32' or 'int8', got {sc.kv_dtype!r}")
+        if sc.num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {sc.num_shards}")
+        if sc.num_shards > 1 and sc.batch_size % sc.num_shards != 0:
+            raise ValueError(
+                f"batch_size {sc.batch_size} not divisible by "
+                f"{sc.num_shards} shards (slots split evenly)")
+        self.engine, self.sc = engine, sc
+        self.open_loop = requests is None
+        if self.open_loop:
+            # pool geometry cannot be derived from requests that have not
+            # arrived yet — and must not be, or the compiled programs and
+            # any warm prefix pool would churn with traffic
+            if sc.num_blocks is None:
+                raise ValueError(
+                    "an open-loop StreamSession needs ServeConfig."
+                    "num_blocks pinned (pool geometry cannot follow "
+                    "requests that have not arrived yet)")
+            num_slots = max(1, sc.batch_size)
+            num_blocks = sc.num_blocks
+            blocks_per = sc.max_blocks_per_slot or (num_blocks - 1)
+            T = max(1, sc.prefill_chunk)
+        else:
+            prompts = [np.asarray(r.prompt, np.int32).reshape(-1)
+                       for r in requests]
+            budgets = [sc.max_new_tokens if r.max_new_tokens is None
+                       else r.max_new_tokens for r in requests]
+            max_span = max(p.size + b for p, b in zip(prompts, budgets))
+            if sc.prefix_cache and sc.num_blocks is not None:
+                # STABLE pool geometry: cross-call warm reuse must not
+                # depend on this batch's request count or longest span (a
+                # batch-derived key would silently drop the cache whenever
+                # traffic varies) — slots track batch_size and the table
+                # spans the whole pool unless pinned tighter.  Extra masked
+                # gather lanes are exact zeros, so the wider table stays
+                # bitwise-equal.
+                num_slots = max(1, sc.batch_size)
+                num_blocks = sc.num_blocks
+                blocks_per = sc.max_blocks_per_slot or (num_blocks - 1)
+            else:
+                num_slots = max(1, min(sc.batch_size, len(requests)))
+                if sc.num_shards > 1:      # equal per-shard slot counts
+                    num_slots = (-(-num_slots // sc.num_shards)
+                                 * sc.num_shards)
+                blocks_per = (sc.max_blocks_per_slot
+                              or blocks_needed(max_span, sc.block_size))
+                num_blocks = sc.num_blocks or (1 + num_slots * blocks_per)
+            # Preemption replays prompt+emitted, so prefill chunks must fit
+            # the longest possible replayed prompt too — width is fixed per
+            # run to keep one compiled prefill program.
+            T = max(1, min(sc.prefill_chunk, max_span - 1))
+        if sc.num_shards > 1 and (num_blocks - 1) % sc.num_shards != 0:
+            raise ValueError(
+                f"allocatable blocks {num_blocks - 1} not divisible by "
+                f"{sc.num_shards} shards (set num_blocks = 1 + "
+                f"{sc.num_shards}*k)")
+        self.kv, self.cache, self._reused = engine._paged_pool(
+            num_slots, num_blocks, blocks_per, sc)
+        self._geom_key = (num_slots, sc.block_size, num_blocks, blocks_per,
+                          sc.num_shards, sc.kv_dtype)
+        # pool-lifetime counter; stats report the delta for this session
+        self._evicted0 = self.kv.evicted_cached
+        if sc.num_shards > 1:
+            self.sched: Any = ShardedScheduler(
+                self.kv, registry=engine.registry, policy=sc.sched_policy,
+                aging_ticks=sc.sched_aging,
+                spec_k=sc.spec_k if sc.spec_decode else 0,
+                spec_ngram=sc.spec_ngram)
+        else:
+            self.sched = Scheduler(self.kv, policy=sc.sched_policy,
+                                   aging_ticks=sc.sched_aging,
+                                   spec_k=sc.spec_k if sc.spec_decode else 0,
+                                   spec_ngram=sc.spec_ngram)
+        self._next_rid = 0
+        if not self.open_loop:
+            for r in requests:
+                self.submit(r)
+        self.bank = engine.registry.bank()
+        self.ids = np.zeros((num_slots,), np.int32)
+        self.rng = jax.random.PRNGKey(sc.seed)
+        engine.last_stats = None     # a partially consumed stream has none
+        self.T = T
+        # verify chunks have their own fixed width (drafted tokens + the
+        # feedback token) so the verify program also compiles once per run
+        self.Tv = 1 + sc.spec_k
+        # EOS can end a row long before its budget; keep chunks short so
+        # its slot frees (and admits the queue head) at the next boundary.
+        self.cap = (min(sc.scan_chunk, 8) if sc.eos_id is not None
+                    else sc.scan_chunk)
+        # with a mesh, dispatches trace under it so the "data"-axis
+        # sharding constraints in models/layers.py bind the fused batch to
+        # devices; without one the constraints no-op (single-device path)
+        self._mesh = (sc.mesh if sc.mesh is not None
+                      else contextlib.nullcontext())
+        # overlap fast path: device-resident plan state.  Block tables /
+        # adapter ids are re-marshalled only when ``kv.table_version``
+        # moves (admission, growth, rollback, release); lengths chain
+        # through the jit outputs (``advance`` is mirrored on device) and
+        # fall back to a host refresh after verify rounds, whose
+        # acceptance-dependent advance/rollback is host logic.
+        self._tables_ver = -1
+        self._bt_dev = None
+        self._lens_dev = None
+        self._lens_ok = False
+        self._ids_dev = None
+        # decode pipelining: in the steady decode state the feed token for
+        # chunk N+1 is chunk N's final sample, available as a DEVICE array
+        # from the decode jit — chaining it (with the active mask, constant
+        # while ``table_version`` stands) lets the host dispatch N+1 and
+        # only then materialise N ("one-round-deferred observation"),
+        # so the host's observe/plan work for N overlaps N+1's execution.
+        # Deferral is legal only when the next plan cannot depend on N's
+        # token values — see ``Scheduler.chunk_defer_safe`` plus the config
+        # gates here: EOS/speculation read values to stop or draft, prefix
+        # sealing consumes them in ``advance``, and the sharded scheduler
+        # doesn't implement the split.
+        self._last_dev = None
+        self._act_dev = None
+        self._last_ok = False
+        self._pending: Optional[Tuple[Any, int, List[int]]] = None
+        self._defer_cfg_ok = (sc.overlap and sc.num_shards == 1
+                              and sc.eos_id is None and not sc.spec_decode
+                              and not sc.prefix_cache)
+        self._finalized = False
+
+    # -- intake --------------------------------------------------------------
+    def submit(self, request: Request,
+               arrival_time: Optional[float] = None) -> int:
+        """Enqueue ``request``; returns its rid (submission order — the rid
+        tagged on this request's events).  Open-loop drivers pass
+        ``arrival_time`` (``time.monotonic()`` seconds) so admission also
+        records WALL-CLOCK queue waits
+        (``last_stats["classes"][cls]["wait_wall_ms_*"]``)."""
+        rid, self._next_rid = self._next_rid, self._next_rid + 1
+        reg = self.engine.registry
+        p = np.asarray(request.prompt, np.int32).reshape(-1)
+        b = (self.sc.max_new_tokens if request.max_new_tokens is None
+             else request.max_new_tokens)
+        # cached K/V depends on the adapter: scope hits by client AND by
+        # the registry's version of its weights (re-registration
+        # invalidates without any explicit flush)
+        scope = (request.client_id, reg.version(request.client_id))
+        # explicit request priority wins; else the client's registered
+        # default; else the scheduler's baseline class
+        priority = (request.priority
+                    or reg.default_priority(request.client_id)
+                    or "batch")
+        self.sched.submit(rid, request.client_id, p, b, scope=scope,
+                          priority=priority, deadline=request.deadline,
+                          arrival_time=arrival_time)
+        return rid
+
+    @property
+    def has_work(self) -> bool:
+        """True while any request is queued or holds a slot."""
+        return self.sched.has_work
+
+    # -- one engine round ----------------------------------------------------
+    def step(self) -> List[Tuple[int, List[int], bool]]:
+        """Admission -> chunk planning -> device dispatch -> observation.
+        Returns this round's ``(rid, new_tokens, finished)`` events ([] on
+        an idle session).  Raises ``RuntimeError`` if queued work cannot
+        make progress (a request that can never fit the pool)."""
+        eng, sc, sched = self.engine, self.sc, self.sched
+        flushed: List[Tuple[int, List[int], bool]] = []
+        if self._pending is not None and (
+                sched.queued or sched.prefill_pending
+                or self._growth_possible()):
+            # leave the pipelined steady state: the deferred chunk's values
+            # must land BEFORE admission or planning can preempt a slot
+            # (preemption replays prompt+emitted, which must include them)
+            flushed = self._flush_pending()
+        for slot, cid in sched.admit():
+            self.ids[slot] = eng.registry.acquire(cid)
+            self.cache = reset_slot(self.cache, slot)
+            self._ids_dev = None
+        plan = sched.prepare_chunk(self.T, self.cap)
+        if plan is None:
+            if sched.has_work:           # nothing active: admit failed
+                raise RuntimeError("scheduler stalled with queued work")
+            return flushed               # idle open-loop session
+        # marshal plan state.  Synchronous reference loop: rebuild device
+        # tables and ids every round.  Overlap fast path: reuse the cached
+        # device arrays while ``table_version`` stands still — on
+        # advance-only rounds (the steady decode state) the host ships only
+        # the chunk plan, and lengths come chained from the previous jit
+        # output instead of a fresh host->device copy.
+        ver = self.kv.table_version
+        if not sc.overlap or ver != self._tables_ver:
+            self._bt_dev, self._lens_dev = self.kv.device_tables()
+            self._tables_ver, self._lens_ok = ver, True
+            # any table move (admit/growth/rollback/release) can change the
+            # active set or a slot's feed token — drop the chained decode
+            # state and remarshal it from the scheduler this round
+            self._last_ok, self._act_dev = False, None
+        elif not self._lens_ok:          # tables stand, verify moved lengths
+            self._lens_dev = self.kv.device_tables()[1]
+            self._lens_ok = True
+        if self._ids_dev is None:
+            # .copy(): self.ids is mutated in place on admit while an
+            # earlier dispatch holding a (possibly zero-copy aliased)
+            # view may still be queued — snapshot, never a live view
+            self._ids_dev = jnp.asarray(self.ids.copy())
+        bt, lens, ids = self._bt_dev, self._lens_dev, self._ids_dev
+        if plan[0] == "prefill":
+            arrs = sched.prefill_arrays(self.T)
+            with self._mesh:
+                sampled, self.cache, self._lens_dev, self.rng = (
+                    eng._prefill_chunk(
+                        eng.params, self.bank, ids, self.cache,
+                        jnp.asarray(arrs["tokens"]), lens,
+                        jnp.asarray(arrs["n_new"]), bt, self.rng,
+                        sc.temperature, backend=sc.paged_backend))
+            # THE overlap point: a chunk that emits no token has a sampled
+            # array nothing will read (observe_prefill only indexes it for
+            # feedback rows / completing prompts), so skip materialising it
+            # — the host returns to planning the next chunk while this one
+            # is still executing on device.
+            if not sc.overlap or sched.chunk_emits(arrs["n_new"]):
+                sampled = np.asarray(sampled)
+            self._last_ok = False        # completing prompts seed next_token
+            events = sched.observe_prefill(arrs["n_new"], sampled,
+                                           eos_id=sc.eos_id)
+        elif plan[0] == "verify":
+            # keep the per-round rng consumption identical to the other
+            # chunk kinds (they split inside the jit) so streams stay
+            # bitwise-stable across scheduling mixes
+            self.rng, _ = jax.random.split(self.rng)
+            arrs = sched.verify_arrays(self.Tv)
+            with self._mesh:
+                greedy, self.cache = eng._verify_chunk(
+                    eng.params, self.bank, ids, self.cache,
+                    jnp.asarray(arrs["tokens"]), lens,
+                    jnp.asarray(arrs["n_new"]), bt,
+                    backend=sc.paged_backend)
+            # acceptance decides the advance/rollback amounts on host
+            self._lens_ok, self._last_ok = False, False
+            events = sched.observe_verify(arrs["n_new"], np.asarray(greedy),
+                                          eos_id=sc.eos_id)
+        else:
+            n = plan[1]
+            defer = self._defer_cfg_ok and sched.chunk_defer_safe(n)
+            if sc.overlap and self._last_ok:
+                last, act = self._last_dev, self._act_dev
+            else:
+                st = sched.chunk_arrays()
+                last, act = jnp.asarray(st["last"]), jnp.asarray(st["active"])
+            with self._mesh:
+                (out, self.cache, self._lens_dev, self._last_dev,
+                 self.rng) = eng._decode_chunk(
+                    eng.params, self.bank, ids, self.cache, last, act,
+                    lens, bt, jnp.int32(n), self.rng, sc.temperature,
+                    chunk_cap=self.cap, backend=sc.paged_backend)
+            self._act_dev, self._last_ok = act, sc.overlap
+            if self._pending is not None:
+                # this chunk is queued behind the deferred one, so
+                # materialising the latter's samples here overlaps with
+                # this chunk's device execution — the pipelining payoff
+                flushed = self._flush_pending()
+            if defer:
+                self._pending = (out, n, sched.observe_chunk_counts(n))
+                return flushed
+            events = sched.observe_chunk(np.asarray(out)[:n],
+                                         eos_id=sc.eos_id)
+        return flushed + events if flushed else events
+
+    # -- deferred-observation plumbing ---------------------------------------
+    def _growth_possible(self) -> bool:
+        """Whether ANY active slot's next decode chunk (at most ``cap``
+        steps) could outgrow its owned blocks.  Growth is the only path to
+        preemption on a pure-decode round, so while this is False the next
+        ``prepare_chunk`` provably leaves the slot set untouched and a
+        deferred chunk may stay unmaterialised through it."""
+        kv = self.kv
+        for slot in self.sched.active_slots:
+            if (int(kv.lengths[slot]) + self.cap
+                    > kv.owned_blocks(slot) * kv.block_size):
+                return True
+        return False
+
+    def _flush_pending(self) -> List[Tuple[int, List[int], bool]]:
+        """Materialise the deferred decode chunk (blocking on its dispatch;
+        anything queued behind it keeps running) and fold its values into
+        the scheduler — its events, one round late."""
+        out, n, slots = self._pending
+        self._pending = None
+        return self.sched.observe_chunk_values(slots, np.asarray(out)[:n])
+
+    # -- drain ---------------------------------------------------------------
+    def finalize(self) -> dict:
+        """Build ``engine.last_stats`` for this session and (with
+        ``prefix_cache``) persist the warm pool for the next one.  Safe to
+        call more than once; returns the stats dict."""
+        if self._finalized:
+            return self.engine.last_stats
+        self._finalized = True
+        if self._pending is not None:    # stream abandoned mid-pipeline
+            self._flush_pending()
+        sc, sched, kv = self.sc, self.sched, self.kv
+        classes = {}
+        for cname in PRIORITY_CLASSES:
+            waits = sched.wait_ticks.get(cname, [])
+            walls = sched.wait_wall.get(cname, [])
+            if not waits and cname not in sched.preemptions_by_class:
+                continue                     # class unused this stream
+            entry = {
+                "admitted": len(waits),
+                "wait_p50": float(np.percentile(waits, 50)) if waits else 0.0,
+                "wait_p99": float(np.percentile(waits, 99)) if waits else 0.0,
+                "preemptions": sched.preemptions_by_class.get(cname, 0)}
+            if walls:     # only present when driven with arrival_time
+                entry["wait_wall_ms_p50"] = float(
+                    np.percentile(walls, 50) * 1e3)
+                entry["wait_wall_ms_p99"] = float(
+                    np.percentile(walls, 99) * 1e3)
+            classes[cname] = entry
+        stats = {"prefill_dispatches": sched.prefill_dispatches,
+                 "decode_dispatches": sched.decode_dispatches,
+                 "decode_steps": sched.steps,
+                 "spec_decode": sc.spec_decode,
+                 "verify_dispatches": sched.verify_dispatches,
+                 "drafted_tokens": sched.drafted_tokens,
+                 "accepted_tokens": sched.accepted_tokens,
+                 "acceptance_rate": (sched.accepted_tokens
+                                     / max(1, sched.drafted_tokens)),
+                 "rollback_tokens": sched.rollback_tokens,
+                 "rollback_blocks": sched.rollback_blocks,
+                 "preemptions": sched.preemptions,
+                 "prompt_tokens": sched.prompt_tokens,
+                 "prefix_hit_tokens": sched.prefix_hit_tokens,
+                 "prefix_hit_rate": (sched.prefix_hit_tokens
+                                     / max(1, sched.prompt_tokens)),
+                 "prefix_cached_blocks": kv.cached_blocks,
+                 "prefix_evictions": kv.evicted_cached - self._evicted0,
+                 "prefix_pool_reused": self._reused,
+                 "sched_policy": sc.sched_policy,
+                 "num_shards": sc.num_shards,
+                 "kv_dtype": sc.kv_dtype,
+                 "overlap": sc.overlap,
+                 "open_loop": self.open_loop,
+                 # queue waits by class: wait_p50/p99 in admission rounds
+                 # (ticks); wait_wall_ms_* in wall-clock milliseconds when
+                 # the session was driven open-loop with arrival times
+                 "classes": classes,
+                 "victim_sealed_fraction_mean": (
+                     float(np.mean(sched.victim_sealed_fractions))
+                     if sched.victim_sealed_fractions else 0.0)}
+        if sc.num_shards > 1:
+            stats["shard_placements"] = dict(sched.placed)
+        self.engine.last_stats = stats
+        if sc.prefix_cache:
+            self.engine._warm = (self._geom_key, self.kv, self.cache)
+        return stats

@@ -117,6 +117,13 @@ class PagedKVCache:
         self.block_tables = np.zeros((num_slots, max_blocks_per_slot),
                                      np.int32)
         self.lengths = np.zeros((num_slots,), np.int32)
+        # monotonic counter bumped on every block-table mutation (admit,
+        # growth, rollback, release).  ``advance`` does NOT bump it: pure
+        # length growth is exactly what the engine's overlap fast path
+        # chains on device, so callers caching ``device_tables()`` output
+        # can key their cache on this and skip re-marshalling tables on
+        # advance-only rounds.
+        self.table_version = 0
         self._free: "deque[int]" = deque(range(1, num_blocks))
         # refcount-0 blocks whose content is still indexed, least-recently
         # released first (the eviction end) — the AdapterRegistry LRU
@@ -237,6 +244,7 @@ class PagedKVCache:
         if self._occupied[slot]:
             raise ValueError(f"slot {slot} already occupied")
         self._occupied[slot] = True
+        self.table_version += 1
         self.block_tables[slot] = 0
         self.lengths[slot] = 0
         self._owned[slot] = []
@@ -286,6 +294,7 @@ class PagedKVCache:
             return True
         if add > self.allocatable_blocks:
             return False
+        self.table_version += 1
         for _ in range(add):
             b = self._alloc()
             self._refcount[b] = 1
@@ -386,6 +395,7 @@ class PagedKVCache:
         if self._chain[slot] is not None:
             del self._pending[slot][n_tokens - new_nseal * bs:]
         keep = -(-n_tokens // bs)              # ceil; >= new_nseal always
+        self.table_version += 1
         freed = 0
         while len(self._owned[slot]) > keep:
             b = self._owned[slot].pop()
@@ -475,6 +485,7 @@ class PagedKVCache:
         self._chain_stack[slot] = []
         self._seal_toks[slot] = []
         self._scope[slot] = None
+        self.table_version += 1
         self.block_tables[slot] = 0
         self.lengths[slot] = 0
 
@@ -553,7 +564,13 @@ class PagedKVCache:
 
     # ---- device views -----------------------------------------------------
     def device_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        return (jnp.asarray(self.block_tables), jnp.asarray(self.lengths))
+        # .copy(): on CPU, jnp.asarray can ALIAS a suitably aligned numpy
+        # buffer zero-copy, and these buffers are mutated in place
+        # (admit/growth/rollback/release) while a previously dispatched
+        # chunk that read them may still be queued under async dispatch —
+        # the device must get a snapshot, not a live view.
+        return (jnp.asarray(self.block_tables.copy()),
+                jnp.asarray(self.lengths.copy()))
 
     @property
     def idle(self) -> bool:

@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -168,6 +169,10 @@ class _ReqMeta:
     #                               sorts after any deadlined peer in class
     seq: int                      # arrival order, preserved across preempts
     enqueue_tick: int             # (re)entered the queue at this tick
+    arrival_time: Optional[float] = None  # open-loop arrival (monotonic
+    #                               seconds); set by the session when driven
+    #                               by a trace/server — admission then also
+    #                               records WALL-CLOCK queue waits
 
 
 @dataclasses.dataclass
@@ -244,6 +249,13 @@ class Scheduler:
         self.victim_sealed_fractions: List[float] = []
         self.wait_ticks: Dict[str, List[int]] = {}  # class -> per-admission
         #                                     queue waits (incl. re-admits)
+        self.wait_wall: Dict[str, List[float]] = {}  # class -> wall-clock
+        #                                     queue waits in SECONDS, only
+        #                                     for requests submitted with an
+        #                                     arrival_time (open-loop); a
+        #                                     re-admission after preemption
+        #                                     measures from the ORIGINAL
+        #                                     arrival (user-visible delay)
         self.prompt_tokens = 0              # prompt tokens admitted (incl.
         #                                     preemption replays)
         self.prefix_hit_tokens = 0          # of those, served from cache
@@ -251,14 +263,18 @@ class Scheduler:
     # ---- intake -----------------------------------------------------------
     def submit(self, rid: int, client_id: Any, prompt, budget: int,
                scope: Any = None, priority: str = "batch",
-               deadline: Optional[float] = None) -> None:
+               deadline: Optional[float] = None,
+               arrival_time: Optional[float] = None) -> None:
         """``scope`` isolates the request's prefix-cache hash chain (the
         engine passes ``(client_id, adapter version)`` — cached K/V depends
         on the adapter); ``None`` falls back to ``client_id``.
         ``priority`` names a :data:`PRIORITY_CLASSES` entry; ``deadline``
         (optional, any comparable number — the engine passes it through
         untouched) breaks admission ties earliest-first within a class,
-        deadline-less requests sorting last."""
+        deadline-less requests sorting last.  ``arrival_time`` (optional,
+        ``time.monotonic()`` seconds) marks the request as OPEN-LOOP:
+        admission then also records its wall-clock queue wait in
+        :attr:`wait_wall` next to the round-based :attr:`wait_ticks`."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError(f"request {rid}: empty prompt")
@@ -275,7 +291,8 @@ class Scheduler:
                 f"{self.kv.block_size})")
         self._scopes[rid] = client_id if scope is None else scope
         self._meta[rid] = _ReqMeta(PRIORITY_CLASSES[priority], deadline,
-                                   self._seq, self.ticks)
+                                   self._seq, self.ticks,
+                                   arrival_time=arrival_time)
         self._seq += 1
         self._queue.append((rid, client_id, prompt, budget, []))
 
@@ -303,6 +320,11 @@ class Scheduler:
     @property
     def has_work(self) -> bool:
         return bool(self._queue) or any(s is not None for s in self._slots)
+
+    @property
+    def queued(self) -> bool:
+        """True while any request waits for admission."""
+        return bool(self._queue)
 
     @property
     def active_slots(self) -> List[int]:
@@ -347,6 +369,9 @@ class Scheduler:
             m = self._meta[rid]
             self.wait_ticks.setdefault(_LEVEL_NAMES[m.level], []).append(
                 self.ticks - m.enqueue_tick)
+            if m.arrival_time is not None:
+                self.wait_wall.setdefault(_LEVEL_NAMES[m.level], []).append(
+                    time.monotonic() - m.arrival_time)
             self.prompt_tokens += int(prompt.size)
             self.prefix_hit_tokens += n_hit
             admitted.append((slot, cid))
@@ -600,6 +625,24 @@ class Scheduler:
                 out["n_new"][i] = 1
         return out
 
+    def chunk_emits(self, n_new: np.ndarray) -> bool:
+        """Whether a prefill chunk planned with these per-slot ``n_new``
+        counts will EMIT any token — i.e. whether :meth:`observe_prefill`
+        will read the sampled array at all.  True when some slot rides as a
+        decoding feedback row or completes its prompt inside the chunk.  A
+        pure function of host state, so the engine's overlapped dispatch
+        path can decide BEFORE the device finishes whether the next plan
+        depends on this chunk's samples (it materialises only when it
+        does — the async-overlap sync rule)."""
+        for slot, st in enumerate(self._slots):
+            if st is None or n_new[slot] == 0:
+                continue
+            if st.fed >= st.prompt.size:          # decoding feedback row
+                return True
+            if st.fed + int(n_new[slot]) >= st.prompt.size:
+                return True                       # prompt completes: emits
+        return False
+
     def observe_prefill(self, n_new: np.ndarray, sampled: np.ndarray,
                         eos_id: Optional[int] = None
                         ) -> List[Tuple[int, List[int], bool]]:
@@ -777,4 +820,59 @@ class Scheduler:
                 events.append((st.rid, new_toks, False))
         self.steps += n
         self.decode_dispatches += 1
+        return events
+
+    # ---- deferred observation (overlap pipelining) -------------------------
+    def chunk_defer_safe(self, n: int) -> bool:
+        """True when the NEXT chunk plan provably does not depend on the
+        token VALUES an ``n``-step decode chunk will sample: every active
+        slot has strictly more than ``n`` tokens of budget left, so no slot
+        finishes inside the chunk (``plan_steps`` stops at the earliest
+        boundary, so this is exactly "the chunk was cap-limited") and the
+        active set cannot churn.  Only count bookkeeping remains, which
+        ``observe_chunk_counts`` advances without the samples — the engine
+        combines this with its config gates (no EOS, no speculation, no
+        prefix sealing) before deferring materialisation one round."""
+        return all(st.prompt.size - 1 + st.budget - st.fed > n
+                   for st in self._slots if st is not None)
+
+    def observe_chunk_counts(self, n: int) -> List[int]:
+        """Count half of :meth:`observe_chunk`, for a DEFERRED decode
+        chunk: advance ``fed``, the pool lengths and the dispatch counters
+        — everything the next chunk PLAN reads — while the sampled values
+        are still on device.  The caller guarantees ``chunk_defer_safe(n)``
+        held at plan time and that prefix sealing is off (``advance`` gets
+        no tokens).  Returns the participating slot ids, to be replayed
+        through :meth:`observe_chunk_values` once the samples land."""
+        slots = []
+        for slot, st in enumerate(self._slots):
+            if st is None:
+                continue
+            assert st.fed >= st.prompt.size, \
+                f"slot {slot} entered a decode chunk mid-prefill"
+            st.fed += n
+            self.kv.advance(slot, n)
+            slots.append(slot)
+        self.steps += n
+        self.decode_dispatches += 1
+        return slots
+
+    def observe_chunk_values(self, slots: List[int], sampled: np.ndarray
+                             ) -> List[Tuple[int, List[int], bool]]:
+        """Value half: fold the now-materialised samples of a chunk whose
+        counts already advanced into the emitted streams — one engine round
+        late.  ``chunk_defer_safe`` ruled out finishes, so every row
+        survives and just chains ``next_token`` forward; the token values
+        per rid are bitwise what the synchronous path would have emitted,
+        only their event round shifts."""
+        n = sampled.shape[0]
+        events = []
+        for slot in slots:
+            st = self._slots[slot]
+            assert st is not None, \
+                f"deferred slot {slot} vanished before its flush"
+            toks = [int(sampled[t, slot]) for t in range(n)]
+            st.emitted.extend(toks)
+            st.next_token = toks[-1]
+            events.append((st.rid, toks, False))
         return events

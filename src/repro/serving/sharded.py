@@ -120,6 +120,14 @@ class ShardedPagedKVCache:
         return sum(sh.evicted_cached for sh in self.shards)
 
     @property
+    def table_version(self) -> int:
+        """Aggregate block-table mutation counter: strictly increases when
+        any shard's tables change (per-shard counters are monotonic), so
+        the engine's overlap fast path can key its cached device tables on
+        it exactly as in the single-pool case."""
+        return sum(sh.table_version for sh in self.shards)
+
+    @property
     def lengths(self) -> np.ndarray:
         """Global per-slot context lengths (concatenated snapshot)."""
         return np.concatenate([sh.lengths for sh in self.shards])
@@ -345,7 +353,8 @@ class ShardedScheduler:
     # ---- intake -----------------------------------------------------------
     def submit(self, rid: int, client_id: Any, prompt, budget: int,
                scope: Any = None, priority: str = "batch",
-               deadline: Optional[float] = None) -> int:
+               deadline: Optional[float] = None,
+               arrival_time: Optional[float] = None) -> int:
         """Place and enqueue; returns the chosen shard."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         shard, why = self.place(client_id,
@@ -353,7 +362,8 @@ class ShardedScheduler:
                                 prompt)
         self.shards[shard].submit(rid, client_id, prompt, budget,
                                   scope=scope, priority=priority,
-                                  deadline=deadline)
+                                  deadline=deadline,
+                                  arrival_time=arrival_time)
         self.placements[rid] = shard
         self.placed[why] += 1
         return shard
@@ -437,6 +447,11 @@ class ShardedScheduler:
     def _rows(self, s: int) -> slice:
         K = self.kv.slots_per_shard
         return slice(s * K, (s + 1) * K)
+
+    def chunk_emits(self, n_new) -> bool:
+        """Any shard emitting makes the fused chunk an emitting chunk."""
+        return any(sh.chunk_emits(n_new[self._rows(s)])
+                   for s, sh in enumerate(self.shards))
 
     def observe_prefill(self, n_new, sampled, eos_id=None):
         events = []
@@ -530,5 +545,13 @@ class ShardedScheduler:
         merged: Dict[str, List[int]] = {}
         for sh in self.shards:
             for k, v in sh.wait_ticks.items():
+                merged.setdefault(k, []).extend(v)
+        return merged
+
+    @property
+    def wait_wall(self) -> Dict[str, List[float]]:
+        merged: Dict[str, List[float]] = {}
+        for sh in self.shards:
+            for k, v in sh.wait_wall.items():
                 merged.setdefault(k, []).extend(v)
         return merged

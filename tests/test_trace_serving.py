@@ -1,0 +1,384 @@
+"""Open-loop trace workloads + the async serving front end.
+
+Three layers, cheapest first:
+
+  * ``synth_trace`` statistics — seeded determinism, empirical arrival
+    rates (Poisson AND bursty trend to the same long-run rate; the bursty
+    process is measurably burstier), length clipping, priority/client
+    mixes.
+  * ``run_trace`` logical mode — the parity harness: the async overlapped
+    engine (``ServeConfig.overlap=True``) must emit BITWISE-identical
+    greedy streams to the synchronous reference loop on the same trace,
+    across ragged / preemption / prefix-cache / spec-decode / sharded /
+    sampled configs.  Logical mode maps arrivals to engine rounds, so
+    both runs execute identical dispatch sequences by construction.
+  * the asyncio front end (``launch/serve.py``) — submissions mid-flight,
+    per-request streamed tokens, graceful drain, and wall-clock queue
+    waits in ``last_stats`` exactly when the session is driven open-loop.
+"""
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving.engine import Request, ServeConfig
+from repro.serving.trace import (DEFAULT_PRIORITY_MIX, TraceEntry,
+                                 synth_trace, run_trace)
+from test_serving_sim import real_engine  # noqa: F401 (module fixture)
+
+
+# ---------------------------------------------------------------------------
+# workload generator
+# ---------------------------------------------------------------------------
+
+def test_synth_trace_deterministic_per_seed():
+    a = synth_trace(7, 40, arrival="bursty")
+    b = synth_trace(7, 40, arrival="bursty")
+    assert len(a) == len(b) == 40
+    for x, y in zip(a, b):
+        assert x.arrival_s == y.arrival_s
+        assert x.client_id == y.client_id
+        assert x.priority == y.priority
+        assert x.max_new_tokens == y.max_new_tokens
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+    c = synth_trace(8, 40, arrival="bursty")
+    assert any(x.arrival_s != y.arrival_s for x, y in zip(a, c))
+
+
+def test_synth_trace_sorted_and_clipped():
+    tr = synth_trace(3, 200, prompt_max=48, out_max=24)
+    arr = [e.arrival_s for e in tr]
+    assert arr == sorted(arr) and arr[0] > 0
+    for e in tr:
+        assert 1 <= e.prompt.size <= 48
+        assert 1 <= e.max_new_tokens <= 24
+        assert e.prompt.dtype == np.int32
+        # pad id (0) excluded by default; tokens inside the vocab
+        assert e.prompt.min() >= 1 and e.prompt.max() < 300
+
+
+def test_poisson_empirical_rate():
+    rate = 8.0
+    tr = synth_trace(0, 2000, arrival="poisson", rate=rate)
+    emp = len(tr) / tr[-1].arrival_s
+    assert 0.85 * rate <= emp <= 1.15 * rate
+
+
+def test_bursty_rate_matches_but_is_burstier():
+    rate = 8.0
+    po = synth_trace(1, 2000, arrival="poisson", rate=rate)
+    bu = synth_trace(1, 2000, arrival="bursty", rate=rate,
+                     burst_on_s=0.5, burst_off_s=1.5)
+    emp = len(bu) / bu[-1].arrival_s
+    # ON-OFF scaling keeps the LONG-RUN rate comparable to Poisson
+    assert 0.7 * rate <= emp <= 1.3 * rate
+    # burstiness: coefficient of variation of inter-arrival gaps is ~1
+    # for Poisson and strictly larger for the ON-OFF process
+    def cv(tr):
+        gaps = np.diff([0.0] + [e.arrival_s for e in tr])
+        return float(np.std(gaps) / np.mean(gaps))
+    assert cv(bu) > 1.3 * cv(po)
+
+
+def test_priority_and_client_mix():
+    tr = synth_trace(5, 600, clients=("a", "b"), client_weights=(3, 1))
+    prio = {p: 0 for p in DEFAULT_PRIORITY_MIX}
+    cl = {"a": 0, "b": 0}
+    for e in tr:
+        prio[e.priority] += 1
+        cl[e.client_id] += 1
+    for p, w in DEFAULT_PRIORITY_MIX.items():
+        assert abs(prio[p] / len(tr) - w) < 0.1
+    assert abs(cl["a"] / len(tr) - 0.75) < 0.1
+
+
+def test_synth_trace_validates_inputs():
+    with pytest.raises(ValueError):
+        synth_trace(0, 0)
+    with pytest.raises(ValueError):
+        synth_trace(0, 4, rate=0.0)
+    with pytest.raises(ValueError):
+        synth_trace(0, 4, arrival="uniform")
+    with pytest.raises(ValueError):
+        synth_trace(0, 4, vocab_size=2, forbid_tokens=(0, 1))
+
+
+def test_run_trace_rejects_unsorted_trace(real_engine):
+    cfg, model, params, ads, mt = real_engine
+    e = synth_trace(0, 2)[0]
+    bad = [dataclasses.replace(e, arrival_s=2.0),
+           dataclasses.replace(e, arrival_s=1.0)]
+    with pytest.raises(ValueError):
+        run_trace(mt, _sc(), bad)
+
+
+# ---------------------------------------------------------------------------
+# async-vs-sync bitwise parity (logical mode)
+# ---------------------------------------------------------------------------
+
+def _sc(**kw):
+    """Open-loop pool geometry for the tiny engine: 4 slots sized for the
+    trace's worst-case span."""
+    base = dict(batch_size=4, max_new_tokens=12, block_size=8,
+                num_blocks=21, max_blocks_per_slot=5, prefill_chunk=4,
+                scan_chunk=4)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _trace(seed=0, n=10, **kw):
+    args = dict(arrival="bursty", rate=40.0, prompt_mean=8.0,
+                prompt_max=24, out_mean=6.0, out_max=10)
+    args.update(kw)
+    return synth_trace(seed, n, **args)
+
+
+def _parity(mt, sc, trace, rounds_per_s=6.0):
+    """Same logical trace, overlap on vs off: streams must be bitwise
+    equal (and both runs must actually finish every request)."""
+    on = run_trace(mt, dataclasses.replace(sc, overlap=True), trace,
+                   rounds_per_s=rounds_per_s)
+    off = run_trace(mt, dataclasses.replace(sc, overlap=False), trace,
+                    rounds_per_s=rounds_per_s)
+    assert on["completed"] == off["completed"] == len(trace)
+    assert set(on["streams"]) == set(off["streams"])
+    for rid in on["streams"]:
+        assert on["streams"][rid] == off["streams"][rid], f"rid {rid}"
+    assert on["last_stats"]["overlap"] is True
+    assert off["last_stats"]["overlap"] is False
+    return on
+
+
+def test_parity_ragged(real_engine):
+    cfg, model, params, ads, mt = real_engine
+    rep = _parity(mt, _sc(), _trace())
+    assert rep["emitted_tokens"] > 0
+    assert rep["mode"] == "logical" and rep["unit"] == "rounds"
+
+
+def test_parity_under_preemption(real_engine):
+    """Starved pool: admission must preempt mid-trace and the overlap
+    fast path must survive the table churn (its cached device tables are
+    keyed on the pool's table_version)."""
+    cfg, model, params, ads, mt = real_engine
+    sc = _sc(batch_size=3, num_blocks=8, max_blocks_per_slot=5)
+    tr = _trace(n=12, rate=80.0, prompt_mean=16.0, out_mean=8.0)
+    rep = _parity(mt, sc, tr)
+    assert rep["last_stats"]["preemptions"] > 0
+
+
+def test_parity_warm_prefix_cache(real_engine):
+    """Shared prompts over a warm content-addressed pool: admissions skip
+    cached prefixes (table mutations at admit) and streams stay bitwise
+    equal across overlap settings."""
+    cfg, model, params, ads, mt = real_engine
+    sc = _sc(prefix_cache=True)
+    # one shared >=2-block prompt, one client: later admissions must
+    # re-match the blocks the first request sealed (scope is per client,
+    # and only FULL blocks seal — hence 16 tokens at block_size 8)
+    shared = ((np.arange(16, dtype=np.int32) * 5) % 290 + 1).astype(np.int32)
+    tr = [dataclasses.replace(e, prompt=shared.copy(), client_id="c0")
+          for e in _trace(n=8)]
+    mt.release_prefix_cache()
+    rep = _parity(mt, sc, tr)
+    assert rep["last_stats"]["prefix_hit_tokens"] > 0
+    mt.release_prefix_cache()
+
+
+def test_parity_spec_decode(real_engine):
+    """Draft/verify rounds interleave with the overlap fast path: verify
+    advances are host logic, so chained device lengths must refresh."""
+    cfg, model, params, ads, mt = real_engine
+    sc = _sc(spec_decode=True, spec_k=4)
+    # repetitive prompts so the prompt-lookup drafter actually fires
+    tr = []
+    for e in _trace(n=8):
+        pat = np.tile(e.prompt[:4], 6)[: e.prompt.size + 8].astype(np.int32)
+        tr.append(dataclasses.replace(e, prompt=pat))
+    rep = _parity(mt, sc, tr)
+    assert rep["last_stats"]["verify_dispatches"] > 0
+
+
+def test_parity_two_shards(real_engine):
+    cfg, model, params, ads, mt = real_engine
+    sc = _sc(num_shards=2, num_blocks=21)   # 20 allocatable = 2 * 10
+    rep = _parity(mt, sc, _trace())
+    assert rep["last_stats"]["num_shards"] == 2
+
+
+def test_parity_sampled_stream(real_engine):
+    """temperature > 0 exercises the rng chain: the per-round split now
+    happens inside the jit, and must consume the SAME key sequence in
+    both loops (and on verify-less vs verify-bearing mixes)."""
+    cfg, model, params, ads, mt = real_engine
+    _parity(mt, _sc(temperature=0.7, seed=3), _trace(n=8))
+
+
+def test_realtime_matches_logical_streams(real_engine):
+    """Greedy schedule-invariance: per-request token streams do not
+    depend on WHEN requests are submitted, so the wall-clock replay of a
+    trace emits the same per-request tokens as the logical replay."""
+    cfg, model, params, ads, mt = real_engine
+    tr = _trace(n=8)
+    lo = run_trace(mt, _sc(), tr, rounds_per_s=6.0)
+    rt = run_trace(mt, _sc(), tr, realtime=True, time_scale=0.02)
+    assert rt["mode"] == "realtime" and rt["unit"] == "ms"
+    assert set(lo["streams"]) == set(rt["streams"])
+    for rid in lo["streams"]:
+        assert lo["streams"][rid] == rt["streams"][rid]
+    # wall-clock queue waits only exist on the realtime (open-loop) run
+    assert any("wait_wall_ms_p50" in cs
+               for cs in rt["last_stats"]["classes"].values())
+    assert not any("wait_wall_ms_p50" in cs
+                   for cs in lo["last_stats"]["classes"].values())
+
+
+def test_report_shape(real_engine):
+    cfg, model, params, ads, mt = real_engine
+    rep = run_trace(mt, _sc(), _trace(n=6), rounds_per_s=6.0)
+    assert rep["n_requests"] == 6 and rep["completed"] == 6
+    assert rep["goodput_tok_per_unit"] > 0
+    assert {"p50", "p99"} <= set(rep["ttft"])
+    for cls, d in rep["per_class"].items():
+        assert d["n"] > 0
+        assert d["ttft"]["p99"] >= d["ttft"]["p50"] >= 0.0
+    # every emitted token is attributed to exactly one request
+    assert rep["emitted_tokens"] == sum(len(v)
+                                        for v in rep["streams"].values())
+
+
+# ---------------------------------------------------------------------------
+# open-loop session semantics
+# ---------------------------------------------------------------------------
+
+def test_open_loop_mid_stream_submit(real_engine):
+    """Submitting while earlier requests are mid-flight must interleave
+    into the same slots — and the session must go idle (step() == []) and
+    wake again on later submissions."""
+    cfg, model, params, ads, mt = real_engine
+    ses = mt.session(_sc())
+    prompt = (np.arange(10, dtype=np.int32) % 290) + 1
+    r0 = ses.submit(Request("c0", prompt, max_new_tokens=6))
+    got = {r0: []}
+    for _ in range(3):
+        for rid, toks, fin in ses.step():
+            got[rid].extend(toks)
+    r1 = ses.submit(Request("c1", prompt[:5], max_new_tokens=4))
+    got[r1] = []
+    while ses.has_work:
+        for rid, toks, fin in ses.step():
+            got[rid].extend(toks)
+    assert ses.step() == []                  # idle, not an error
+    assert len(got[r0]) == 6 and len(got[r1]) == 4
+    r2 = ses.submit(Request("c0", prompt[:3], max_new_tokens=3))
+    got[r2] = []
+    while ses.has_work:
+        for rid, toks, fin in ses.step():
+            got[rid].extend(toks)
+    assert len(got[r2]) == 3
+    stats = ses.finalize()
+    assert stats["open_loop"] is True
+
+
+def test_open_loop_requires_pinned_pool(real_engine):
+    cfg, model, params, ads, mt = real_engine
+    with pytest.raises(ValueError):
+        mt.session(ServeConfig(batch_size=4, num_blocks=None))
+
+
+def test_closed_loop_stats_have_no_wall_waits(real_engine):
+    """generate() (closed loop, no arrival times) keeps round-based
+    queue waits only — the wall-clock keys would be meaningless."""
+    cfg, model, params, ads, mt = real_engine
+    prompt = (np.arange(8, dtype=np.int32) % 290) + 1
+    reqs = [Request(f"c{i % 2}", prompt, max_new_tokens=4)
+            for i in range(4)]
+    mt.generate(reqs, _sc())
+    stats = mt.last_stats
+    assert stats["open_loop"] is False
+    assert stats["classes"]
+    for cs in stats["classes"].values():
+        assert "wait_wall_ms_p50" not in cs
+        assert "wait_p50" in cs
+
+
+# ---------------------------------------------------------------------------
+# asyncio front end
+# ---------------------------------------------------------------------------
+
+def test_async_server_serves_and_drains(real_engine):
+    from repro.launch.serve import AsyncServer
+
+    cfg, model, params, ads, mt = real_engine
+    prompt = (np.arange(9, dtype=np.int32) % 290) + 1
+
+    async def run():
+        out = {}
+        async with AsyncServer(mt, _sc()) as srv:
+            async def client(i):
+                await asyncio.sleep(0.002 * i)
+                rid = await srv.submit(
+                    Request(f"c{i % 2}", prompt[: 3 + i],
+                            max_new_tokens=3 + i))
+                toks = []
+                async for t in srv.stream(rid):
+                    toks.extend(t)
+                out[rid] = toks
+            await asyncio.gather(*(client(i) for i in range(3)))
+        return out, srv.stats
+
+    out, stats = asyncio.run(run())
+    assert sorted(out) == [0, 1, 2]
+    for rid, toks in out.items():
+        assert len(toks) == 3 + rid
+    # driven with arrival times -> wall-clock waits in the stats
+    assert any("wait_wall_ms_p50" in cs
+               for cs in stats["classes"].values())
+
+
+def test_async_server_rejects_after_drain(real_engine):
+    from repro.launch.serve import AsyncServer
+
+    cfg, model, params, ads, mt = real_engine
+    prompt = (np.arange(6, dtype=np.int32) % 290) + 1
+
+    async def run():
+        srv = AsyncServer(mt, _sc()).start()
+        rid = await srv.submit(Request("c0", prompt, max_new_tokens=2))
+        toks = []
+        async for t in srv.stream(rid):
+            toks.extend(t)
+        await srv.drain()
+        with pytest.raises(RuntimeError):
+            await srv.submit(Request("c0", prompt))
+        return toks
+
+    assert len(asyncio.run(run())) == 2
+
+
+# ---------------------------------------------------------------------------
+# device views must be snapshots (async-dispatch safety)
+# ---------------------------------------------------------------------------
+
+def test_device_tables_snapshot_not_view():
+    """On CPU, ``jnp.asarray`` may alias a suitably aligned numpy buffer
+    zero-copy.  The overlapped session dispatches chunks that read the
+    block tables/lengths/ids and only synchronizes later, while the host
+    keeps mutating those buffers in place — so every device view handed
+    to a dispatch must be a SNAPSHOT.  Aliasing depends on allocator
+    alignment luck, so probe many fresh pools."""
+    from repro.serving.kv_cache import PagedKVCache
+
+    for _ in range(20):
+        kv = PagedKVCache(num_slots=4, block_size=4, num_blocks=8,
+                          max_blocks_per_slot=2)
+        kv.admit(0, scope="c0")
+        kv.ensure(0, 4)
+        bt, lens = kv.device_tables()
+        before_bt = np.asarray(bt).copy()
+        before_lens = np.asarray(lens).copy()
+        kv.block_tables[:] = 77          # host keeps planning the next chunk
+        kv.lengths[:] = 55
+        np.testing.assert_array_equal(np.asarray(bt), before_bt)
+        np.testing.assert_array_equal(np.asarray(lens), before_lens)
