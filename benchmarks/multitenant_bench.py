@@ -39,6 +39,14 @@ warmup call; CPU interpret-mode numbers — the wins are architectural):
     never more preemptions on a pool-thrashing stream).  Appends a
     ``quant`` section; ``--gate-only`` records the deterministic residency
     number for the ``benchmarks/baselines/serving_quant.json`` CI gate.
+  * ragged_rank (also default): the same mixed-client stream served from a
+    bucketed mixed-rank adapter bank (clients at ranks 2/4/8,
+    ``AdapterRegistry(ranks=[...])``) vs every slot padded to the max rank
+    — BITWISE-equal outputs (zero rank columns are arithmetically inert),
+    the win is adapter-bank HBM: rank-proportional bytes per slot.
+    Appends a ``ragged_rank`` section; ``--gate-only`` records the
+    deterministic bank-byte ratio for the
+    ``benchmarks/baselines/serving_ragged.json`` CI gate.
   * smoke gate (also default): a fixed small continuous workload's tok/s,
     recorded as the ``smoke`` section — CI's
     ``scripts/check_bench_regression.py`` fails the PR when it regresses
@@ -119,8 +127,9 @@ def _merge_json(json_path: str, updates: dict) -> None:
         f.write("\n")
 
 
-def _adapters(seed: int, cfg=CFG):
-    ad = init_adapters(jax.random.PRNGKey(seed), cfg)
+def _adapters(seed: int, cfg=CFG, rank=None):
+    kw = {} if rank is None else {"rank": rank}
+    ad = init_adapters(jax.random.PRNGKey(seed), cfg, **kw)
     bump = jax.random.PRNGKey(seed + 1000)
     return jax.tree.map(
         lambda l: l + 0.02 * jax.random.normal(bump, l.shape), ad)
@@ -900,6 +909,142 @@ def quant_gate_section(json_path: str):
 
 
 # ---------------------------------------------------------------------------
+# Ragged-rank adapter banks: mixed-rank buckets vs pad-to-max (HBM win)
+# ---------------------------------------------------------------------------
+
+RAGGED_RANKS = (2, 4, 8)
+
+
+def _rank_bank_capacity(ranks=RAGGED_RANKS):
+    """Static adapter-HBM math: a resident slot's bank bytes are rank-
+    proportional (every LoRA pair is ``(d_in, r)`` + ``(r, d_out)``), so a
+    bucketed bank holding one client per rank costs ``sum(ranks)`` rank-
+    units where the pad-to-max bank costs ``len(ranks) * max(ranks)``.
+    Byte counts come from the actual ``init_adapters`` trees so target-set
+    changes reprice the gate automatically."""
+    unit = {}
+    for r in sorted(set(ranks)):
+        tree = init_adapters(jax.random.PRNGKey(0), CFG, rank=r)
+        unit[r] = sum(int(l.size) * l.dtype.itemsize
+                      for l in jax.tree.leaves(tree))
+    bucketed = sum(unit[r] for r in ranks)
+    padded = len(ranks) * unit[max(ranks)]
+    return {"ranks": sorted(ranks),
+            "bytes_per_slot": {str(r): unit[r] for r in sorted(set(unit))},
+            "bank_bytes": {"bucketed": bucketed, "pad_to_max": padded},
+            "bank_bytes_saved": padded - bucketed,
+            "capacity_ratio": padded / bucketed,
+            "extra_min_rank_slots_at_budget":
+                int((padded - bucketed) // unit[min(ranks)])}
+
+
+def _pad_rank(tree, to_rank: int):
+    """Zero-pad every LoRA pair to ``to_rank``: ``a: (P, d_in, r)`` on the
+    last axis, ``b: (P, r, d_out)`` on the middle axis — the pad-to-max
+    baseline the rank buckets compete against."""
+    def walk(node):
+        if isinstance(node, dict) and set(node) == {"a", "b"}:
+            r = node["a"].shape[-1]
+            return {"a": jnp.pad(node["a"],
+                                 [(0, 0), (0, 0), (0, to_rank - r)]),
+                    "b": jnp.pad(node["b"],
+                                 [(0, 0), (0, to_rank - r), (0, 0)])}
+        return {k: walk(v) for k, v in node.items()}
+    return walk(tree)
+
+
+def _ragged_rank_setup():
+    """One model, two registries over the SAME client weights (native
+    ranks 2/4/8): bucketed (``ranks=[2,4,8]``) vs the legacy single
+    max-rank bucket with every client zero-padded to rank 8."""
+    model = get_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    trees = {f"c{i}": _adapters(i + 1, rank=r)
+             for i, r in enumerate(RAGGED_RANKS)}
+    reg_b = AdapterRegistry(CFG, capacity=len(trees),
+                            ranks=list(RAGGED_RANKS))
+    reg_p = AdapterRegistry(CFG, capacity=len(trees))
+    for cid, t in trees.items():
+        reg_b.register(cid, t)
+        reg_p.register(cid, _pad_rank(t, max(RAGGED_RANKS)))
+    return (MultiTenantEngine(model, CFG, params, reg_b),
+            MultiTenantEngine(model, CFG, params, reg_p))
+
+
+def ragged_rank_section(json_path: str, smoke: bool = False):
+    """Mixed-rank serving: clients fine-tuned at ranks 2/4/8, served from
+    the bucketed bank vs every slot padded to rank 8.  Outputs must be
+    BITWISE equal — zero rank columns contribute exact zeros, and the
+    kernel's per-slot rank mask enforces it even for junk padding — so the
+    win is pure adapter-bank HBM (rank-proportional bytes per slot), plus
+    whatever the smaller per-bucket matmuls buy in wall time."""
+    mt_b, mt_p = _ragged_rank_setup()
+    reqs = _ragged_workload(len(RAGGED_RANKS))
+    if smoke:
+        reqs = reqs[:4]               # still cycles through all three ranks
+    cap = _rank_bank_capacity()
+    print(row("ragged_rank_bank_bytes_bucketed", 0.0,
+              str(cap["bank_bytes"]["bucketed"])))
+    print(row("ragged_rank_bank_bytes_padded", 0.0,
+              str(cap["bank_bytes"]["pad_to_max"])))
+    print(row("ragged_rank_capacity_ratio", 0.0,
+              f"{cap['capacity_ratio']:.2f}x"))
+    assert cap["capacity_ratio"] >= 1.5, \
+        f"bucketed bank must save >=1.5x bytes vs pad-to-max for ranks " \
+        f"{cap['ranks']} (got {cap['capacity_ratio']:.2f}x)"
+
+    sc = ServeConfig(batch_size=4, max_new_tokens=NEW_TOKENS, block_size=8)
+    out_b = mt_b.generate(reqs, sc)
+    out_p = mt_p.generate(reqs, sc)
+    for a, b in zip(out_b, out_p):             # parity before trusting HBM win
+        np.testing.assert_array_equal(a, b)
+    if smoke:
+        print(row("ragged_rank_smoke_parity", 0.0, "ok"))
+        return
+
+    useful = sum(r.max_new_tokens for r in reqs)
+    us_b = _best_us(lambda: mt_b.generate(reqs, sc))
+    us_p = _best_us(lambda: mt_p.generate(reqs, sc))
+    tps_b = useful / (us_b / 1e6)
+    tps_p = useful / (us_p / 1e6)
+    print(row("ragged_rank_bucketed", us_b, f"{tps_b:.1f} tok/s"))
+    print(row("ragged_rank_pad_to_max", us_p, f"{tps_p:.1f} tok/s"))
+    _merge_json(json_path, {"ragged_rank": {
+        **cap,
+        "workload": {"requests": len(reqs), "useful_tokens": useful,
+                     "clients": len(RAGGED_RANKS), "slots": sc.batch_size,
+                     "num_shards": sc.num_shards,
+                     "block_size": sc.block_size},
+        "tok_per_s": {"bucketed": tps_b, "pad_to_max": tps_p},
+        "us_per_call": {"bucketed": us_b, "pad_to_max": us_p},
+        "note": "CPU interpret-mode; bitwise-equal outputs (zero rank "
+                "columns are inert, kernel masks them) — win = rank-"
+                "proportional adapter-bank bytes (serving/registry.py "
+                "rank buckets)",
+    }})
+    print(f"# wrote {json_path} (ragged_rank section)")
+
+
+def ragged_rank_gate_section(json_path: str):
+    """Ragged-rank HBM floor for CI: the bucketed-vs-padded bank byte
+    ratio, gated against ``benchmarks/baselines/serving_ragged.json``.
+    Pure capacity math — deterministic, immune to runner jitter; the
+    bitwise mixed-rank parity runs in serving-smoke and
+    tests/test_ragged_rank.py."""
+    cap = _rank_bank_capacity()
+    print(row("ragged_rank_gate", 0.0,
+              f"{cap['capacity_ratio']:.2f}x bank bytes "
+              f"(+{cap['extra_min_rank_slots_at_budget']} rank-"
+              f"{min(cap['ranks'])} slots at the padded budget)"))
+    _merge_json(json_path, {"ragged_rank": {
+        **cap,
+        "note": "bucketed adapter-bank bytes vs pad-to-max; gated by "
+                "scripts/check_bench_regression.py in CI",
+    }})
+    print(f"# wrote {json_path} (ragged_rank gate section)")
+
+
+# ---------------------------------------------------------------------------
 # Open-loop trace serving: overlapped dispatch vs the synchronous loop
 # ---------------------------------------------------------------------------
 
@@ -1151,6 +1296,7 @@ def main(argv=None):
         _run_section("spec_gate", spec_gate_section, args.json)
         _run_section("shard_gate", shard_gate_section, args.json)
         _run_section("quant_gate", quant_gate_section, args.json)
+        _run_section("ragged_rank_gate", ragged_rank_gate_section, args.json)
         _run_section("trace_gate", trace_gate_section, args.json)
     elif args.smoke:
         _run_section("ragged", ragged_section, args.json, smoke=True)
@@ -1161,6 +1307,8 @@ def main(argv=None):
         _run_section("spec", spec_section, args.json, smoke=True)
         _run_section("shard", shard_section, args.json, smoke=True)
         _run_section("quant", quant_section, args.json, smoke=True)
+        _run_section("ragged_rank", ragged_rank_section, args.json,
+                     smoke=True)
         _run_section("trace", trace_section, args.json, smoke=True)
         _run_section("smoke_gate", smoke_gate_section, args.json)
     else:
@@ -1172,6 +1320,7 @@ def main(argv=None):
         _run_section("spec", spec_section, args.json)
         _run_section("shard", shard_section, args.json)
         _run_section("quant", quant_section, args.json)
+        _run_section("ragged_rank", ragged_rank_section, args.json)
         _run_section("trace", trace_section, args.json)
         _run_section("smoke_gate", smoke_gate_section, args.json)
     _merge_json(args.json, {"section_walltimes": _SECTION_WALLS})

@@ -29,6 +29,8 @@ WEIGHTS = {
     "tests/test_baselines.py": 64,
     "tests/test_continuous.py": 62,
     "tests/test_serving_sim.py": 60,
+    "tests/test_online_update.py": 80,
+    "tests/test_ragged_rank.py": 43,
     "tests/test_multitenant.py": 22,
     "tests/test_distributed.py": 21,
     "tests/test_spec_decode.py": 20,

@@ -40,6 +40,31 @@ def check_same_rank(ad1: Params, ad2: Params) -> None:
         raise ValueError(f"AdaFusion requires equal LoRA rank, got {r1} vs {r2}")
 
 
+def check_rank_agreement(personalized: Params, global_: Params) -> None:
+    """Per-target rank check for Eq. 7, naming the offending leaf.
+
+    ``merge`` is a plain ``jax.tree.map``: feeding it personalized/global
+    trees whose ranks disagree at some target either dies with an opaque
+    broadcast error or — worse, when one rank divides the other — silently
+    broadcasts into garbage factors.  Walk both trees together and fail
+    fast at the first ``{"a", "b"}`` pair whose ranks differ."""
+    def walk(p, g, path):
+        if isinstance(p, dict) and set(p) == {"a", "b"} \
+                and isinstance(g, dict) and set(g) == {"a", "b"}:
+            rp, rg = p["a"].shape[-1], g["a"].shape[-1]
+            if rp != rg:
+                raise ValueError(
+                    f"AdaFusion (Eq. 7) requires equal LoRA rank per target; "
+                    f"leaf {path or '<root>'} has personalized rank {rp} vs "
+                    f"global rank {rg}")
+            return
+        if isinstance(p, dict) and isinstance(g, dict):
+            for k in p:
+                if k in g:
+                    walk(p[k], g[k], f"{path}[{k!r}]")
+    walk(personalized, global_, "")
+
+
 def _a_leaves(tree):
     out = []
 

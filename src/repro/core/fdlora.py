@@ -132,9 +132,16 @@ class FDLoRATrainer:
         self.history.append({"round": t, "loss": mean_loss})
         return delta
 
-    def stage2(self, clients, batchers):
+    def stage2(self, clients, batchers,
+               on_round: Optional[Callable[[int, Sequence[ClientState]],
+                                           None]] = None):
+        """T outer rounds; ``on_round(t, clients)`` fires after each round —
+        the continual-serving hook (e.g. :meth:`publish` into a live
+        ``AdapterRegistry``, which hot-swaps the serving bank)."""
         for t in range(1, self.fed.rounds + 1):
             self.stage2_round(t, clients, batchers)
+            if on_round is not None:
+                on_round(t, clients)
 
     # ---- Stage 3 ---------------------------------------------------------
     def stage3(self, clients: Sequence[ClientState], batchers):
@@ -162,6 +169,19 @@ class FDLoRATrainer:
     # ---- inference-side helpers -------------------------------------------
     def fused_adapters(self, c: ClientState) -> Params:
         return merge(c.personalized, self.theta_s, jnp.asarray(c.fusion_weights))
+
+    def publish(self, registry, clients: Sequence[ClientState],
+                client_ids: Optional[Sequence[Any]] = None) -> Dict[Any, int]:
+        """Push every client's Eq. 7 fused adapter into a serving registry
+        (``AdapterRegistry`` or ``ShardedAdapterRegistry``), closing the
+        continual-learning loop: re-registration bumps each client's
+        ``version()`` (invalidating its prefix-cache scope) and the bank
+        epoch (hot-swapping live ``StreamSession``\\ s at their next round
+        boundary).  Returns ``{client_id: slot}``."""
+        if client_ids is None:
+            client_ids = [f"client{i}" for i in range(len(clients))]
+        return {cid: registry.register(cid, self.fused_adapters(c))
+                for cid, c in zip(client_ids, clients)}
 
 
 def _dev(batch: Dict[str, np.ndarray]):

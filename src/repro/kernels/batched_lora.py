@@ -39,15 +39,18 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, w_ref, oh_ref, *rest,
-            scale: float, k_steps: int, n_clients: int, quantized: bool):
-    if quantized:
-        # int8 banks ride with one combined per-client scale vector
-        # (s_a[c]·s_b[c], lane-padded): scalar scales commute through the
-        # matmul chain, so dequant collapses to one per-row factor at finish
-        cs_ref, a_ref, b_ref, o_ref, acc_ref, zacc_ref = rest
-    else:
-        a_ref, b_ref, o_ref, acc_ref, zacc_ref = rest
-        cs_ref = None
+            scale: float, k_steps: int, n_clients: int, quantized: bool,
+            ranked: bool):
+    rest = list(rest)
+    # int8 banks ride with one combined per-client scale vector
+    # (s_a[c]·s_b[c], lane-padded): scalar scales commute through the
+    # matmul chain, so dequant collapses to one per-row factor at finish
+    cs_ref = rest.pop(0) if quantized else None
+    # ragged banks ride a per-client effective-rank vector (lane-padded):
+    # the finish step masks rank columns >= the row's rank to exact zero,
+    # so a slot's padded columns can never contribute
+    rk_ref = rest.pop(0) if ranked else None
+    a_ref, b_ref, o_ref, acc_ref, zacc_ref = rest
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -71,6 +74,13 @@ def _kernel(x_ref, w_ref, oh_ref, *rest,
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _finish():
         z = zacc_ref[...]                           # (bm, r_pad) fp32
+        if ranked:
+            # per-row effective rank via the same one-hot select; VPU mask
+            # zeroes padded rank columns before they can reach the B matmul
+            rk = jnp.sum(oh * rk_ref[:1, :n_clients], axis=1,
+                         keepdims=True)             # (bm, 1) fp32
+            col = jax.lax.broadcasted_iota(jnp.float32, z.shape, 1)
+            z = jnp.where(col < rk, z, 0.0)
         # inverse trick: scatter z into the row's client column-block so one
         # matmul against the stacked (C*r_pad, bn) B-bank applies B[g[i]]
         zt = (z[:, None, :] * oh[:, :, None]).reshape(m, -1).astype(x.dtype)
@@ -141,7 +151,7 @@ def _lane_pad(x, mult: int = 128):
 @functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "bk",
                                              "interpret"))
 def batched_lora_matmul(x, w, a, b, adapter_ids, scale: float = 1.0, *,
-                        a_scale=None, b_scale=None,
+                        a_scale=None, b_scale=None, ranks=None,
                         bm: int = 256, bn: int = 256, bk: int = 256,
                         interpret: bool = True):
     """x: (M, K), w: (K, N), a: (C, K, r), b: (C, r, N),
@@ -153,6 +163,11 @@ def batched_lora_matmul(x, w, a, b, adapter_ids, scale: float = 1.0, *,
     finish step — scalar scales commute through the LoRA chain, so no
     dequantized bank is ever materialised.
 
+    With ragged-rank banks pass ``ranks`` ((C,) int32 effective rank per
+    slot, <= r): the finish step zeroes each row's rank columns at or
+    beyond its slot's effective rank, so padded rank columns contribute
+    exact zeros regardless of what lives in them.
+
     M, K, N must tile by (bm, bn, bk); r is zero-padded to 128 internally.
     ``interpret=True`` executes on CPU for validation; on TPU pass False.
     """
@@ -160,6 +175,7 @@ def batched_lora_matmul(x, w, a, b, adapter_ids, scale: float = 1.0, *,
     N = w.shape[1]
     C, _, r = a.shape
     quantized = a_scale is not None
+    ranked = ranks is not None
     r_pad = -(-r // 128) * 128
     a2, b2 = _bank_2d(a, b, r_pad, jnp.int8 if quantized else x.dtype)
     w = w.astype(x.dtype)
@@ -178,6 +194,10 @@ def batched_lora_matmul(x, w, a, b, adapter_ids, scale: float = 1.0, *,
         cs2 = _lane_pad(cs[None, :])                # (1, C_lanes)
         in_specs.append(pl.BlockSpec((1, C_lanes), lambda i, j, k: (0, 0)))
         operands.append(cs2)
+    if ranked:
+        rk2 = _lane_pad(ranks.astype(jnp.float32)[None, :])  # (1, C_lanes)
+        in_specs.append(pl.BlockSpec((1, C_lanes), lambda i, j, k: (0, 0)))
+        operands.append(rk2)
     in_specs += [
         pl.BlockSpec((bk, C * r_pad), lambda i, j, k: (k, 0)),
         pl.BlockSpec((C * r_pad, bn), lambda i, j, k: (0, j)),
@@ -186,7 +206,7 @@ def batched_lora_matmul(x, w, a, b, adapter_ids, scale: float = 1.0, *,
 
     return pl.pallas_call(
         functools.partial(_kernel, scale=scale, k_steps=k_steps, n_clients=C,
-                          quantized=quantized),
+                          quantized=quantized, ranked=ranked),
         grid=(M // bm, N // bn, k_steps),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),

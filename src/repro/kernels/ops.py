@@ -83,6 +83,13 @@ def batched_lora_dense(x: jnp.ndarray, w: jnp.ndarray,
     carries ``a_scale``/``b_scale`` ((C,) fp32) which the kernel applies as
     one per-row combined factor. ``adapter_ids`` is (B,) int32 and
     broadcasts over the trailing (sequence) axes of ``x``.
+
+    Ragged-rank banks arrive with per-bucket LISTS at each leaf (see
+    ``AdapterRegistry(ranks=[...])``): the buckets are concatenated along
+    the client axis in global-slot order, small buckets rank-padded up to
+    the largest bucket, and the kernel gets a per-slot effective-rank
+    vector so padded rank columns contribute exact zeros.
+
     Pads M/K/N to tiles; padded rows route to slot 0 and are sliced away."""
     lead = x.shape[:-1]
     K = x.shape[-1]
@@ -96,11 +103,32 @@ def batched_lora_dense(x: jnp.ndarray, w: jnp.ndarray,
     g = jnp.pad(g, (0, x2.shape[0] - M))
     x2p, _ = _pad_to(x2, 1, block)
     wp, _ = _pad_to(_pad_to(w, 0, block)[0], 1, block)
+    ranks = None
+    if isinstance(bank["a"], (list, tuple)):
+        # ragged: concat buckets on the client axis at the max bucket rank;
+        # the kernel's per-slot rank mask keeps the padding exact
+        r_max = max(ab.shape[-1] for ab in bank["a"])
+        a_all = jnp.concatenate(
+            [jnp.pad(ab, ((0, 0), (0, 0), (0, r_max - ab.shape[-1])))
+             for ab in bank["a"]], axis=0)
+        b_all = jnp.concatenate(
+            [jnp.pad(bb, ((0, 0), (0, r_max - bb.shape[1]), (0, 0)))
+             for bb in bank["b"]], axis=0)
+        ranks = jnp.concatenate(
+            [jnp.full((ab.shape[0],), ab.shape[-1], jnp.int32)
+             for ab in bank["a"]])
+        a_scale = (jnp.concatenate(bank["a_scale"])
+                   if "a_scale" in bank else None)
+        b_scale = (jnp.concatenate(bank["b_scale"])
+                   if "b_scale" in bank else None)
+        bank = {"a": a_all, "b": b_all}
+        if a_scale is not None:
+            bank["a_scale"], bank["b_scale"] = a_scale, b_scale
     ap, _ = _pad_to(bank["a"], 1, block)
     bp, _ = _pad_to(bank["b"], 2, block)
     y = batched_lora_matmul(x2p.astype(jnp.bfloat16), wp, ap, bp, g, scale,
                             a_scale=bank.get("a_scale"),
-                            b_scale=bank.get("b_scale"),
+                            b_scale=bank.get("b_scale"), ranks=ranks,
                             bm=block, bn=block, bk=block, interpret=interpret)
     return y[:M, :N].reshape(*lead, N)
 

@@ -23,7 +23,7 @@ def dual_lora_matmul_ref(x, w, a1, b1, a2, b2, w1, w2, scale: float):
 
 
 def batched_lora_matmul_ref(x, w, a, b, adapter_ids, scale: float, *,
-                            a_scale=None, b_scale=None):
+                            a_scale=None, b_scale=None, ranks=None):
     """Multi-tenant: y[i] = x[i]@w + scale*(x[i]@a[g[i]])@b[g[i]].
 
     a: (C, K, r), b: (C, r, N), adapter_ids: (M,) int32. The reference
@@ -31,7 +31,12 @@ def batched_lora_matmul_ref(x, w, a, b, adapter_ids, scale: float, *,
 
     With int8 banks pass ``a_scale``/``b_scale`` ((C,) fp32 per-client
     quantization scales): the gathered factors dequantize before the
-    matmul chain, exactly as the kernel's per-row combined scale does."""
+    matmul chain, exactly as the kernel's per-row combined scale does.
+
+    With ragged-rank banks pass ``ranks`` ((C,) int32 effective rank per
+    slot): rank columns at or beyond a row's effective rank are zeroed
+    between the two einsums — exactly the kernel's per-row rank mask — so
+    whatever lives in a slot's padded columns cannot contribute."""
     base = jnp.matmul(x, w, preferred_element_type=jnp.float32)
     ag = jnp.take(a, adapter_ids, axis=0).astype(jnp.float32)   # (M, K, r)
     bg = jnp.take(b, adapter_ids, axis=0).astype(jnp.float32)   # (M, r, N)
@@ -39,6 +44,10 @@ def batched_lora_matmul_ref(x, w, a, b, adapter_ids, scale: float, *,
         ag = ag * jnp.take(a_scale, adapter_ids, axis=0)[:, None, None]
         bg = bg * jnp.take(b_scale, adapter_ids, axis=0)[:, None, None]
     z = jnp.einsum("mk,mkr->mr", x.astype(jnp.float32), ag)
+    if ranks is not None:
+        rk = jnp.take(ranks.astype(jnp.int32), adapter_ids)     # (M,)
+        col = jnp.arange(z.shape[-1])[None, :]
+        z = jnp.where(col < rk[:, None], z, 0.0)
     z = jnp.einsum("mr,mrn->mn", z, bg)
     return (base + scale * z).astype(x.dtype)
 

@@ -294,6 +294,20 @@ def main(argv=None):
                     help="disable async overlapped dispatch (run the "
                          "synchronous reference loop; tokens are bitwise "
                          "identical either way)")
+    ap.add_argument("--ranks", default="",
+                    help="with --tenants: comma list of rank buckets (e.g. "
+                         "'2,4,8') — the bank splits into one bucket per "
+                         "rank and client i registers at ranks[i %% len], "
+                         "padded into its bucket (small-rank clients stop "
+                         "paying max-rank HBM; outputs stay bitwise equal "
+                         "to each client's native-rank adapter)")
+    ap.add_argument("--update-every", type=int, default=0,
+                    help="continuous mode: every N stream events, re-"
+                         "register one client's fused adapter mid-serve "
+                         "(round-robin) — the FDLoRA continual loop; the "
+                         "live session hot-swaps the bank at its next "
+                         "round boundary and the updated client's prefix-"
+                         "cache scope is invalidated by the version bump")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -319,19 +333,39 @@ def main(argv=None):
             raise SystemExit("--tenants is a self-contained demo (random "
                              "fused adapters per tenant); it cannot combine "
                              "with --adapters/--dual")
+        if args.update_every and args.prefix_cache:
+            raise SystemExit("--update-every re-registers adapters mid-"
+                             "serve, so the --prefix-cache warm-call "
+                             "bitwise check cannot hold; pick one")
         # FDLoRA end state: every client registered one Eq.7-fused adapter;
         # a single engine serves a batch that mixes all of them.
+        rank_list = [int(r) for r in args.ranks.split(",") if r.strip()]
+        # ragged banks split capacity across rank buckets; give the demo 2x
+        # slack so round-robin client ranks never churn a full bucket
+        cap = args.tenants if not rank_list else 2 * args.tenants
+        cap = max(cap, args.shards * max(1, len(set(rank_list))))
         if args.shards > 1:
-            cap = -(-args.tenants // args.shards) * args.shards
+            cap = -(-cap // args.shards) * args.shards
             registry = ShardedAdapterRegistry(cfg, capacity=cap,
-                                              num_shards=args.shards)
+                                              num_shards=args.shards,
+                                              ranks=rank_list or None)
         else:
-            registry = AdapterRegistry(cfg, capacity=args.tenants)
+            registry = AdapterRegistry(cfg, capacity=cap,
+                                       ranks=rank_list or None)
+
+        def _client_rank(i: int):
+            return rank_list[i % len(rank_list)] if rank_list else None
+
         for i in range(args.tenants):
-            ad_p = init_adapters(jax.random.PRNGKey(10 + 2 * i), cfg)
-            ad_s = init_adapters(jax.random.PRNGKey(11 + 2 * i), cfg)
+            rk = _client_rank(i)
+            ad_p = init_adapters(jax.random.PRNGKey(10 + 2 * i), cfg, rank=rk)
+            ad_s = init_adapters(jax.random.PRNGKey(11 + 2 * i), cfg, rank=rk)
             registry.register_dual(f"client{i}", ad_p, ad_s,
                                    jnp.array([0.6, 0.6]))
+        if rank_list:
+            print(f"ragged adapter bank: buckets {registry.bucket_ranks}, "
+                  f"per-slot effective ranks "
+                  f"{registry.slot_ranks().tolist()}")
         eng = MultiTenantEngine(model, cfg, params, registry)
         if args.serve:
             from repro.serving.trace import synth_trace
@@ -379,15 +413,34 @@ def main(argv=None):
                             priority=mix[i % len(mix)] if mix else "batch")
                     for i in range(n_req)]
             t0 = time.time()
-            if args.stream:
+            updates = 0
+            if args.stream or args.update_every > 0:
                 outs = [np.zeros((0,), np.int32)] * n_req
+                events = 0
                 for rid, toks, finished in eng.generate_stream(reqs, sc):
                     outs[rid] = np.concatenate(
                         [outs[rid], np.asarray(toks, np.int32)])
-                    tag = " <done>" if finished else ""
-                    print(f"  [stream] req{rid} +{len(toks)} "
-                          f"({outs[rid].size} total){tag}: "
-                          f"{tok.decode(np.asarray(toks))[:24]!r}")
+                    if args.stream:
+                        tag = " <done>" if finished else ""
+                        print(f"  [stream] req{rid} +{len(toks)} "
+                              f"({outs[rid].size} total){tag}: "
+                              f"{tok.decode(np.asarray(toks))[:24]!r}")
+                    events += 1
+                    if args.update_every and events % args.update_every == 0:
+                        # the FDLoRA continual loop: a finished stage-2
+                        # round publishes one client's refreshed fused
+                        # adapter into the LIVE registry; the session
+                        # hot-swaps the bank at its next round boundary
+                        i = updates % args.tenants
+                        rk = _client_rank(i)
+                        registry.register_dual(
+                            f"client{i}",
+                            init_adapters(jax.random.PRNGKey(
+                                1000 + 2 * updates), cfg, rank=rk),
+                            init_adapters(jax.random.PRNGKey(
+                                1001 + 2 * updates), cfg, rank=rk),
+                            jnp.array([0.6, 0.6]))
+                        updates += 1
             else:
                 outs = eng.generate(reqs, sc)
             dt = time.time() - t0
@@ -406,6 +459,10 @@ def main(argv=None):
                 print(f"  {args.shards} shards: placements "
                       f"{stats['shard_placements']} "
                       f"(prefix-affinity > adapter home > least-loaded)")
+            if args.update_every:
+                print(f"  online updates: {updates} mid-serve "
+                      f"re-registrations, "
+                      f"{stats['adapter_bank_refreshes']} bank hot-swaps")
             if args.spec_decode:
                 print(f"  spec decode (k={sc.spec_k}): "
                       f"{stats['accepted_tokens']}/{stats['drafted_tokens']} "

@@ -89,7 +89,29 @@ def lora_delta(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
     int8 banks (``AdapterRegistry(bank_dtype="int8")``) carry one fp32
     quantization scale per client and factor: ``a_scale``/``b_scale`` (C,).
     The gathered per-row factors dequantize before the fp32 matmul chain.
+
+    Ragged-rank banks (``AdapterRegistry(ranks=[...])``) arrive as
+    per-bucket LISTS of stacked arrays: rows route to the bucket holding
+    their global slot (bucket boundaries are static — read from shapes — so
+    the select stays jit/scan-stable).  Each bucket evaluates at its own
+    rank; zero rank-padding inside a bucket is arithmetically inert, so the
+    result is bitwise the per-client native-rank delta.
     """
+    if isinstance(a, (list, tuple)):  # ragged bank: route rows by bucket
+        if adapter_ids is None:
+            raise ValueError("banked LoRA leaves need adapter_ids")
+        out, off = None, 0
+        for i, (ab, bb) in enumerate(zip(a, b)):
+            cb = ab.shape[0]
+            local = jnp.clip(adapter_ids - off, 0, cb - 1)
+            d = lora_delta(x, ab, bb, local,
+                           a_scale[i] if a_scale is not None else None,
+                           b_scale[i] if b_scale is not None else None)
+            in_bucket = (adapter_ids >= off) & (adapter_ids < off + cb)
+            mask = in_bucket.reshape((-1,) + (1,) * (d.ndim - 1))
+            out = d if out is None else jnp.where(mask, d, out)
+            off += cb
+        return out
     xf = x.astype(jnp.float32)
     if a.ndim == 3:  # banked: per-row client routing
         if adapter_ids is None:

@@ -617,6 +617,14 @@ class StreamSession:
             for r in requests:
                 self.submit(r)
         self.bank = engine.registry.bank()
+        # hot-swap: the registry's bank_epoch moves when an online update
+        # (re-)registers a client mid-serve; step() re-snapshots the bank
+        # at its next round boundary.  Untouched clients' slots hold
+        # bitwise-identical weights across the swap, so their streams are
+        # unchanged; the updated client's NEW requests also pick up a
+        # bumped version() scope, invalidating its cached prefixes.
+        self._bank_epoch = getattr(engine.registry, "bank_epoch", 0)
+        self.bank_refreshes = 0
         self.ids = np.zeros((num_slots,), np.int32)
         self.rng = jax.random.PRNGKey(sc.seed)
         engine.last_stats = None     # a partially consumed stream has none
@@ -703,6 +711,15 @@ class StreamSession:
         an idle session).  Raises ``RuntimeError`` if queued work cannot
         make progress (a request that can never fit the pool)."""
         eng, sc, sched = self.engine, self.sc, self.sched
+        epoch = getattr(eng.registry, "bank_epoch", 0)
+        if epoch != self._bank_epoch:
+            # online update landed between rounds: swap in the new bank for
+            # every dispatch from here on.  A deferred (pipelined) chunk was
+            # already dispatched under the old snapshot — its values are
+            # unaffected by when we materialise them, so no flush needed.
+            self.bank = eng.registry.bank()
+            self._bank_epoch = epoch
+            self.bank_refreshes += 1
         flushed: List[Tuple[int, List[int], bool]] = []
         if self._pending is not None and (
                 sched.queued or sched.prefill_pending
@@ -874,6 +891,7 @@ class StreamSession:
                  "prefix_cached_blocks": kv.cached_blocks,
                  "prefix_evictions": kv.evicted_cached - self._evicted0,
                  "prefix_pool_reused": self._reused,
+                 "adapter_bank_refreshes": self.bank_refreshes,
                  "sched_policy": sc.sched_policy,
                  "num_shards": sc.num_shards,
                  "kv_dtype": sc.kv_dtype,

@@ -13,20 +13,35 @@ block sees ``(C, d_in, r)`` leaves — the per-request gather then happens
 inside ``layers.lora_delta`` (jnp oracle) or ``kernels.batched_lora``
 (Pallas, gather never materialised in HBM).
 
+Heterogeneous ranks (``ranks=[r0 < r1 < ...]``) split the capacity into one
+*bucket* per rank: a client registering at rank r lands in the smallest
+bucket with rank >= r, zero-padded up to the bucket rank.  Zero-padded rank
+columns are arithmetically inert (x@0 accumulates exact zeros), so a padded
+client serves bitwise the same tokens as its native-rank dense adapter —
+while small-rank clients stop paying max-rank HBM.  ``bank()`` then returns
+the same tree *structure* but with a per-bucket LIST of stacked arrays at
+each factor leaf (lists are pytrees: the period scan and jit tracing are
+unchanged), and ``layers.lora_delta`` / ``kernels.ops`` route rows to their
+bucket by global slot id.
+
 Capacity is fixed up front (the bank is a VMEM-budgetable, shape-stable
 buffer — no recompiles as tenants come and go); registration beyond capacity
-evicts the least-recently-*served* client. Slots are updated functionally
-(``leaf.at[:, slot].set``) so a jitted engine never sees a shape change.
+evicts the least-recently-*served* client in the same bucket. Slots are
+updated functionally (``leaf.at[:, slot].set``) so a jitted engine never
+sees a shape change.  ``bank_epoch`` counts bank content changes so a
+long-lived serving session can hot-swap re-registered (online-updated)
+adapters without re-snapshotting the bank every step.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.dual_lora import merge
+from repro.core.dual_lora import check_rank_agreement, merge
 from repro.core.lora import init_adapters
 from repro.kernels.quant import quantize_int8
 
@@ -38,8 +53,26 @@ def _is_pair(node) -> bool:
     return isinstance(node, dict) and set(node) == {"a", "b"}
 
 
+def _zip_banks(banks: Sequence[Params]) -> Params:
+    """Zip per-bucket bank trees into ONE tree whose factor leaves are
+    per-bucket lists (pair dicts — including int8 4-leaf dicts — get
+    ``{"a": [a_b0, a_b1, ...], ...}``).  Lists are valid jax pytrees, so
+    the result still scans over the period axis and traces under jit."""
+    first = banks[0]
+    if all(isinstance(v, dict) for v in first.values()):
+        return {k: _zip_banks([bk[k] for bk in banks]) for k in first}
+    return {k: [bk[k] for bk in banks] for k in first}
+
+
 class AdapterRegistry:
     """Registers/evicts client adapter trees into a stacked serving bank.
+
+    ``ranks=[r0, r1, ...]`` enables ragged-rank mode: the capacity splits
+    into one bucket per rank (larger buckets listed last; sizes as equal as
+    integer division allows) and each client lands in the smallest bucket
+    whose rank covers its native rank, zero-padded up to the bucket rank.
+    Without ``ranks`` the registry is the classic single-bucket bank at
+    ``rank or cfg.lora_rank`` and ``bank()`` returns plain stacked arrays.
 
     ``bank_dtype="int8"`` stores the stacked factors quantized: each target
     grows fp32 ``a_scale``/``b_scale`` leaves of shape (n_periods, C) — one
@@ -51,44 +84,90 @@ class AdapterRegistry:
     at read time, so a zero slot still serves the frozen base model."""
 
     def __init__(self, cfg, capacity: int, rank: Optional[int] = None,
-                 bank_dtype: str = "f32"):
+                 bank_dtype: str = "f32",
+                 ranks: Optional[Sequence[int]] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if bank_dtype not in ("f32", "int8"):
             raise ValueError(
                 f"bank_dtype must be 'f32' or 'int8', got {bank_dtype!r}")
+        if ranks is not None:
+            if rank is not None:
+                raise ValueError("pass either rank= or ranks=, not both")
+            ranks = sorted({int(r) for r in ranks})
+            if not ranks or ranks[0] < 1:
+                raise ValueError(f"ranks must be positive ints, got {ranks!r}")
+            if capacity < len(ranks):
+                raise ValueError(
+                    f"capacity {capacity} cannot host {len(ranks)} rank "
+                    f"buckets (need >= 1 slot per bucket)")
         self.capacity = capacity
         self.bank_dtype = bank_dtype
+        self.ragged = ranks is not None
         self.evictions = 0
-        template = jax.eval_shape(
-            lambda: init_adapters(jax.random.PRNGKey(0), cfg, rank))
+        self.bank_epoch = 0  # bumped on every bank *content* change
+        self._cfg = cfg
+        self._rank_templates: Dict[int, Params] = {}
+        if self.ragged:
+            nb = len(ranks)
+            base, rem = divmod(capacity, nb)
+            self.bucket_ranks: List[int] = list(ranks)
+            self.bucket_sizes: List[int] = [base + (1 if i < rem else 0)
+                                            for i in range(nb)]
+        else:
+            template = jax.eval_shape(
+                lambda: init_adapters(jax.random.PRNGKey(0), cfg, rank))
+            r0 = self._infer_rank(template, what="bank template")
+            self._rank_templates[r0] = template
+            self.bucket_ranks = [r0]
+            self.bucket_sizes = [capacity]
+        offs, acc = [], 0
+        for sz in self.bucket_sizes:
+            offs.append(acc)
+            acc += sz
+        self.bucket_offsets: List[int] = offs
         # kept for validating registered trees before any jax.tree.map can
         # die with an opaque broadcast error deep inside the bank update
-        self._template: Params = template
-        # zero bank: a zero adapter is a no-op, so unregistered slots serve
+        self._template: Params = self._rank_template(self.bucket_ranks[-1])
+        # zero banks: a zero adapter is a no-op, so unregistered slots serve
         # the frozen base model.
-        if bank_dtype == "int8":
-            self._bank = self._build_int8_bank(template)
-        else:
-            self._bank = jax.tree.map(
-                lambda l: jnp.zeros(l.shape[:1] + (capacity,) + l.shape[1:],
-                                    l.dtype), template)
+        self._banks: List[Params] = [
+            self._zero_bank(self._rank_template(rb), sz)
+            for rb, sz in zip(self.bucket_ranks, self.bucket_sizes)]
+        self._bank_cache: Optional[Params] = None
         self._lru: "OrderedDict[Any, int]" = OrderedDict()  # client -> slot
-        self._free: List[int] = list(range(capacity))
+        self._free: List[List[int]] = [list(range(sz))
+                                       for sz in self.bucket_sizes]
         self._versions: Dict[Any, int] = {}  # bumped on every register()
+        self._client_rank: Dict[Any, int] = {}  # native (pre-pad) rank
         self._default_priority: Dict[Any, str] = {}  # client -> class name
 
-    def _build_int8_bank(self, node) -> Params:
+    def _rank_template(self, rank: int) -> Params:
+        t = self._rank_templates.get(rank)
+        if t is None:
+            t = jax.eval_shape(
+                lambda: init_adapters(jax.random.PRNGKey(0), self._cfg, rank))
+            self._rank_templates[rank] = t
+        return t
+
+    def _zero_bank(self, template: Params, cap: int) -> Params:
+        if self.bank_dtype == "int8":
+            return self._build_int8_bank(template, cap)
+        return jax.tree.map(
+            lambda l: jnp.zeros(l.shape[:1] + (cap,) + l.shape[1:], l.dtype),
+            template)
+
+    def _build_int8_bank(self, node, cap: int) -> Params:
         """Mirror the template with int8 factor banks plus per-(period,
         client) fp32 scale leaves next to each {"a", "b"} pair."""
         if _is_pair(node):
-            out = {k: jnp.zeros(l.shape[:1] + (self.capacity,) + l.shape[1:],
+            out = {k: jnp.zeros(l.shape[:1] + (cap,) + l.shape[1:],
                                 jnp.int8) for k, l in node.items()}
             periods = node["a"].shape[0]
-            out["a_scale"] = jnp.zeros((periods, self.capacity), jnp.float32)
-            out["b_scale"] = jnp.zeros((periods, self.capacity), jnp.float32)
+            out["a_scale"] = jnp.zeros((periods, cap), jnp.float32)
+            out["b_scale"] = jnp.zeros((periods, cap), jnp.float32)
             return out
-        return {k: self._build_int8_bank(v) for k, v in node.items()}
+        return {k: self._build_int8_bank(v, cap) for k, v in node.items()}
 
     def _set_slot_int8(self, bank, adapters, slot: int) -> Params:
         """Quantize one client's fp32 tree into bank slot ``slot``."""
@@ -114,28 +193,112 @@ class AdapterRegistry:
         """Client ids, least- to most-recently used."""
         return list(self._lru)
 
-    def _grab_slot(self, client_id) -> int:
-        if client_id in self._lru:
-            return self._lru[client_id]
-        if self._free:
-            return self._free.pop(0)
-        evicted, slot = self._lru.popitem(last=False)   # LRU out
-        # a churned-out tenant is gone: its SLA class must not silently
-        # resurrect if it re-registers later without one (and the dict must
-        # not grow unboundedly under tenant churn).  ``_versions`` stays —
-        # monotonicity is what keeps stale prefix-cache entries unreachable
-        # if the client ever comes back.
-        self._default_priority.pop(evicted, None)
-        self.evictions += 1
-        return slot
+    def bucket_of_slot(self, slot: int) -> Tuple[int, int]:
+        """Global slot id -> (bucket index, local slot within the bucket)."""
+        if not 0 <= slot < self.capacity:
+            raise ValueError(f"slot {slot} out of range [0, {self.capacity})")
+        for b in reversed(range(len(self.bucket_offsets))):
+            if slot >= self.bucket_offsets[b]:
+                return b, slot - self.bucket_offsets[b]
+        raise AssertionError("unreachable")
 
-    def _validate_tree(self, adapters: Params, what: str = "adapters") -> None:
+    def slot_ranks(self) -> np.ndarray:
+        """(capacity,) int32: the *native* registered rank per slot
+        (bucket rank for free slots) — the effective-rank vector the
+        batched kernel masks padded rank columns with."""
+        out = np.zeros(self.capacity, np.int32)
+        for b, (rb, sz) in enumerate(zip(self.bucket_ranks,
+                                         self.bucket_sizes)):
+            off = self.bucket_offsets[b]
+            out[off:off + sz] = rb
+        for cid, slot in self._lru.items():
+            out[slot] = self._client_rank.get(cid, out[slot])
+        return out
+
+    def _bucket_for(self, rank: int) -> int:
+        """Smallest bucket whose rank covers ``rank``."""
+        for b, rb in enumerate(self.bucket_ranks):
+            if rank <= rb:
+                return b
+        raise ValueError(
+            f"adapter rank {rank} exceeds the largest rank bucket "
+            f"(buckets: {self.bucket_ranks})")
+
+    def _infer_rank(self, adapters: Params, what: str = "adapters") -> int:
+        """The single LoRA rank of a client tree; rejects mixed ranks
+        *within* one tree (per-client rank is one number — heterogeneity
+        is across clients) naming the offending leaves."""
+        found: Dict[int, str] = {}
+
+        def walk(node, path):
+            if _is_pair(node):
+                found.setdefault(int(node["a"].shape[-1]), path or "<root>")
+            elif isinstance(node, dict):
+                for k, v in node.items():
+                    walk(v, f"{path}[{k!r}]")
+        walk(adapters, "")
+        if not found:
+            raise ValueError(f"{what} tree has no {{'a', 'b'}} adapter pairs")
+        if len(found) > 1:
+            detail = ", ".join(f"rank {r} at {p}"
+                               for r, p in sorted(found.items()))
+            raise ValueError(
+                f"{what} tree mixes LoRA ranks within one client: {detail}")
+        return next(iter(found))
+
+    def _pad_rank(self, adapters: Params, r_to: int) -> Params:
+        """Zero-pad every factor pair's rank axis up to the bucket rank
+        (a-last / b-second-to-last); zero columns are arithmetically inert
+        so the padded client serves bitwise its native-rank output."""
+        def pad(node):
+            if _is_pair(node):
+                a, b = node["a"], node["b"]
+                dr = r_to - a.shape[-1]
+                if dr == 0:
+                    return {"a": a, "b": b}
+                return {"a": jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, dr)]),
+                        "b": jnp.pad(b, [(0, 0)] * (b.ndim - 2)
+                                     + [(0, dr), (0, 0)])}
+            return {k: pad(v) for k, v in node.items()}
+        return pad(adapters)
+
+    def _grab_slot(self, client_id, bucket: int) -> int:
+        if client_id in self._lru:
+            slot = self._lru[client_id]
+            b_cur, local = self.bucket_of_slot(slot)
+            if b_cur == bucket:
+                return slot
+            # the client's rank moved buckets: release the old slot back to
+            # its bucket's free list (a rank change is not an eviction)
+            self._lru.pop(client_id)
+            self._free[b_cur].append(local)
+        if self._free[bucket]:
+            return self.bucket_offsets[bucket] + self._free[bucket].pop(0)
+        # evict the least-recently-used client resident in THIS bucket
+        for evicted, slot in self._lru.items():      # LRU -> MRU order
+            if self.bucket_of_slot(slot)[0] != bucket:
+                continue
+            self._lru.pop(evicted)
+            # a churned-out tenant is gone: its SLA class must not silently
+            # resurrect if it re-registers later without one (and the dict
+            # must not grow unboundedly under tenant churn).  ``_versions``
+            # stays — monotonicity is what keeps stale prefix-cache entries
+            # unreachable if the client ever comes back.
+            self._default_priority.pop(evicted, None)
+            self._client_rank.pop(evicted, None)
+            self.evictions += 1
+            return slot
+        raise AssertionError("bucket has neither free nor resident slots")
+
+    def _validate_tree(self, adapters: Params, what: str = "adapters",
+                       template: Optional[Params] = None) -> None:
         """Check ``adapters`` against the bank template BEFORE any bank
         update, so a mis-shaped or mis-structured tree fails with the bad
         leaf named instead of an opaque broadcast error inside
         ``jax.tree.map``."""
-        t_leaves = jax.tree_util.tree_flatten_with_path(self._template)[0]
-        t_def = jax.tree.structure(self._template)
+        template = self._template if template is None else template
+        t_leaves = jax.tree_util.tree_flatten_with_path(template)[0]
+        t_def = jax.tree.structure(template)
         a_def = jax.tree.structure(adapters)
         if t_def != a_def:
             t_keys = {jax.tree_util.keystr(p) for p, _ in t_leaves}
@@ -157,11 +320,23 @@ class AdapterRegistry:
                     f"{what} leaf {jax.tree_util.keystr(path)} has shape "
                     f"{shape}; the bank template expects {tuple(tmpl.shape)}")
 
+    def _check_in(self, adapters: Params,
+                  what: str = "adapters") -> Tuple[int, int]:
+        """Validate an incoming tree and pick its bucket -> (rank, bucket)."""
+        if self.ragged:
+            rank = self._infer_rank(adapters, what=what)
+            self._validate_tree(adapters, what=what,
+                                template=self._rank_template(rank))
+            return rank, self._bucket_for(rank)
+        self._validate_tree(adapters, what=what)
+        return self.bucket_ranks[0], 0
+
     # ---- writes -----------------------------------------------------------
     def register(self, client_id, adapters: Params,
                  default_priority: Optional[str] = None) -> int:
         """Install (or refresh) a client's fused adapter tree; returns its
-        slot. Evicts the least-recently-used client when full.
+        slot. Evicts the least-recently-used client (same rank bucket, in
+        ragged mode) when full.
 
         ``default_priority`` (an SLA class name — ``interactive`` |
         ``batch`` | ``background``) becomes the scheduling class for this
@@ -169,7 +344,7 @@ class AdapterRegistry:
         ``Request.priority`` always wins.  ``None`` keeps any previously
         registered default (a weight refresh shouldn't silently demote a
         tenant's SLA)."""
-        self._validate_tree(adapters)
+        rank, bucket = self._check_in(adapters)
         if default_priority is not None:
             from repro.serving.scheduler import PRIORITY_CLASSES
             if default_priority not in PRIORITY_CLASSES:
@@ -177,38 +352,60 @@ class AdapterRegistry:
                     f"unknown default_priority {default_priority!r} "
                     f"(have {sorted(PRIORITY_CLASSES)})")
             self._default_priority[client_id] = default_priority
-        slot = self._grab_slot(client_id)
+        slot = self._grab_slot(client_id, bucket)
+        _, local = self.bucket_of_slot(slot)
+        if rank != self.bucket_ranks[bucket]:
+            adapters = self._pad_rank(adapters, self.bucket_ranks[bucket])
         if self.bank_dtype == "int8":
-            self._bank = self._set_slot_int8(self._bank, adapters, slot)
+            self._banks[bucket] = self._set_slot_int8(self._banks[bucket],
+                                                      adapters, local)
         else:
-            self._bank = jax.tree.map(
-                lambda bank, leaf: bank.at[:, slot].set(
+            self._banks[bucket] = jax.tree.map(
+                lambda bank, leaf: bank.at[:, local].set(
                     leaf.astype(bank.dtype)),
-                self._bank, adapters)
+                self._banks[bucket], adapters)
         self._lru[client_id] = slot
         self._lru.move_to_end(client_id)
         self._versions[client_id] = self._versions.get(client_id, 0) + 1
+        self._client_rank[client_id] = rank
+        self.bank_epoch += 1
+        self._bank_cache = None
         return slot
+
+    def _validate_dual(self, personalized: Params, global_: Params) -> None:
+        """Pre-merge checks for :meth:`register_dual`: per-target rank
+        agreement (naming the offending leaf) plus both trees against the
+        bank template — BEFORE ``merge`` can silently broadcast mismatched
+        ranks into garbage."""
+        check_rank_agreement(personalized, global_)
+        rank, _ = self._check_in(personalized, what="personalized adapters")
+        if self.ragged:
+            self._validate_tree(global_, what="global adapters",
+                                template=self._rank_template(rank))
+        else:
+            self._validate_tree(global_, what="global adapters")
 
     def register_dual(self, client_id, personalized: Params, global_: Params,
                       fusion_weights,
                       default_priority: Optional[str] = None) -> int:
         """Fuse a dual-LoRA state via Eq. 7 and install the result."""
-        self._validate_tree(personalized, what="personalized adapters")
-        self._validate_tree(global_, what="global adapters")
+        self._validate_dual(personalized, global_)
         fused = merge(personalized, global_, jnp.asarray(fusion_weights))
         return self.register(client_id, fused,
                              default_priority=default_priority)
 
     def evict(self, client_id) -> None:
-        """Drop a client; its slot returns to the free list (stale weights
-        stay in the bank but are unreachable until the slot is reused)."""
+        """Drop a client; its slot returns to its bucket's free list (stale
+        weights stay in the bank but are unreachable until the slot is
+        reused)."""
         if client_id not in self._lru:
             raise KeyError(f"client {client_id!r} is not resident "
                            f"(resident: {self.resident})")
         slot = self._lru.pop(client_id)
+        bucket, local = self.bucket_of_slot(slot)
         self._default_priority.pop(client_id, None)
-        self._free.append(slot)
+        self._client_rank.pop(client_id, None)
+        self._free[bucket].append(local)
 
     # ---- reads ------------------------------------------------------------
     def acquire(self, client_id) -> int:
@@ -229,11 +426,22 @@ class AdapterRegistry:
         """Monotone per-client weight version, bumped on every
         :meth:`register`.  The serving engine folds it into the
         prefix-cache hash scope so cached K/V computed under old adapter
-        weights can never be served after a re-registration (0 for clients
-        that were never registered)."""
-        return self._versions.get(client_id, 0)
+        weights can never be served after a re-registration.  Raises
+        ``KeyError`` for a client that was NEVER registered (evicted
+        clients keep their last version — monotonicity is what keeps their
+        stale cache entries unreachable on return)."""
+        if client_id not in self._versions:
+            raise KeyError(f"client {client_id!r} was never registered "
+                           f"(resident: {self.resident})")
+        return self._versions[client_id]
 
     def bank(self) -> Params:
         """The stacked adapter tree (leaves (n_periods, C, d_in, r); int8
-        banks also carry (n_periods, C) fp32 ``a_scale``/``b_scale``)."""
-        return self._bank
+        banks also carry (n_periods, C) fp32 ``a_scale``/``b_scale``).
+        With multiple rank buckets each factor leaf becomes a per-bucket
+        LIST of stacked arrays, in global-slot order."""
+        if len(self._banks) == 1:
+            return self._banks[0]
+        if self._bank_cache is None:
+            self._bank_cache = _zip_banks(self._banks)
+        return self._bank_cache

@@ -193,10 +193,17 @@ class ShardedAdapterRegistry:
     local``; :meth:`bank` concatenates the per-shard banks along the
     client axis so the engine's per-row ``adapter_ids`` index it directly
     (the concatenation is cached and invalidated on register/evict).
+
+    With ``ranks=[...]`` every shard carries the same rank-bucket layout
+    and :meth:`bank` concatenates shard banks *per bucket* (the list
+    leaves zip through ``jax.tree.map``), so global slots order as
+    [bucket0: shard0..shardN, bucket1: shard0..shardN, ...] — see
+    :meth:`_global_slot`.
     """
 
     def __init__(self, cfg, capacity: int, num_shards: int,
-                 rank: Optional[int] = None, bank_dtype: str = "f32"):
+                 rank: Optional[int] = None, bank_dtype: str = "f32",
+                 ranks: Optional[Sequence[int]] = None):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         if capacity % num_shards != 0:
@@ -208,9 +215,10 @@ class ShardedAdapterRegistry:
         self.bank_dtype = bank_dtype
         self.shards: List[AdapterRegistry] = [
             AdapterRegistry(cfg, self.capacity_per_shard, rank,
-                            bank_dtype=bank_dtype)
+                            bank_dtype=bank_dtype, ranks=ranks)
             for _ in range(num_shards)]
         self._home: Dict[Any, int] = {}
+        self._versions: Dict[Any, int] = {}  # survives cross-shard moves
         self._bank_cache: Optional[Params] = None
 
     # ---- bookkeeping ------------------------------------------------------
@@ -233,6 +241,40 @@ class ShardedAdapterRegistry:
         """The client's home shard, or None when not resident."""
         return self._home.get(client_id)
 
+    @property
+    def ragged(self) -> bool:
+        return self.shards[0].ragged
+
+    @property
+    def bucket_ranks(self) -> List[int]:
+        return self.shards[0].bucket_ranks
+
+    @property
+    def bank_epoch(self) -> int:
+        """Monotone bank-content counter (sum over shards) — the serving
+        session's hot-swap signal, same contract as the single registry."""
+        return sum(sh.bank_epoch for sh in self.shards)
+
+    def _global_slot(self, s: int, local_slot: int) -> int:
+        """Per-shard slot -> global slot under the per-bucket concat order
+        of :meth:`bank`: [bucket0: shard0..shardN, bucket1: ...].  With one
+        bucket this reduces to the legacy ``s * capacity_per_shard +
+        local``."""
+        sub = self.shards[s]
+        b, loc = sub.bucket_of_slot(local_slot)
+        off = self.num_shards * sum(sub.bucket_sizes[:b])
+        return off + s * sub.bucket_sizes[b] + loc
+
+    def slot_ranks(self) -> np.ndarray:
+        """(capacity,) int32 effective rank per GLOBAL slot (see
+        ``AdapterRegistry.slot_ranks``)."""
+        out = np.zeros(self.capacity, np.int32)
+        for s, sh in enumerate(self.shards):
+            sub = sh.slot_ranks()
+            for local in range(sh.capacity):
+                out[self._global_slot(s, local)] = sub[local]
+        return out
+
     def _place(self, client_id) -> int:
         if client_id in self._home:
             return self._home[client_id]
@@ -253,13 +295,19 @@ class ShardedAdapterRegistry:
         for evicted in before - set(sub.resident) - {client_id}:
             self._home.pop(evicted, None)
         self._home[client_id] = s
+        # version lives at THIS level: a client evicted from one shard and
+        # re-registered on another must keep climbing (per-shard counters
+        # restart, which would resurrect stale prefix-cache scopes)
+        self._versions[client_id] = self._versions.get(client_id, 0) + 1
         self._bank_cache = None
-        return s * self.capacity_per_shard + local
+        return self._global_slot(s, local)
 
     def register_dual(self, client_id, personalized: Params, global_: Params,
                       fusion_weights,
                       default_priority: Optional[str] = None) -> int:
         from repro.core.dual_lora import merge
+        self.shards[self._place(client_id)]._validate_dual(personalized,
+                                                           global_)
         fused = merge(personalized, global_, jnp.asarray(fusion_weights))
         return self.register(client_id, fused,
                              default_priority=default_priority)
@@ -278,20 +326,26 @@ class ShardedAdapterRegistry:
         if s is None:
             raise KeyError(f"client {client_id!r} is not resident "
                            f"(resident: {self.resident})")
-        return (s * self.capacity_per_shard
-                + self.shards[s].acquire(client_id))
+        return self._global_slot(s, self.shards[s].acquire(client_id))
 
     def default_priority(self, client_id) -> Optional[str]:
         s = self._home.get(client_id)
         return None if s is None else self.shards[s].default_priority(client_id)
 
     def version(self, client_id) -> int:
-        s = self._home.get(client_id)
-        return 0 if s is None else self.shards[s].version(client_id)
+        """Monotone per-client weight version (prefix-cache scope); raises
+        ``KeyError`` for a client that was never registered.  Tracked at
+        the sharded level so it survives cross-shard re-registration."""
+        if client_id not in self._versions:
+            raise KeyError(f"client {client_id!r} was never registered "
+                           f"(resident: {self.resident})")
+        return self._versions[client_id]
 
     def bank(self) -> Params:
         """The global stacked adapter tree: per-shard banks concatenated
-        along the client axis (leaves (n_periods, capacity, d_in, r))."""
+        along the client axis (leaves (n_periods, capacity, d_in, r));
+        ragged banks concatenate per bucket (list leaves zip through
+        ``jax.tree.map``), matching :meth:`_global_slot`."""
         if self._bank_cache is None:
             banks = [sh.bank() for sh in self.shards]
             self._bank_cache = jax.tree.map(

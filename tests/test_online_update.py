@@ -1,0 +1,260 @@
+"""Serve-during-update: online FDLoRA re-registration hot-swaps the
+serving bank mid-stream.  Untouched clients' greedy streams stay bitwise
+stable across the swap; the updated client's prefix-cache scope is
+invalidated exactly once per version bump; the real
+``FDLoRATrainer.stage2_round`` -> ``publish`` loop interleaves with live
+serving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense
+from repro.core.fdlora import FDLoRAConfig, FDLoRATrainer
+from repro.core.lora import init_adapters
+from repro.data.pipeline import SFTBatcher
+from repro.data.synthetic import gen_log_dataset
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.api import get_model
+from repro.serving.engine import (MultiTenantEngine, Request, ServeConfig)
+from repro.serving.registry import AdapterRegistry
+from repro.serving.sharded import ShardedAdapterRegistry
+
+CLIENT_RANKS = {"c0": 2, "c1": 4, "c2": 8}
+
+
+def _client_adapters(cfg, seed, rank):
+    ad = init_adapters(jax.random.PRNGKey(seed), cfg, rank=rank)
+    bump = jax.random.PRNGKey(seed + 99)
+    return jax.tree.map(
+        lambda l: l + 0.02 * jax.random.normal(bump, l.shape), ad)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_dense()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _registry(cfg, shards):
+    if shards == 1:
+        reg = AdapterRegistry(cfg, capacity=3, ranks=[2, 4, 8])
+    else:
+        reg = ShardedAdapterRegistry(cfg, capacity=6, num_shards=2,
+                                     ranks=[2, 4, 8])
+    for i, (cid, rk) in enumerate(CLIENT_RANKS.items()):
+        reg.register(cid, _client_adapters(cfg, i + 1, rk))
+    return reg
+
+
+def _requests(cfg):
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    order = ["c0", "c1", "c2", "c0", "c2", "c1"]
+    return [Request(c, prompt, max_new_tokens=6) for c in order], order
+
+
+def _drive(mt, reqs, sc, update_at=None, update_fn=None):
+    """Step a closed-loop session to completion, firing ``update_fn``
+    between rounds ``update_at`` steps in.  Returns (streams, stats)."""
+    ses = mt.session(sc, reqs)
+    got = {i: [] for i in range(len(reqs))}
+    steps = 0
+    while ses.has_work:
+        for rid, toks, _fin in ses.step():
+            got[rid].extend(toks)
+        steps += 1
+        if update_at is not None and steps == update_at:
+            update_fn()
+    return got, ses.finalize()
+
+
+# ---------------------------------------------------------------------------
+# Tentpole acceptance: hot-swap mid-serve, untouched clients bitwise stable
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("shards", [1, 2])
+def test_hot_swap_untouched_clients_bitwise_stable(setup, backend, shards):
+    cfg, model, params = setup
+    reqs, order = _requests(cfg)
+    sc = ServeConfig(batch_size=2 * shards, max_new_tokens=6, block_size=4,
+                     num_blocks=1 + 8 * shards, prefill_chunk=4,
+                     paged_backend=backend, num_shards=shards)
+
+    mt_base = MultiTenantEngine(model, cfg, params, _registry(cfg, shards))
+    base, st_base = _drive(mt_base, reqs, sc)
+    assert st_base["adapter_bank_refreshes"] == 0
+
+    reg = _registry(cfg, shards)
+    mt = MultiTenantEngine(model, cfg, params, reg)
+    v0 = reg.version("c1")
+
+    def update():           # online update lands for c1 mid-stream
+        reg.register("c1", _client_adapters(cfg, 41, CLIENT_RANKS["c1"]))
+    upd, st = _drive(mt, reqs, sc, update_at=2, update_fn=update)
+    assert st["adapter_bank_refreshes"] >= 1
+    assert reg.version("c1") == v0 + 1
+    changed = False
+    for rid, cid in enumerate(order):
+        if cid == "c1":     # the updated client may (and should) diverge
+            changed |= upd[rid] != base[rid]
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(upd[rid], np.int32), np.asarray(base[rid], np.int32),
+            err_msg=f"untouched client {cid} (rid {rid}) drifted "
+                    f"across the hot-swap")
+    assert changed, "the updated client's mid-flight stream never moved " \
+                    "(swap had no observable effect)"
+
+
+def test_hot_swap_int8_kv_untouched_stable(setup):
+    """The swap composes with quantized KV pools: untouched clients'
+    int8-served streams are bitwise identical to an int8 run without the
+    update."""
+    cfg, model, params = setup
+    reqs, order = _requests(cfg)
+    sc = ServeConfig(batch_size=2, max_new_tokens=6, block_size=4,
+                     num_blocks=9, prefill_chunk=4, kv_dtype="int8")
+    mt_base = MultiTenantEngine(model, cfg, params, _registry(cfg, 1))
+    base, _ = _drive(mt_base, reqs, sc)
+    reg = _registry(cfg, 1)
+    mt = MultiTenantEngine(model, cfg, params, reg)
+    upd, st = _drive(mt, reqs, sc, update_at=2, update_fn=lambda:
+                     reg.register("c1", _client_adapters(cfg, 41, 4)))
+    assert st["adapter_bank_refreshes"] >= 1 and st["kv_dtype"] == "int8"
+    for rid, cid in enumerate(order):
+        if cid != "c1":
+            np.testing.assert_array_equal(np.asarray(upd[rid], np.int32),
+                                          np.asarray(base[rid], np.int32))
+
+
+def test_hot_swap_applies_new_weights_next_session(setup):
+    """After the swap drains, a fresh stream for the updated client serves
+    the NEW adapter: bitwise equal to a registry built with those weights
+    from scratch."""
+    cfg, model, params = setup
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    sc = ServeConfig(batch_size=2, max_new_tokens=6, block_size=4,
+                     num_blocks=9, prefill_chunk=4)
+    new_c1 = _client_adapters(cfg, 41, 4)
+
+    reg = _registry(cfg, 1)
+    mt = MultiTenantEngine(model, cfg, params, reg)
+    reqs = [Request("c1", prompt, max_new_tokens=6)]
+    _drive(mt, reqs, sc, update_at=1, update_fn=lambda:
+           reg.register("c1", new_c1))
+    after, _ = _drive(mt, reqs, sc)
+
+    fresh_reg = AdapterRegistry(cfg, capacity=3, ranks=[2, 4, 8])
+    for i, (cid, rk) in enumerate(CLIENT_RANKS.items()):
+        fresh_reg.register(cid, new_c1 if cid == "c1"
+                           else _client_adapters(cfg, i + 1, rk))
+    fresh, _ = _drive(MultiTenantEngine(model, cfg, params, fresh_reg),
+                      reqs, sc)
+    np.testing.assert_array_equal(np.asarray(after[0], np.int32),
+                                  np.asarray(fresh[0], np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Prefix-cache scope: one version bump invalidates exactly once
+# ---------------------------------------------------------------------------
+
+def test_version_bump_invalidates_prefix_scope_exactly_once(setup):
+    cfg, model, params = setup
+    reg = _registry(cfg, 1)
+    mt = MultiTenantEngine(model, cfg, params, reg)
+    pre = (np.arange(12, dtype=np.int32) * 3 + 1) % cfg.vocab_size
+    mk = lambda tail: np.concatenate([pre, np.asarray(tail, np.int32)])
+    # single-request probes: a second same-client request would re-match
+    # blocks sealed INTRA-call and muddy the post-bump hit accounting
+    reqs_c0 = [Request("c0", mk([5, 9]), max_new_tokens=4)]
+    reqs_c2 = [Request("c2", mk([7, 7]), max_new_tokens=4)]
+    sc = ServeConfig(batch_size=2, max_new_tokens=4, block_size=4,
+                     num_blocks=24, prefill_chunk=4, prefix_cache=True)
+    mt.release_prefix_cache()
+    mt.generate(reqs_c0, sc)                       # cold: seeds the cache
+    mt.generate(reqs_c2, sc)
+    out_warm = mt.generate(reqs_c0, sc)            # warm under version 1
+    assert mt.last_stats["prefix_hit_tokens"] > 0
+
+    reg.register("c0", _client_adapters(cfg, 77, CLIENT_RANKS["c0"]))
+    out_v2a = mt.generate(reqs_c0, sc)             # scope moved: no hits
+    st = mt.last_stats
+    assert st["prefix_hit_tokens"] == 0, \
+        "stale K/V served after the adapter update"
+    # the new weights actually changed the served tokens
+    assert (np.asarray(out_warm[0]) != np.asarray(out_v2a[0])).any()
+    out_v2b = mt.generate(reqs_c0, sc)             # re-cached under v2
+    assert mt.last_stats["prefix_hit_tokens"] > 0, \
+        "invalidation must happen exactly once per bump, not forever"
+    for a, b in zip(out_v2a, out_v2b):
+        np.testing.assert_array_equal(a, b)
+    # the untouched client's scope (and cached blocks) survived the bump
+    mt.generate(reqs_c2, sc)
+    assert mt.last_stats["prefix_hit_tokens"] > 0
+    mt.release_prefix_cache()
+
+
+# ---------------------------------------------------------------------------
+# The real loop: stage2_round training interleaved with live serving
+# ---------------------------------------------------------------------------
+
+def test_stage2_publish_interleaves_with_live_serving(setup):
+    """FDLoRA continual learning end to end: a live session streams while
+    ``stage2_round`` + ``publish`` push client1's refreshed Eq. 7 fusion
+    into the registry — client0's stream is bitwise unaffected."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(0)
+    tok = ByteTokenizer()
+    batchers = [SFTBatcher(gen_log_dataset(rng, 12, i), tok, 64, 2, seed=i)
+                for i in range(2)]
+    fed = FDLoRAConfig(n_clients=2, rounds=1, inner_steps=1, sync_every=1,
+                       stage1_steps=1, fusion_steps=1, few_shot_k=2)
+    tr = FDLoRATrainer(model, cfg, fed, params)
+    clients = tr.stage1(batchers)
+    tr.stage3(clients, batchers)                   # fusion weights for Eq. 7
+
+    reg = AdapterRegistry(cfg, capacity=3)
+    slots = tr.publish(reg, clients)
+    assert set(slots) == {"client0", "client1"}
+    assert reg.version("client0") == 1
+
+    mt = MultiTenantEngine(model, cfg, params, reg)
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    reqs = [Request("client0", prompt, max_new_tokens=6),
+            Request("client1", prompt, max_new_tokens=6),
+            Request("client0", prompt, max_new_tokens=6)]
+    sc = ServeConfig(batch_size=2, max_new_tokens=6, block_size=4,
+                     num_blocks=13, prefill_chunk=4)
+    base, _ = _drive(mt, reqs, sc)
+
+    def train_and_publish():                       # one federated round
+        tr.stage2_round(1, clients, batchers)
+        tr.publish(reg, [clients[1]], client_ids=["client1"])
+    upd, st = _drive(mt, reqs, sc, update_at=2, update_fn=train_and_publish)
+    assert st["adapter_bank_refreshes"] >= 1
+    assert reg.version("client1") == 2 and reg.version("client0") == 1
+    np.testing.assert_array_equal(np.asarray(upd[0], np.int32),
+                                  np.asarray(base[0], np.int32))
+    np.testing.assert_array_equal(np.asarray(upd[2], np.int32),
+                                  np.asarray(base[2], np.int32))
+
+
+def test_stage2_on_round_hook_fires_every_round(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(1)
+    tok = ByteTokenizer()
+    batchers = [SFTBatcher(gen_log_dataset(rng, 12, i), tok, 64, 2, seed=i)
+                for i in range(2)]
+    fed = FDLoRAConfig(n_clients=2, rounds=3, inner_steps=1, sync_every=1,
+                       stage1_steps=1)
+    tr = FDLoRATrainer(model, cfg, fed, params)
+    clients = tr.stage1(batchers)
+    seen = []
+    tr.stage2(clients, batchers,
+              on_round=lambda t, cl: seen.append((t, len(cl))))
+    assert seen == [(1, 2), (2, 2), (3, 2)]

@@ -490,7 +490,8 @@ def test_registry_version_bumps_invalidate_scope(engine):
     from repro.serving.registry import AdapterRegistry
     cfg = engine[0]
     reg = AdapterRegistry(cfg, capacity=2)
-    assert reg.version("c0") == 0                  # never registered
+    with pytest.raises(KeyError, match="never registered"):
+        reg.version("c0")                          # never registered
     reg.register("c0", init_adapters(jax.random.PRNGKey(50), cfg))
     assert reg.version("c0") == 1
     reg.register("c0", init_adapters(jax.random.PRNGKey(51), cfg))

@@ -283,7 +283,8 @@ def test_register_rejects_misshaped_tree_naming_leaf():
     with pytest.raises(ValueError, match=r"wq.*\['a'\]|\['a'\].*wq"):
         reg.register("c0", bad)
     assert "c0" not in reg                    # nothing half-registered
-    assert reg.version("c0") == 0
+    with pytest.raises(KeyError):
+        reg.version("c0")                     # no version entry leaked
     assert reg.default_priority("c0") is None  # no priority leaked either
     with pytest.raises(ValueError, match=r"wq"):
         reg.register("c0", bad, default_priority="interactive")

@@ -1,0 +1,540 @@
+"""Ragged-rank adapter banks: per-slot effective-rank masking in the
+batched kernel, bucketed registry layout, and mixed-rank engine parity
+against per-client native-rank dense-LoRA oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense
+from repro.core.lora import init_adapters
+from repro.kernels.batched_lora import batched_lora_matmul
+from repro.kernels.ops import batched_lora_dense
+from repro.kernels.quant import quantize_int8
+from repro.kernels.ref import batched_lora_matmul_ref
+from repro.models.api import get_model
+from repro.models.layers import lora_delta
+from repro.serving.engine import (Engine, MultiTenantEngine, Request,
+                                  ServeConfig)
+from repro.serving.registry import AdapterRegistry, _zip_banks
+from repro.serving.sharded import ShardedAdapterRegistry
+
+RNG = np.random.default_rng(13)
+
+
+def _rand(shape, dtype, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernel: the per-slot rank mask makes padded rank columns exact zeros
+# ---------------------------------------------------------------------------
+
+def _ragged_bank(C, K, N, r_max, ranks, garbage=False):
+    """A padded-to-r_max bank whose slot c only uses ranks[c] columns.
+    With ``garbage`` the padded columns hold large non-zero junk — the
+    kernel's rank mask (not zero padding) must neutralise them."""
+    a = np.asarray(_rand((C, K, r_max), jnp.float32, 0.05))
+    b = np.asarray(_rand((C, r_max, N), jnp.float32, 0.05))
+    col = np.arange(r_max)
+    pad_a = col[None, None, :] >= np.asarray(ranks)[:, None, None]
+    pad_b = col[None, :, None] >= np.asarray(ranks)[:, None, None]
+    fill = (99.0, -77.0) if garbage else (0.0, 0.0)
+    a = np.where(pad_a, fill[0], a)
+    b = np.where(pad_b, fill[1], b)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+def test_kernel_rank_mask_zeroes_padded_columns():
+    """The kernel with ``ranks`` must ignore padded rank columns even when
+    they hold garbage: bitwise equal to the kernel on the zero-padded bank,
+    and exactly equal to the truncated per-slot dense reference."""
+    M = K = N = 128
+    C, r_max = 4, 8
+    ranks = [2, 4, 8, 3]
+    x = _rand((M, K), jnp.float32)
+    w = _rand((K, N), jnp.float32, 0.05)
+    # identical live columns, different padding content
+    RNG2 = np.random.default_rng(21)
+    a_live = RNG2.standard_normal((C, K, r_max)) * 0.05
+    b_live = RNG2.standard_normal((C, r_max, N)) * 0.05
+    col = np.arange(r_max)
+    pad_a = col[None, None, :] >= np.asarray(ranks)[:, None, None]
+    pad_b = col[None, :, None] >= np.asarray(ranks)[:, None, None]
+    a_clean = jnp.asarray(np.where(pad_a, 0.0, a_live), jnp.float32)
+    b_clean = jnp.asarray(np.where(pad_b, 0.0, b_live), jnp.float32)
+    a_junk = jnp.asarray(np.where(pad_a, 99.0, a_live), jnp.float32)
+    b_junk = jnp.asarray(np.where(pad_b, -77.0, b_live), jnp.float32)
+    g = jnp.asarray(RNG.integers(0, C, M), jnp.int32)
+    rk = jnp.asarray(ranks, jnp.int32)
+    kw = dict(bm=128, bn=128, bk=128)
+    y_junk = batched_lora_matmul(x, w, a_junk, b_junk, g, 2.0, ranks=rk, **kw)
+    y_clean = batched_lora_matmul(x, w, a_clean, b_clean, g, 2.0, ranks=rk,
+                                  **kw)
+    np.testing.assert_array_equal(np.asarray(y_junk), np.asarray(y_clean))
+    # ranked ref on the junk bank == truncated-factor dense oracle (per-row
+    # matmuls contract in a different order than the batched einsum, so the
+    # comparison is tight-tolerance, not bitwise)
+    yr = batched_lora_matmul_ref(x, w, a_junk, b_junk, g, 2.0, ranks=rk)
+    y_trunc = jnp.stack([
+        x[i] @ w + 2.0 * (x[i] @ a_clean[c, :, :ranks[c]])
+        @ b_clean[c, :ranks[c], :]
+        for i, c in enumerate(np.asarray(g))])
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(y_trunc),
+                               atol=1e-5, rtol=1e-5)
+    # ...but the ranked ref must be BITWISE immune to padding content
+    yr_clean = batched_lora_matmul_ref(x, w, a_clean, b_clean, g, 2.0,
+                                       ranks=rk)
+    np.testing.assert_array_equal(np.asarray(yr), np.asarray(yr_clean))
+    np.testing.assert_allclose(np.asarray(y_junk), np.asarray(yr),
+                               atol=2e-4, rtol=0.05)
+
+
+def test_kernel_without_ranks_unchanged():
+    """ranks=None keeps the legacy kernel path bitwise intact."""
+    M = K = N = 128
+    C, r = 3, 8
+    x = _rand((M, K), jnp.bfloat16)
+    w = _rand((K, N), jnp.bfloat16, 0.05)
+    a = _rand((C, K, r), jnp.float32, 0.05)
+    b = _rand((C, r, N), jnp.float32, 0.05)
+    g = jnp.asarray(RNG.integers(0, C, M), jnp.int32)
+    y = batched_lora_matmul(x, w, a, b, g, 2.0, bm=128, bn=128, bk=128)
+    y_full = batched_lora_matmul(x, w, a, b, g, 2.0,
+                                 ranks=jnp.full((C,), r, jnp.int32),
+                                 bm=128, bn=128, bk=128)
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(y_full, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# ops.batched_lora_dense: list-leaf (per-bucket) banks
+# ---------------------------------------------------------------------------
+
+def test_ops_list_bank_matches_concat_ref():
+    B, S, K, N = 4, 6, 200, 300
+    bucket_ranks = [2, 4, 8]
+    sizes = [2, 1, 2]                       # 5 global slots
+    bank = {"a": [_rand((c, K, r), jnp.float32, 0.05)
+                  for c, r in zip(sizes, bucket_ranks)],
+            "b": [_rand((c, r, N), jnp.float32, 0.05)
+                  for c, r in zip(sizes, bucket_ranks)]}
+    x = _rand((B, S, K), jnp.bfloat16)
+    w = _rand((K, N), jnp.bfloat16, 0.05)
+    ids = jnp.asarray([0, 2, 4, 3], jnp.int32)   # one slot per bucket + more
+    y = batched_lora_dense(x, w, bank, ids, 2.0, block=128)
+    # reference: zero-pad buckets to r_max, concat, mask by effective rank
+    r_max = max(bucket_ranks)
+    a_all = jnp.concatenate(
+        [jnp.pad(ab, ((0, 0), (0, 0), (0, r_max - ab.shape[-1])))
+         for ab in bank["a"]])
+    b_all = jnp.concatenate(
+        [jnp.pad(bb, ((0, 0), (0, r_max - bb.shape[1]), (0, 0)))
+         for bb in bank["b"]])
+    rk = jnp.asarray(sum(([r] * c for c, r in zip(sizes, bucket_ranks)), []),
+                     jnp.int32)
+    g = jnp.repeat(ids, S)
+    yr = batched_lora_matmul_ref(x.reshape(B * S, K), w, a_all, b_all, g,
+                                 2.0, ranks=rk).reshape(B, S, N)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=0.08,
+                               rtol=0.05)
+
+
+def test_ops_list_bank_int8_scales():
+    B, S, K, N = 2, 4, 128, 128
+    bucket_ranks = [4, 8]
+    sizes = [2, 2]
+    fa = [_rand((c, K, r), jnp.float32, 0.05)
+          for c, r in zip(sizes, bucket_ranks)]
+    fb = [_rand((c, r, N), jnp.float32, 0.05)
+          for c, r in zip(sizes, bucket_ranks)]
+    qa = [quantize_int8(a, axis=(1, 2)) for a in fa]
+    qb = [quantize_int8(b, axis=(1, 2)) for b in fb]
+    bank = {"a": [q[0] for q in qa], "b": [q[0] for q in qb],
+            "a_scale": [q[1] for q in qa], "b_scale": [q[1] for q in qb]}
+    x = _rand((B, S, K), jnp.bfloat16)
+    w = _rand((K, N), jnp.bfloat16, 0.05)
+    ids = jnp.asarray([1, 3], jnp.int32)
+    y = batched_lora_dense(x, w, bank, ids, 2.0, block=128)
+    # fp32 list bank as oracle (int8 quantization error bounded)
+    yf = batched_lora_dense(x, w, {"a": fa, "b": fb}, ids, 2.0, block=128)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yf, np.float32), atol=0.15,
+                               rtol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# layers.lora_delta: bucket routing is bitwise per-client
+# ---------------------------------------------------------------------------
+
+def test_lora_delta_ragged_routes_by_bucket():
+    B, S, K, N = 5, 3, 32, 24
+    bucket_ranks = [2, 8]
+    sizes = [2, 3]
+    a = [_rand((c, K, r), jnp.float32)
+         for c, r in zip(sizes, bucket_ranks)]
+    b = [_rand((c, r, N), jnp.float32)
+         for c, r in zip(sizes, bucket_ranks)]
+    x = _rand((B, S, K), jnp.float32)
+    ids = jnp.asarray([0, 1, 2, 4, 3], jnp.int32)
+    z = lora_delta(x, a, b, ids)
+    offs = np.cumsum([0] + sizes)
+    for i, gid in enumerate(np.asarray(ids)):
+        bkt = int(np.searchsorted(offs, gid, side="right") - 1)
+        loc = int(gid) - int(offs[bkt])
+        # routing: bitwise equal to the banked path on that bucket alone
+        local_ids = jnp.clip(ids - int(offs[bkt]), 0, sizes[bkt] - 1)
+        zb = lora_delta(x, a[bkt], b[bkt], local_ids)
+        np.testing.assert_array_equal(np.asarray(z[i]), np.asarray(zb[i]))
+        # numerics: the per-client single-adapter oracle at native rank
+        zi = lora_delta(x[i:i + 1], a[bkt][loc], b[bkt][loc])
+        np.testing.assert_allclose(np.asarray(z[i]), np.asarray(zi[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_lora_delta_ragged_requires_ids():
+    with pytest.raises(ValueError):
+        lora_delta(_rand((2, 3, 8), jnp.float32),
+                   [_rand((2, 8, 4), jnp.float32)],
+                   [_rand((2, 4, 8), jnp.float32)])
+
+
+# ---------------------------------------------------------------------------
+# AdapterRegistry: bucketed layout + validation
+# ---------------------------------------------------------------------------
+
+def _cfg():
+    return tiny_dense()
+
+
+def test_registry_bucket_layout():
+    reg = AdapterRegistry(_cfg(), capacity=7, ranks=[8, 2, 4])
+    assert reg.ragged
+    assert reg.bucket_ranks == [2, 4, 8]          # sorted, deduped
+    assert reg.bucket_sizes == [3, 2, 2]          # remainder to small ranks
+    assert reg.bucket_offsets == [0, 3, 5]
+    assert reg.bucket_of_slot(0) == (0, 0)
+    assert reg.bucket_of_slot(4) == (1, 1)
+    assert reg.bucket_of_slot(6) == (2, 1)
+    np.testing.assert_array_equal(reg.slot_ranks(),
+                                  [2, 2, 2, 4, 4, 8, 8])
+
+
+def test_registry_bucket_constructor_validation():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="not both"):
+        AdapterRegistry(cfg, capacity=4, rank=4, ranks=[2, 4])
+    with pytest.raises(ValueError, match="positive"):
+        AdapterRegistry(cfg, capacity=4, ranks=[0, 4])
+    with pytest.raises(ValueError, match="cannot host"):
+        AdapterRegistry(cfg, capacity=2, ranks=[2, 4, 8])
+
+
+def test_registry_smallest_covering_bucket_and_padding():
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, capacity=4, ranks=[4, 8])
+    ad3 = init_adapters(jax.random.PRNGKey(1), cfg, rank=3)
+    slot = reg.register("c3", ad3)               # rank 3 -> bucket rank 4
+    b, local = reg.bucket_of_slot(slot)
+    assert reg.bucket_ranks[b] == 4
+    assert reg.slot_ranks()[slot] == 3           # native rank survives
+    # the bank slot holds the zero-padded tree exactly
+    bank = reg.bank()
+    a_leaf = jax.tree.leaves(ad3)[0]             # ("a" first per sort order)
+    first_list = jax.tree.leaves(
+        bank, is_leaf=lambda l: isinstance(l, list))[0]
+    got = np.asarray(first_list[b][:, local])
+    want = np.zeros(got.shape, got.dtype)
+    want[..., :a_leaf.shape[-1]] = np.asarray(a_leaf)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_registry_rank_too_large_names_buckets():
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, capacity=2, ranks=[2, 4])
+    ad = init_adapters(jax.random.PRNGKey(1), cfg, rank=16)
+    with pytest.raises(ValueError, match=r"buckets: \[2, 4\]"):
+        reg.register("big", ad)
+
+
+def test_registry_mixed_rank_tree_rejected():
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, capacity=2, ranks=[4, 8])
+    ad4 = init_adapters(jax.random.PRNGKey(1), cfg, rank=4)
+    ad8 = init_adapters(jax.random.PRNGKey(1), cfg, rank=8)
+
+    def graft(n4, n8):
+        if isinstance(n4, dict) and set(n4) == {"a", "b"}:
+            graft.first, out = False, (n4 if graft.first else n8)
+            return dict(out)
+        keys = list(n4)
+        out = {}
+        for k in keys:
+            out[k] = graft(n4[k], n8[k])
+        return out
+    graft.first = True
+    franken = graft(ad4, ad8)
+    with pytest.raises(ValueError, match="mixes LoRA ranks"):
+        reg.register("bad", franken)
+
+
+def test_registry_per_bucket_lru_eviction():
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, capacity=3, ranks=[2, 8])  # sizes [2, 1]
+    a2 = lambda s: init_adapters(jax.random.PRNGKey(s), cfg, rank=2)
+    a8 = lambda s: init_adapters(jax.random.PRNGKey(s), cfg, rank=8)
+    reg.register("s0", a2(1))
+    reg.register("s1", a2(2))
+    reg.register("big", a8(3))
+    reg.acquire("s0")                            # LRU in bucket 0 is now s1
+    reg.register("s2", a2(4))                    # bucket 0 full: evicts s1
+    assert "s1" not in reg and "s0" in reg and "big" in reg
+    assert reg.evictions == 1
+    # the big-bucket resident was never a candidate
+    assert reg.acquire("big") == reg.bucket_offsets[1]
+
+
+def test_registry_rank_change_moves_bucket_without_eviction():
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, capacity=4, ranks=[2, 8])
+    reg.register("c", init_adapters(jax.random.PRNGKey(1), cfg, rank=2))
+    s_old = reg.acquire("c")
+    assert reg.bucket_of_slot(s_old)[0] == 0
+    s_new = reg.register("c", init_adapters(jax.random.PRNGKey(2), cfg,
+                                            rank=8))
+    assert reg.bucket_of_slot(s_new)[0] == 1
+    assert reg.evictions == 0                    # a move is not an eviction
+    assert len(reg) == 1 and reg.version("c") == 2
+    # the vacated small-bucket slot is allocatable again (FIFO free list:
+    # filling the bucket reuses it without any eviction)
+    reg.register("d", init_adapters(jax.random.PRNGKey(3), cfg, rank=2))
+    reg.register("e", init_adapters(jax.random.PRNGKey(4), cfg, rank=2))
+    assert reg.evictions == 0
+    assert s_old in {reg.acquire("d"), reg.acquire("e")}
+
+
+def test_registry_bank_list_structure_and_epoch():
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, capacity=4, ranks=[2, 4])
+    assert reg.bank_epoch == 0
+    bank = reg.bank()
+    leaves = jax.tree.leaves(bank, is_leaf=lambda l: isinstance(l, list))
+    assert all(isinstance(l, list) and len(l) == 2 for l in leaves)
+    e0 = reg.bank_epoch
+    reg.register("c", init_adapters(jax.random.PRNGKey(1), cfg, rank=2))
+    assert reg.bank_epoch == e0 + 1
+    reg.evict("c")                               # content unchanged: no bump
+    assert reg.bank_epoch == e0 + 1
+    # single-bucket registries still return plain stacked arrays
+    legacy = AdapterRegistry(cfg, capacity=2).bank()
+    assert all(hasattr(l, "shape") for l in jax.tree.leaves(legacy))
+
+
+def test_registry_int8_ragged_roundtrip():
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, capacity=4, ranks=[2, 8], bank_dtype="int8")
+    ad = init_adapters(jax.random.PRNGKey(1), cfg, rank=2)
+    ad = jax.tree.map(lambda l: l + 0.1, ad)     # non-zero so scales move
+    slot = reg.register("c", ad)
+    b, local = reg.bucket_of_slot(slot)
+    assert b == 0
+    bank = reg.bank()
+
+    def find_pair(node):
+        if isinstance(node, dict) and "a_scale" in node:
+            return node
+        for v in node.values():
+            got = find_pair(v)
+            if got is not None:
+                return got
+        return None
+    pair = find_pair(bank)
+    assert isinstance(pair["a"], list) and pair["a"][0].dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(pair["a_scale"][0][:, local]))) > 0
+
+
+def test_zip_banks_structure():
+    b0 = {"blocks": {"q": {"a": jnp.zeros((1, 2, 3, 2)),
+                           "b": jnp.zeros((1, 2, 2, 3))}}}
+    b1 = {"blocks": {"q": {"a": jnp.ones((1, 3, 3, 4)),
+                           "b": jnp.ones((1, 3, 4, 3))}}}
+    z = _zip_banks([b0, b1])
+    assert isinstance(z["blocks"]["q"]["a"], list)
+    assert z["blocks"]["q"]["a"][0].shape == (1, 2, 3, 2)
+    assert z["blocks"]["q"]["b"][1].shape == (1, 3, 4, 3)
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: register_dual rank agreement, version() KeyError
+# ---------------------------------------------------------------------------
+
+def _mismatched_dual(cfg):
+    """(personalized, global) whose FIRST {"a","b"} target disagrees in
+    rank — the Eq. 7 merge would silently broadcast without validation."""
+    p = init_adapters(jax.random.PRNGKey(1), cfg, rank=4)
+    g = init_adapters(jax.random.PRNGKey(2), cfg, rank=4)
+
+    def widen_first(node):
+        if isinstance(node, dict) and set(node) == {"a", "b"}:
+            if widen_first.done:
+                return node
+            widen_first.done = True
+            a, b = node["a"], node["b"]
+            return {"a": jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, 4)]),
+                    "b": jnp.pad(b, [(0, 0)] * (b.ndim - 2)
+                                 + [(0, 4), (0, 0)])}
+        return {k: widen_first(v) for k, v in node.items()}
+    widen_first.done = False
+    return p, widen_first(g)
+
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_register_dual_rank_mismatch_names_leaf(sharded):
+    cfg = _cfg()
+    if sharded:
+        reg = ShardedAdapterRegistry(cfg, capacity=4, num_shards=2,
+                                     ranks=[4, 8])
+    else:
+        reg = AdapterRegistry(cfg, capacity=4, ranks=[4, 8])
+    p, g = _mismatched_dual(cfg)
+    with pytest.raises(ValueError,
+                       match=r"equal LoRA rank per target.*rank 4.*rank 8"):
+        reg.register_dual("c", p, g, jnp.array([0.5, 0.5]))
+
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_version_unregistered_raises_naming_residents(sharded):
+    cfg = _cfg()
+    if sharded:
+        reg = ShardedAdapterRegistry(cfg, capacity=4, num_shards=2)
+    else:
+        reg = AdapterRegistry(cfg, capacity=4)
+    reg.register("alice", init_adapters(jax.random.PRNGKey(1), cfg))
+    with pytest.raises(KeyError, match=r"never registered.*alice"):
+        reg.version("ghost")
+    assert reg.version("alice") == 1
+    reg.evict("alice")
+    assert reg.version("alice") == 1             # history survives eviction
+
+
+def test_sharded_version_monotone_across_shard_moves():
+    """A client churned off one shard and later re-placed (possibly on a
+    different shard) must keep a MONOTONE version — per-shard counters
+    would restart at 1 and resurrect stale prefix-cache entries."""
+    cfg = _cfg()
+    reg = ShardedAdapterRegistry(cfg, capacity=2, num_shards=2)
+    ad = init_adapters(jax.random.PRNGKey(1), cfg)
+    reg.register("c0", ad)
+    assert reg.version("c0") == 1
+    reg.evict("c0")
+    reg.register("other", ad)                    # takes a slot somewhere
+    reg.register("c0", ad)                       # re-placed
+    assert reg.version("c0") == 2
+
+
+def test_sharded_ragged_global_slots():
+    cfg = _cfg()
+    reg = ShardedAdapterRegistry(cfg, capacity=8, num_shards=2,
+                                 ranks=[4, 8])
+    assert reg.ragged and reg.bucket_ranks == [4, 8]
+    np.testing.assert_array_equal(reg.slot_ranks(),
+                                  [4, 4, 4, 4, 8, 8, 8, 8])
+    slots = []
+    for i in range(4):
+        rk = [4, 8][i % 2]
+        slots.append(reg.register(
+            f"c{i}", init_adapters(jax.random.PRNGKey(i), cfg, rank=rk)))
+    assert len(set(slots)) == 4
+    for i, s in enumerate(slots):
+        assert reg.slot_ranks()[s] == [4, 8][i % 2]
+        assert reg.acquire(f"c{i}") == s
+    # bank concat order matches _global_slot: leaf list per bucket, each
+    # bucket spanning num_shards * bucket_size clients
+    bank = reg.bank()
+    leaves = jax.tree.leaves(bank, is_leaf=lambda l: isinstance(l, list))
+    assert all(len(l) == 2 for l in leaves)
+    a0 = leaves[0]
+    assert a0[0].shape[1] == 4 and a0[1].shape[1] == 4  # 2 shards x size 2
+
+
+# ---------------------------------------------------------------------------
+# Engine: >= 3 distinct ranks in ONE dispatch, bitwise vs native-rank oracle
+# ---------------------------------------------------------------------------
+
+CLIENT_RANKS = {"c0": 2, "c1": 4, "c2": 8}
+
+
+def _client_adapters(cfg, seed, rank):
+    ad = init_adapters(jax.random.PRNGKey(seed), cfg, rank=rank)
+    bump = jax.random.PRNGKey(seed + 99)
+    return jax.tree.map(
+        lambda l: l + 0.02 * jax.random.normal(bump, l.shape), ad)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # f32 end to end: the Pallas attention kernels' online-softmax
+    # accumulation only guarantees bitwise greedy parity with the jnp
+    # oracle in float32 (same precedent as test_sched_policy's f32_engine)
+    cfg = tiny_dense(dtype="float32", param_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ads = {cid: _client_adapters(cfg, i + 1, r)
+           for i, (cid, r) in enumerate(CLIENT_RANKS.items())}
+    return cfg, model, params, ads
+
+
+@pytest.fixture(scope="module")
+def singles(setup):
+    cfg, model, params, ads = setup
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    sc = ServeConfig(batch_size=1, max_new_tokens=6, cache_len=64)
+    out = {cid: np.asarray(Engine(model, cfg, params, ad).generate(
+        jnp.asarray(prompt)[None], sc))[0] for cid, ad in ads.items()}
+    vals = list(out.values())
+    assert any((vals[0] != v).any() for v in vals[1:]), "clients must differ"
+    return prompt, out
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("shards", [1, 2])
+def test_mixed_rank_batch_bitwise_vs_native_oracle(setup, singles, backend,
+                                                   shards):
+    """Acceptance: one continuous-batching dispatch mixing >= 3 distinct
+    native ranks serves every request bitwise equal to that client's
+    dense per-client LoRA at its NATIVE rank."""
+    cfg, model, params, ads = setup
+    prompt, oracle = singles
+    if shards == 1:
+        reg = AdapterRegistry(cfg, capacity=3, ranks=[2, 4, 8])
+    else:
+        reg = ShardedAdapterRegistry(cfg, capacity=6, num_shards=2,
+                                     ranks=[2, 4, 8])
+    for cid, ad in ads.items():
+        reg.register(cid, ad)
+    assert len({CLIENT_RANKS[c] for c in CLIENT_RANKS}) >= 3
+    mt = MultiTenantEngine(model, cfg, params, reg)
+    order = ["c2", "c0", "c1", "c0", "c2", "c1"]
+    sc = ServeConfig(batch_size=2 * shards, max_new_tokens=6, block_size=4,
+                     num_blocks=1 + 8 * shards, prefill_chunk=4,
+                     cache_len=64, paged_backend=backend, num_shards=shards)
+    outs = mt.generate([Request(c, prompt) for c in order], sc)
+    for got, cid in zip(outs, order):
+        np.testing.assert_array_equal(got, oracle[cid])
+
+
+def test_mixed_rank_fixed_batch_bitwise(setup, singles):
+    """The fixed-shape (PR-1) dispatch path routes ragged banks too."""
+    cfg, model, params, ads = setup
+    prompt, oracle = singles
+    reg = AdapterRegistry(cfg, capacity=4, ranks=[2, 4, 8])
+    for cid, ad in ads.items():
+        reg.register(cid, ad)
+    mt = MultiTenantEngine(model, cfg, params, reg)
+    order = ["c1", "c2", "c0", "c2"]
+    sc = ServeConfig(batch_size=1, max_new_tokens=6, cache_len=32)
+    out = np.asarray(mt.generate_fixed(
+        [Request(c, prompt) for c in order], sc))
+    for i, cid in enumerate(order):
+        np.testing.assert_array_equal(out[i], oracle[cid])

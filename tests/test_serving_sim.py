@@ -32,7 +32,7 @@ shrinks to a minimal prompt/budget/pool counterexample instead of a
 """
 import dataclasses
 import os
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 import pytest
@@ -100,6 +100,12 @@ class Workload:
     #                                               choice from admission
     spec_k: int = 0                               # >0: draft-then-verify
     spec_ngram: int = 3
+    client_ranks: Optional[Dict[str, int]] = None  # per-client LoRA rank:
+    #                                               drives a ragged-bucket
+    #                                               AdapterRegistry alongside
+    #                                               the sim (churn + invariant
+    #                                               checks; token parity is
+    #                                               adapter-independent here)
 
     @property
     def max_span(self) -> int:
@@ -131,6 +137,68 @@ def gen_workload(rng: np.random.Generator) -> Workload:
 
 
 # ---------------------------------------------------------------------------
+# Ragged-rank registry riding along with the sim
+# ---------------------------------------------------------------------------
+
+_SIM_RANK_BUCKETS = [2, 4, 8]      # fixed buckets; drawn ranks 1..8 exercise
+#                                    both exact-fit and zero-padded placement
+_SIM_CFG = None
+_SIM_TREES: Dict[int, object] = {}
+
+
+def _sim_adapter_tree(rank: int):
+    """A cached tiny adapter tree at ``rank`` (content is irrelevant — the
+    sim's token function never reads the bank; only layout is checked)."""
+    if rank not in _SIM_TREES:
+        import jax
+        from conftest import tiny_dense
+        from repro.core.lora import init_adapters
+        global _SIM_CFG
+        if _SIM_CFG is None:
+            _SIM_CFG = tiny_dense()
+        _SIM_TREES[rank] = init_adapters(jax.random.PRNGKey(rank), _SIM_CFG,
+                                         rank=rank)
+    return _SIM_TREES[rank]
+
+
+def _sim_adapter_registry(client_ranks: Dict[str, int]):
+    """A deliberately tiny ragged registry (ONE slot per rank bucket) so
+    clients sharing a bucket churn each other under realistic admission
+    orders."""
+    from repro.serving.registry import AdapterRegistry
+    _sim_adapter_tree(2)                           # builds _SIM_CFG
+    reg = AdapterRegistry(_SIM_CFG, capacity=len(_SIM_RANK_BUCKETS),
+                          ranks=_SIM_RANK_BUCKETS)
+    for cid in sorted(client_ranks):
+        reg.register(cid, _sim_adapter_tree(client_ranks[cid]))
+    return reg
+
+
+def _registry_invariants(reg) -> None:
+    """Allocator invariants for the bucketed bank, checked after every
+    admission: slot uniqueness, smallest-covering bucket membership, and
+    per-bucket free/resident partition."""
+    slots = list(reg._lru.values())
+    assert len(set(slots)) == len(slots), f"slot owned twice: {slots}"
+    sr = reg.slot_ranks()
+    for cid, slot in reg._lru.items():
+        b, local = reg.bucket_of_slot(slot)
+        rank = reg._client_rank[cid]
+        assert b == reg._bucket_for(rank), \
+            f"{cid} (rank {rank}) in bucket {b}, not its smallest cover"
+        assert 0 <= local < reg.bucket_sizes[b]
+        assert sr[slot] == rank, f"slot_ranks()[{slot}] != {rank}"
+    for b, size in enumerate(reg.bucket_sizes):
+        resident = {reg.bucket_of_slot(s)[1] for s in slots
+                    if reg.bucket_of_slot(s)[0] == b}
+        free = set(reg._free[b])
+        assert free | resident == set(range(size)), \
+            f"bucket {b}: free {free} + resident {resident} != 0..{size}"
+        assert not (free & resident), \
+            f"bucket {b}: slots both free and resident: {free & resident}"
+
+
+# ---------------------------------------------------------------------------
 # The simulator: the engine loop with a host model
 # ---------------------------------------------------------------------------
 
@@ -157,6 +225,9 @@ def run_sim(w: Workload, token_fn=_next_token) -> Scheduler:
         sched.submit(rid, cid, prompt, budget, scope=cid,
                      priority=w.priority(rid),
                      deadline=w.deadlines[rid] if w.deadlines else None)
+    reg = (_sim_adapter_registry(w.client_ranks)
+           if w.client_ranks is not None else None)
+    sched.sim_registry = reg                      # exposed for sweep stats
 
     ctx = {s: [] for s in range(w.num_slots)}     # per-slot fed-token mirror
     streamed = {rid: [] for rid in range(len(w.requests))}
@@ -169,6 +240,14 @@ def run_sim(w: Workload, token_fn=_next_token) -> Scheduler:
         assert iters <= budget_iters, \
             f"progress bound exceeded ({iters} chunks): scheduler livelock"
         for slot, _cid in sched.admit():
+            if reg is not None:
+                # the serving engine acquires the client's bank slot on
+                # every admission; churned-out clients re-register first
+                if _cid not in reg:
+                    reg.register(_cid, _sim_adapter_tree(
+                        w.client_ranks[_cid]))
+                reg.acquire(_cid)
+                _registry_invariants(reg)
             st = sched._slots[slot]
             # a prefix hit seeds the context with the matched prompt span;
             # the cached blocks must name EXACTLY those tokens
@@ -249,6 +328,8 @@ def run_sim(w: Workload, token_fn=_next_token) -> Scheduler:
     assert kv.free_blocks + kv.cached_blocks == kv.num_blocks - 1
     if not w.prefix_cache:
         assert kv.cached_blocks == 0
+    if reg is not None:
+        _registry_invariants(reg)
     return sched
 
 
@@ -270,6 +351,30 @@ def test_simulation_500_randomized_workloads():
     # the sample must actually exercise the interesting regimes
     assert starved > 50, f"only {starved} starvation workloads sampled"
     assert preemptions > 20, f"only {preemptions} preemptions exercised"
+
+
+def test_ragged_registry_churn_150_seeded_workloads():
+    """150 seeded workloads with per-client LoRA ranks drawn 1..8: the
+    one-slot-per-bucket registry churns under realistic admission orders
+    while oracle parity and allocator invariants hold unchanged — and the
+    per-client weight version stays monotone through the churn."""
+    churn = 0
+    padded = 0
+    for seed in range(150):
+        rng = np.random.default_rng(3000 + seed)
+        w = dataclasses.replace(
+            gen_workload(rng),
+            client_ranks={f"c{j}": int(rng.integers(1, 9))
+                          for j in range(3)})
+        sched = run_sim(w)
+        reg = sched.sim_registry
+        churn += reg.evictions
+        padded += sum(1 for r in w.client_ranks.values()
+                      if r not in _SIM_RANK_BUCKETS)
+        for cid in w.client_ranks:
+            assert reg.version(cid) >= 1           # monotone, never reset
+    assert churn > 50, f"only {churn} registry evictions exercised"
+    assert padded > 50, f"only {padded} zero-padded (off-bucket) ranks drawn"
 
 
 def test_preemption_conserves_output_tokens():
@@ -925,6 +1030,8 @@ if HAVE_HYPOTHESIS:
         eos = draw(st.one_of(st.none(), st.integers(0, VOCAB - 1)))
         prios = draw(st.one_of(st.none(), st.lists(
             st.sampled_from(CLASSES), min_size=n_req, max_size=n_req)))
+        ranks = draw(st.one_of(st.none(), st.fixed_dictionaries(
+            {f"c{j}": st.integers(1, 8) for j in range(3)})))
         return Workload(requests, num_slots, block_size, num_blocks,
                         prefill_chunk=draw(st.integers(1, 6)),
                         decode_cap=draw(st.integers(1, 6)), eos_id=eos,
@@ -932,7 +1039,8 @@ if HAVE_HYPOTHESIS:
                         priorities=prios,
                         policy=draw(st.sampled_from(["sla", "fcfs"])),
                         aging=draw(st.sampled_from([0, 2, 16])),
-                        spec_k=draw(st.sampled_from([0, 0, 2, 4])))
+                        spec_k=draw(st.sampled_from([0, 0, 2, 4])),
+                        client_ranks=ranks)
 
     @given(workloads())
     def test_simulation_hypothesis(w):
